@@ -1,0 +1,54 @@
+"""Shared benchmark utilities: workload builders, timing, claim checks.
+
+Every module reproduces one paper figure/table. Workloads execute
+functionally (numpy/jnp); throughput/energy come from the analytic hardware
+model (core/hwmodel.py), scaled down from the paper's gem5 sizes (noted per
+figure). Each module returns rows of
+    (name, us_per_call, derived)
+for benchmarks.run's CSV, and prints a paper-claim vs ours table.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import engine, schema
+
+
+def workload(rng, n_rows=20_000, n_cols=8, n_txn=40_000, n_queries=32,
+             write_ratio=0.5, join_fraction=0.5, same_column=False):
+    sch = schema.make_schema("t", n_cols, 32)
+    table = schema.gen_table(rng, sch, n_rows)
+    stream = schema.gen_update_stream(rng, sch, n_rows, n_txn,
+                                      write_ratio=write_ratio)
+    queries = engine.gen_queries(rng, n_queries, n_cols,
+                                 join_fraction=join_fraction,
+                                 same_column=same_column)
+    return table, stream, queries
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+class ClaimTable:
+    def __init__(self, figure: str):
+        self.figure = figure
+        self.rows = []
+
+    def add(self, claim: str, paper: float, ours: float, unit: str = "x"):
+        self.rows.append((claim, paper, ours, unit))
+
+    def show(self):
+        print(f"  -- paper-claim check ({self.figure}) --")
+        for claim, paper, ours, unit in self.rows:
+            print(f"    {claim:58s} paper={paper:8.3f}{unit} "
+                  f"ours={ours:8.3f}{unit}")
+
+    def csv_rows(self):
+        return [(f"{self.figure}:{c}", 0.0, f"paper={p:.3f};ours={o:.3f}")
+                for (c, p, o, u) in self.rows]

@@ -1,0 +1,65 @@
+"""Fig. 1 — single-instance consistency overheads.
+
+Left:  MVCC analytical throughput vs zero-cost MVCC (paper: -42.4% as
+       transactional query counts grow).
+Right: snapshotting transactional throughput vs zero-cost snapshots
+       (paper: -43.4% at 128 analytical queries, -74.6% at 512).
+
+Workload scaled down ~8x from the paper's gem5 configuration; ratios, not
+absolutes, are the claim (DESIGN.md §2).
+"""
+
+import numpy as np
+
+from benchmarks.common import ClaimTable, timed, workload
+from repro.core import engine, htap
+from repro.core.hwmodel import CostLog, HardwareModel, HMC_PARAMS
+from repro.core.mvcc import MVCCStore
+from repro.core.snapshot import SnapshotStore
+
+
+def _mvcc_drop(rng, n_txn):
+    table, stream, queries = workload(rng, n_rows=34_000, n_cols=4,
+                                      n_txn=n_txn, n_queries=16,
+                                      join_fraction=0.0)
+    res = htap.run_si_mvcc(table, stream, queries, n_rounds=4)
+    # zero-cost MVCC: identical run, chain traversal costs nothing
+    zero = htap.run_si_mvcc(table, stream, queries, n_rounds=4,
+                            zero_cost_mvcc=True)
+    return res.ana_throughput / zero.ana_throughput
+
+
+def _snapshot_drop(rng, n_queries):
+    table, stream, _ = workload(rng, n_rows=3_000, n_cols=8,
+                                n_txn=250_000, n_queries=n_queries)
+    queries = engine.gen_queries(np.random.default_rng(1), n_queries, 8,
+                                 join_fraction=0.0)
+    res = htap.run_si_ss(table, stream, queries, n_rounds=n_queries)
+    zero = htap.run_si_ss(table, stream, queries, n_rounds=n_queries,
+                          zero_cost_snapshot=True)
+    return res.txn_throughput / zero.txn_throughput
+
+
+def run():
+    rng = np.random.default_rng(0)
+    rows = []
+    claims = ClaimTable("fig1")
+
+    (mv_lo, us1) = timed(_mvcc_drop, rng, 10_000)
+    (mv_hi, us2) = timed(_mvcc_drop, rng, 80_000)
+    claims.add("MVCC analytical vs zero-cost (high txn count)", 1 - 0.424,
+               mv_hi)
+    rows.append(("fig1_mvcc_low_txn", us1, f"rel={mv_lo:.3f}"))
+    rows.append(("fig1_mvcc_high_txn", us2, f"rel={mv_hi:.3f}"))
+
+    (ss128, us3) = timed(_snapshot_drop, rng, 128)
+    (ss512, us4) = timed(_snapshot_drop, rng, 512)
+    claims.add("snapshot txn vs zero-cost @128 AQ", 1 - 0.434, ss128)
+    claims.add("snapshot txn vs zero-cost @512 AQ", 1 - 0.746, ss512)
+    rows.append(("fig1_snapshot_128q", us3, f"rel={ss128:.3f}"))
+    rows.append(("fig1_snapshot_512q", us4, f"rel={ss512:.3f}"))
+
+    assert mv_hi < mv_lo, "MVCC overhead must grow with txn count"
+    assert ss512 < ss128, "snapshot overhead must grow with query count"
+    claims.show()
+    return rows + claims.csv_rows()

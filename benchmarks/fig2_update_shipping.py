@@ -1,0 +1,51 @@
+"""Fig. 2 — multiple-instance update propagation cost on the txn island.
+
+Paper: update shipping alone costs -14.8% txn throughput; shipping +
+application (Update-Propagation) costs -49.6% at 50% write intensity,
+-59.0% at 80%.
+"""
+
+import numpy as np
+
+from benchmarks.common import ClaimTable, timed, workload
+from repro.core import htap
+
+
+def _propagation_drop(rng, write_ratio, application: bool):
+    table, stream, queries = workload(rng, n_rows=20_000, n_cols=8,
+                                      n_txn=120_000, n_queries=16,
+                                      write_ratio=write_ratio)
+    if application:
+        # plain Multiple-Instance: naive (de)compressing application (§3.2)
+        res = htap.run_multi_instance(table, stream, queries, name="MI",
+                                      optimized_application=False, n_rounds=8)
+    else:
+        # shipping only: zero-cost application
+        res = htap.run_multi_instance(table, stream, queries,
+                                      name="MI-ship-only",
+                                      optimized_application=False,
+                                      n_rounds=8, shipping_only=True)
+    # the paper's baseline: identical run, zero-cost shipping AND application
+    ideal = htap.run_multi_instance(table, stream, queries, name="Ideal",
+                                    optimized_application=False, n_rounds=8,
+                                    zero_cost_propagation=True)
+    return res.txn_throughput / ideal.txn_throughput
+
+
+def run():
+    rng = np.random.default_rng(0)
+    claims = ClaimTable("fig2")
+    rows = []
+    (ship50, us1) = timed(_propagation_drop, rng, 0.5, False)
+    (prop50, us2) = timed(_propagation_drop, rng, 0.5, True)
+    (prop80, us3) = timed(_propagation_drop, rng, 0.8, True)
+    claims.add("update shipping only, 50% writes", 1 - 0.148, ship50)
+    claims.add("update propagation, 50% writes", 1 - 0.496, prop50)
+    claims.add("update propagation, 80% writes", 1 - 0.590, prop80)
+    rows += [("fig2_ship_only_50", us1, f"rel={ship50:.3f}"),
+             ("fig2_propagation_50", us2, f"rel={prop50:.3f}"),
+             ("fig2_propagation_80", us3, f"rel={prop80:.3f}")]
+    assert prop50 < ship50, "application must cost more than shipping alone"
+    assert prop80 < prop50, "higher write intensity must cost more"
+    claims.show()
+    return rows + claims.csv_rows()

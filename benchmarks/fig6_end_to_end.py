@@ -1,0 +1,62 @@
+"""Fig. 6 — end-to-end transactional & analytical throughput, six systems.
+
+Paper means: Polynesia txn 2.20X/1.15X/1.94X over SI-SS/SI-MVCC/MI+SW
+(1.70X mean) and analytical 3.78X/5.04X/2.76X (3.74X mean); Polynesia
+within 8.4% of Ideal-Txn and +63.8% over the analytics-alone baseline.
+"""
+
+import numpy as np
+
+from benchmarks.common import ClaimTable, timed, workload
+from repro.core import htap
+
+
+def run():
+    rng = np.random.default_rng(0)
+    table, stream, queries = workload(rng, n_rows=20_000, n_cols=8,
+                                      n_txn=150_000, n_queries=48)
+    rows = []
+    results = {}
+    for name, fn in htap.ALL_SYSTEMS.items():
+        (res, us) = timed(fn, table, stream, queries)
+        results[name] = res
+        rows.append((f"fig6_{name}", us,
+                     f"txn={res.txn_throughput:.3e};ana={res.ana_throughput:.3e}"))
+    ideal = htap.run_ideal_txn(table, stream)
+    ana_only = htap.run_ana_only(table, queries)
+    rows.append(("fig6_Ideal-Txn", 0.0, f"txn={ideal.txn_throughput:.3e}"))
+    rows.append(("fig6_Ana-Only", 0.0, f"ana={ana_only.ana_throughput:.3e}"))
+
+    p = results["Polynesia"]
+    claims = ClaimTable("fig6")
+    claims.add("Polynesia txn vs SI-SS", 2.20,
+               p.txn_throughput / results["SI-SS"].txn_throughput)
+    claims.add("Polynesia txn vs SI-MVCC", 1.15,
+               p.txn_throughput / results["SI-MVCC"].txn_throughput)
+    claims.add("Polynesia txn vs MI+SW", 1.94,
+               p.txn_throughput / results["MI+SW"].txn_throughput)
+    claims.add("Polynesia ana vs SI-SS", 3.78,
+               p.ana_throughput / results["SI-SS"].ana_throughput)
+    claims.add("Polynesia ana vs SI-MVCC", 5.04,
+               p.ana_throughput / results["SI-MVCC"].ana_throughput)
+    claims.add("Polynesia ana vs MI+SW", 2.76,
+               p.ana_throughput / results["MI+SW"].ana_throughput)
+    claims.add("Polynesia txn vs Ideal-Txn", 1 - 0.084,
+               p.txn_throughput / ideal.txn_throughput)
+    claims.add("Polynesia ana vs Ana-Only baseline", 1.638,
+               p.ana_throughput / ana_only.ana_throughput)
+    txn_mean = np.mean([p.txn_throughput / results[n].txn_throughput
+                        for n in ("SI-SS", "SI-MVCC", "MI+SW")])
+    ana_mean = np.mean([p.ana_throughput / results[n].ana_throughput
+                        for n in ("SI-SS", "SI-MVCC", "MI+SW")])
+    claims.add("MEAN txn improvement", 1.70, txn_mean)
+    claims.add("MEAN analytical improvement", 3.74, ana_mean)
+
+    # the qualitative orderings that define the paper's story
+    assert p.txn_throughput > max(results[n].txn_throughput
+                                  for n in ("SI-SS", "SI-MVCC", "MI+SW"))
+    assert p.ana_throughput > max(results[n].ana_throughput
+                                  for n in ("SI-SS", "SI-MVCC", "MI+SW"))
+    assert results["PIM-Only"].txn_throughput < 0.6 * ideal.txn_throughput
+    claims.show()
+    return rows + claims.csv_rows()

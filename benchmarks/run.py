@@ -1,0 +1,46 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus paper-claim check tables
+on stderr-style stdout lines prefixed with spaces).
+"""
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (fig1_consistency_overhead, fig2_update_shipping,
+                            fig3_breakdown, fig6_end_to_end,
+                            fig7_update_propagation, fig8_consistency,
+                            fig9_placement_sched, fig10_scaling_energy,
+                            lm_step)
+
+    modules = [
+        ("fig1", fig1_consistency_overhead),
+        ("fig2", fig2_update_shipping),
+        ("fig3", fig3_breakdown),
+        ("fig6", fig6_end_to_end),
+        ("fig7", fig7_update_propagation),
+        ("fig8", fig8_consistency),
+        ("fig9", fig9_placement_sched),
+        ("fig10", fig10_scaling_energy),
+        ("lm_step", lm_step),
+    ]
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    all_rows = []
+    print("name,us_per_call,derived")
+    for tag, mod in modules:
+        if only and only != tag:
+            continue
+        t0 = time.perf_counter()
+        rows = mod.run()
+        dt = time.perf_counter() - t0
+        print(f"# {tag} completed in {dt:.1f}s")
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}")
+        all_rows += rows
+    print(f"# total benchmark rows: {len(all_rows)}")
+
+
+if __name__ == "__main__":
+    main()

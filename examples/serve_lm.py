@@ -1,0 +1,59 @@
+"""Serve a small model with batched requests: prefill + decode loop with
+the KV/SSM cache substrate (and the flash-decode kernel path on TPU).
+
+    PYTHONPATH=src python examples/serve_lm.py [--arch falcon-mamba-7b]
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.launch.steps import make_serve_step
+from repro.models import init_lm, init_lm_cache, lm_decode_step
+
+MAX_LEN = 64
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="falcon-mamba-7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=8)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    serve = jax.jit(make_serve_step(cfg))
+
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size,
+                           size=(args.batch, args.prompt_len)).astype(np.int32)
+    cache = init_lm_cache(cfg, args.batch, MAX_LEN, dtype=jnp.float32)
+
+    # prefill token-by-token (a batched-request server would fuse this)
+    tok = None
+    for i in range(args.prompt_len):
+        tok, cache = serve(params, cache, jnp.asarray(prompts[:, i:i + 1]),
+                           jnp.int32(i))
+    out = [np.asarray(tok)]
+    t0 = time.time()
+    for i in range(args.prompt_len, args.prompt_len + args.gen - 1):
+        tok, cache = serve(params, cache, tok, jnp.int32(i))
+        out.append(np.asarray(tok))
+    jax.block_until_ready(tok)
+    dt = time.time() - t0
+    gen = np.concatenate(out, axis=1)
+    print(f"arch={cfg.name}: generated {gen.shape} tokens greedily")
+    print(f"throughput: {args.batch * (args.gen - 1) / dt:.1f} tok/s "
+          f"(CPU, reduced config)")
+    for b in range(args.batch):
+        print(f"  req{b}: prompt={prompts[b].tolist()} -> {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""repro: Polynesia (HTAP hardware/software co-design) reproduced as a TPU-native JAX framework.
+
+Layers:
+  core/         -- the paper's contribution: islands, update propagation, consistency,
+                   analytical engine, placement, scheduling, hardware cost model.
+  kernels/      -- Pallas TPU kernels for the paper's PIM accelerators + LM hot-spots.
+  nn/, models/  -- model substrate and the 10 assigned architectures.
+  data/, optim/, checkpoint/, distributed/, launch/ -- training/serving runtime.
+"""
+
+__version__ = "1.0.0"

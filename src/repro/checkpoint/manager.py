@@ -1,0 +1,150 @@
+"""Checkpointing: atomic, resumable, optionally async — the fault-tolerance
+substrate (checkpoint/restart; elastic restore onto a different mesh).
+
+Layout:  <dir>/step_<N>/
+            manifest.json   (step, tree paths, shapes, dtypes)
+            arrays.npz      (flattened path -> numpy array)
+         <dir>/LATEST       (committed step marker — written last, atomic)
+
+Restore never trusts an uncommitted step (crash-during-save safe). Arrays
+are stored unsharded (host numpy) and re-placed with `jax.device_put`
+against the *target* mesh's shardings at restore — which is exactly what an
+elastic restart onto a degraded mesh needs (distributed/elastic.py).
+
+The async writer snapshots arrays to host first (the paper's copy-unit
+abstraction: the training step never blocks on the write-back), then
+serializes on a thread.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        arr = np.asarray(jax.device_get(leaf))
+        if arr.dtype.name == "bfloat16":   # npz has no bf16: store bits
+            arr = arr.view(np.uint16)
+            key = key + "::bf16"
+        out[key] = arr
+    return out
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, wait: bool = True):
+    """Snapshot to host, then (optionally async) serialize + commit."""
+    flat = _flatten(tree)  # host snapshot happens NOW (consistent view)
+    step_dir = os.path.join(ckpt_dir, f"step_{step}")
+
+    def _write():
+        tmp = step_dir + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+        manifest = {
+            "step": step,
+            "arrays": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                       for k, v in flat.items()},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(step_dir):
+            shutil.rmtree(step_dir)
+        os.rename(tmp, step_dir)                      # atomic commit point 1
+        with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
+            f.write(str(step))
+        os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
+                   os.path.join(ckpt_dir, "LATEST"))  # atomic commit point 2
+
+    os.makedirs(ckpt_dir, exist_ok=True)
+    if wait:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    marker = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(marker):
+        return None
+    with open(marker) as f:
+        step = int(f.read().strip())
+    if os.path.exists(os.path.join(ckpt_dir, f"step_{step}", "arrays.npz")):
+        return step
+    return None
+
+
+def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
+    """Restore into the structure of `like`; place onto `shardings` if given
+    (elastic restart path: the new mesh's shardings)."""
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}", "arrays.npz"))
+    flat_like = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    import ml_dtypes
+    for path, leaf in flat_like[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        if key + "::bf16" in data:
+            arr = data[key + "::bf16"].view(ml_dtypes.bfloat16)
+        else:
+            arr = data[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    tree = jax.tree_util.tree_unflatten(flat_like[1], leaves)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    return tree
+
+
+class CheckpointManager:
+    """Keeps the last `keep` checkpoints; supports async save + resume."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, save_every: int = 50,
+                 async_save: bool = True):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.save_every = save_every
+        self.async_save = async_save
+        self._pending: threading.Thread | None = None
+
+    def maybe_save(self, step: int, tree) -> bool:
+        if step % self.save_every:
+            return False
+        self.wait()
+        self._pending = save_checkpoint(self.dir, step, tree,
+                                        wait=not self.async_save)
+        self._gc()
+        return True
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.dir)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)
+
+    def resume(self, like, shardings=None):
+        self.wait()
+        step = latest_step(self.dir)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.dir, step, like, shardings)

@@ -1,0 +1,17 @@
+"""Polynesia core: transactional/analytical islands, update propagation, consistency.
+
+The public surface mirrors the paper's sections:
+  §4 islands            -> htap.py (system compositions)
+  §5 update propagation -> shipping.py + application.py
+  §6 consistency        -> consistency.py (+ mvcc.py / snapshot.py baselines)
+  §7 analytical engine  -> engine.py + placement.py + scheduler.py
+  §8 methodology        -> hwmodel.py (HMC + TPU cost/energy model)
+"""
+
+from repro.core.schema import TableSchema, gen_table, gen_update_stream
+from repro.core.dsm import EncodedColumn, encode_column, decode_column, DSMReplica
+from repro.core.nsm import RowStore, UpdateLog, UPDATE_DTYPE
+from repro.core.shipping import merge_logs, ship_updates, FINAL_LOG_CAPACITY
+from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.consistency import ConsistencyManager
+from repro.core.hwmodel import HardwareModel, HMC_PARAMS, TPU_V5E_PARAMS, CostLog

@@ -1,0 +1,205 @@
+"""Update application (§5.2): NSM->DSM conversion under dictionary encoding.
+
+Two algorithms, both functionally exact:
+
+* `apply_updates_naive` — the paper's *initial* algorithm: decompress the
+  whole column, apply updates, sort the updated column to rebuild the
+  dictionary (O((n+m)log(n+m))), recompress with per-entry binary search.
+  Kept as the costed baseline and as the oracle for property tests.
+
+* `apply_updates` — the paper's *optimized* two-stage algorithm:
+    1. bitonic-sort only the <=1024 pending update values into an *update
+       dictionary* (sort unit; Pallas analog kernels/bitonic_sort),
+    2. linear-merge old + update dictionaries (merge unit) and build a hash
+       index old_code -> new_code,
+    3. re-encode the column through the index (sequential scan, no random
+       dictionary lookups) and scatter the update values' new codes at
+       their rows (hash unit prices the update-value encodes).
+  Random accesses drop from O((n+m)log(n+m)) to O(n+m), which is the claim
+  we verify in benchmarks/fig3 and tests/test_update_application.py.
+
+Phase 2 of the consistency contract (§6): the function returns a *new*
+EncodedColumn with `version+1`; the caller atomically swaps the replica
+pointer (functional update), so analytics never observe a half-applied
+column.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.dsm import EncodedColumn
+from repro.core.hwmodel import CostLog
+from repro.core.schema import VALUE_BYTES
+
+# software (CPU) costs for the same steps, for the MI baseline
+CPU_CYCLES_PER_CMP = 8.0
+CPU_CYCLES_PER_LOOKUP = 30.0   # random dictionary access (cache-missing)
+CPU_CYCLES_PER_SCAN_ITEM = 3.0
+# Soft partitioning (§5.1, [49,51,62]): columns are partitioned so the
+# dictionary/hash-table working set stays bounded; an update batch touches
+# only the partitions containing its rows, so (de)compression cost scales
+# with the partition, not the whole column.
+PARTITION_ROWS = 4096
+
+
+def _split_ops(updates: np.ndarray):
+    mods = updates[updates["op"] == 1]
+    ins = updates[updates["op"] == 2]
+    dels = updates[updates["op"] == 3]
+    return mods, ins, dels
+
+
+def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
+                   mods: np.ndarray, ins: np.ndarray, dels: np.ndarray):
+    """Scatter modify/insert/delete row ops in commit order (vectorized)."""
+    if len(ins):
+        # Inserts append rows; their per-column values arrive as entries with
+        # row >= n. Extend the arrays to cover the max inserted row id.
+        top = int(ins["row"].max()) + 1
+        if top > len(codes):
+            pad = top - len(codes)
+            codes = np.concatenate([codes, np.zeros(pad, dtype=codes.dtype)])
+            valid = np.concatenate([valid, np.zeros(pad, dtype=bool)])
+    write_ops = np.concatenate([mods, ins]) if len(ins) else mods
+    if len(write_ops):
+        order = np.argsort(write_ops["commit_id"], kind="stable")
+        write_ops = write_ops[order]
+        new_codes_for_writes = np.searchsorted(new_dict, write_ops["value"])
+        codes[write_ops["row"]] = new_codes_for_writes.astype(codes.dtype)
+        valid[write_ops["row"]] = True
+    if len(dels):
+        valid[dels["row"]] = False
+    return codes, valid
+
+
+def apply_updates(
+    col: EncodedColumn,
+    updates: np.ndarray,
+    cost: CostLog | None = None,
+    on_pim: bool = True,
+) -> EncodedColumn:
+    """Optimized two-stage update application (the paper's contribution)."""
+    old_codes = np.asarray(col.codes)
+    old_dict = np.asarray(col.dictionary)
+    valid = np.array(col.valid, copy=True)
+    n, k_old = old_codes.shape[0], old_dict.shape[0]
+    mods, ins, dels = _split_ops(updates)
+    write_vals = np.concatenate([mods["value"], ins["value"]])
+    m = len(updates)
+
+    # Stage 1: sort+dedupe the pending update values -> update dictionary.
+    # (hardware: 1024-value bitonic sorter; kernels/bitonic_sort)
+    update_dict = np.unique(write_vals) if len(write_vals) else np.empty(0, np.int32)
+
+    # Stage 2: linear merge of two sorted dictionaries + old->new hash index.
+    # (hardware: merge unit + hash unit)
+    new_dict = np.union1d(old_dict, update_dict).astype(old_dict.dtype)
+    old_to_new = np.searchsorted(new_dict, old_dict)  # the "hash index"
+
+    # Stage 3: sequential re-encode through the index + scatter update codes.
+    new_codes = old_to_new[old_codes].astype(np.int32)
+    new_codes, valid = _apply_row_ops(new_codes, valid, new_dict, mods, ins, dels)
+
+    if cost is not None and m:
+        k_new = len(new_dict)
+        # soft partitioning: updates touch at most m partitions
+        n_eff = min(n, max(1, min(m, n // PARTITION_ROWS + 1)) * PARTITION_ROWS)
+        enc_eff = n_eff * col.bit_width / 8.0
+        if on_pim:
+            cost.add(phase="apply", island="ana", resource="sorter", items=m)
+            cost.add(phase="apply", island="ana", resource="merge",
+                     items=k_old + len(update_dict),
+                     bytes_local=(k_old + k_new) * VALUE_BYTES)
+            # index-based re-encode: one sequential pass (index fits in VMEM/SRAM)
+            cost.add(phase="apply", island="ana", resource="copy",
+                     bytes_local=2 * enc_eff)
+            cost.add(phase="apply", island="ana", resource="hash",
+                     items=m, bytes_local=m * 16)
+        else:
+            cost.add(
+                phase="apply", island="txn", resource="cpu",
+                cycles=m * np.log2(max(m, 2)) * CPU_CYCLES_PER_CMP        # sort updates
+                + (k_old + k_new) * CPU_CYCLES_PER_SCAN_ITEM              # dict merge
+                + n_eff * 8.0                                             # unpack+reindex+pack
+                + m * CPU_CYCLES_PER_LOOKUP,                              # encode updates
+                bytes_offchip=2 * enc_eff + (k_old + k_new) * VALUE_BYTES + m * 16,
+            )
+
+    import jax.numpy as jnp
+    return EncodedColumn(
+        codes=jnp.asarray(new_codes),
+        dictionary=jnp.asarray(new_dict),
+        valid=jnp.asarray(valid),
+        version=col.version + 1,
+    )
+
+
+def apply_updates_naive(
+    col: EncodedColumn,
+    updates: np.ndarray,
+    cost: CostLog | None = None,
+) -> EncodedColumn:
+    """The paper's initial algorithm (§5.2), costed as CPU software.
+
+    decompress -> apply -> full sort to rebuild dictionary -> recompress.
+    Used as the functional oracle and as the MI baseline's cost generator
+    (62.6% of update-application cycles go to (de)compression, Fig. 3).
+    """
+    old_codes = np.asarray(col.codes)
+    old_dict = np.asarray(col.dictionary)
+    valid = np.array(col.valid, copy=True)
+    n = old_codes.shape[0]
+    mods, ins, dels = _split_ops(updates)
+    m = len(updates)
+
+    # Step 1: decompress (n random dictionary lookups).
+    values = old_dict[old_codes]
+    # Step 2: apply updates one by one (vectorized, last-writer-wins).
+    if len(ins):
+        top = int(ins["row"].max()) + 1
+        if top > len(values):
+            pad = top - len(values)
+            values = np.concatenate([values, np.zeros(pad, dtype=values.dtype)])
+            valid = np.concatenate([valid, np.zeros(pad, dtype=bool)])
+    write_ops = np.concatenate([mods, ins]) if len(ins) else mods
+    if len(write_ops):
+        order = np.argsort(write_ops["commit_id"], kind="stable")
+        write_ops = write_ops[order]
+        values[write_ops["row"]] = write_ops["value"]
+        valid[write_ops["row"]] = True
+    if len(dels):
+        valid[dels["row"]] = False
+    # Step 3: rebuild dictionary by sorting the updated column.
+    new_dict = np.unique(values)
+    # Step 4: recompress via per-entry binary search (logarithmic).
+    new_codes = np.searchsorted(new_dict, values).astype(np.int32)
+
+    if cost is not None and m:
+        k_new = len(new_dict)
+        n_tot = len(values)
+        n_eff = min(n_tot,
+                    max(1, min(m, n_tot // PARTITION_ROWS + 1)) * PARTITION_ROWS)
+        # per-partition (de)compression: decompress + full sort + recompress.
+        # SIMD-friendly in-cache sort: ~1 cycle/item/pass, log2(P) passes.
+        logp = np.log2(max(PARTITION_ROWS, 2))
+        cost.add(
+            phase="apply", island="txn", resource="cpu",
+            cycles=n_eff * 3.0                                       # decompress
+            + m * CPU_CYCLES_PER_SCAN_ITEM                           # apply
+            + n_eff * logp * 1.0                                     # sort passes
+            + n_eff * 3.0,                                           # recompress
+            bytes_offchip=(
+                n_eff * VALUE_BYTES * 2           # decode read+write
+                + n_eff * VALUE_BYTES * 2.0       # sort passes (out-of-cache)
+                + n_eff * VALUE_BYTES * 1.5       # binary-search traffic
+            ),
+        )
+
+    import jax.numpy as jnp
+    return EncodedColumn(
+        codes=jnp.asarray(new_codes),
+        dictionary=jnp.asarray(new_dict.astype(old_dict.dtype)),
+        valid=jnp.asarray(valid),
+        version=col.version + 1,
+    )

@@ -1,0 +1,197 @@
+"""Analytical execution engine (§7): operators, query plans, execution.
+
+Operators: scan/filter (predicate over an encoded column — the
+order-preserving dictionary turns value ranges into code ranges, no decode),
+aggregate (code-histogram x dictionary dot product — the PIM-friendly form
+that reads each encoded byte exactly once), and hash join.
+
+Queries follow the paper's microbenchmark (§8: select + join over random
+tables/columns) plus a TPC-H Q6-style filtered aggregate used in §9.1's
+"real workload" study. Execution is Volcano-style over operator trees,
+decomposed into segment tasks for the scheduler (§7.2).
+
+Cost accounting: `on_pim=True` prices sequential scans on vault-local
+bandwidth with PIM-core cycles (and group-level parallelism from the
+placement); `on_pim=False` prices them on the CPU across the shared
+channel. Functional results are identical — that's asserted in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.dsm import DSMReplica, EncodedColumn
+from repro.core.hwmodel import CostLog
+from repro.core.placement import Placement
+from repro.core.schema import VALUE_BYTES
+
+PIM_CYCLES_PER_ROW = 1.25  # fused compare+accumulate, 4 cores/vault
+CPU_CYCLES_PER_ROW = 1.0   # OoO + SIMD
+# gem5-scale working sets are partially cache-resident on the CPU island:
+# only this fraction of scan bytes reaches the off-chip channel (§8).
+ANA_MISS_FRACTION = 0.3
+
+
+@dataclasses.dataclass(frozen=True)
+class Query:
+    """SELECT agg(agg_col) FROM t WHERE lo <= filter_col <= hi [JOIN ...]."""
+
+    query_id: int
+    filter_col: int
+    lo: int
+    hi: int
+    agg_col: int
+    join_col: int | None = None   # optional self-join column (paper: select+join)
+
+    @property
+    def columns(self) -> list[int]:
+        cols = [self.filter_col, self.agg_col]
+        if self.join_col is not None:
+            cols.append(self.join_col)
+        return cols
+
+
+def gen_queries(rng: np.random.Generator, n_queries: int, n_cols: int,
+                value_domain: int = 1 << 24, join_fraction: float = 0.5,
+                selectivity: float = 0.3, same_column: bool = False) -> list[Query]:
+    """The paper's analytical microbenchmark (§8)."""
+    out = []
+    for q in range(n_queries):
+        if same_column:               # §9.4: all queries hit the same column
+            f, a = 0, 1 % n_cols
+        else:
+            f = int(rng.integers(0, n_cols))
+            a = int(rng.integers(0, n_cols))
+        lo = int(rng.integers(0, int(value_domain * (1 - selectivity))))
+        hi = lo + int(value_domain * selectivity)
+        j = None
+        if rng.random() < join_fraction:
+            j = int(rng.integers(0, n_cols))
+        out.append(Query(q, f, lo, hi, a, j))
+    return out
+
+
+# --------------------------------------------------------------------------
+# DSM operators (Polynesia / MI analytical replica)
+# --------------------------------------------------------------------------
+
+def filter_codes(col: EncodedColumn, lo: int, hi: int) -> np.ndarray:
+    """Predicate pushdown through the order-preserving dictionary."""
+    d = np.asarray(col.dictionary)
+    code_lo = np.searchsorted(d, lo, side="left")
+    code_hi = np.searchsorted(d, hi, side="right")
+    codes = np.asarray(col.codes)
+    return (codes >= code_lo) & (codes < code_hi) & np.asarray(col.valid)
+
+
+def aggregate_sum(col: EncodedColumn, mask: np.ndarray) -> int:
+    """Histogram-of-codes aggregate: one sequential pass, no random access."""
+    codes = np.asarray(col.codes)
+    k = col.dict_size
+    counts = np.bincount(codes[mask], minlength=k)
+    return int(counts @ np.asarray(col.dictionary, dtype=np.int64))
+
+
+def hash_join_count(left: EncodedColumn, right: EncodedColumn,
+                    left_mask: np.ndarray | None = None) -> int:
+    """|left JOIN right on value| — dictionary-level hash join.
+
+    Build on the smaller dictionary, probe the larger; match counts multiply
+    (values are pre-grouped by the encoding — the DSM+dict fast path).
+    """
+    lv = np.asarray(left.dictionary)
+    rv = np.asarray(right.dictionary)
+    lcodes = np.asarray(left.codes)
+    if left_mask is not None:
+        lcodes = lcodes[left_mask & np.asarray(left.valid)]
+    else:
+        lcodes = lcodes[np.asarray(left.valid)]
+    rcodes = np.asarray(right.codes)[np.asarray(right.valid)]
+    lcount = np.bincount(lcodes, minlength=len(lv)).astype(np.int64)
+    rcount = np.bincount(rcodes, minlength=len(rv)).astype(np.int64)
+    common, li, ri = np.intersect1d(lv, rv, return_indices=True)
+    return int((lcount[li] * rcount[ri]).sum())
+
+
+def run_query_dsm(
+    view: dict[int, EncodedColumn],
+    q: Query,
+    cost: CostLog | None = None,
+    placement: Placement | None = None,
+    on_pim: bool = True,
+) -> int:
+    """Execute one query against (a snapshot view of) the DSM replica."""
+    fcol, acol = view[q.filter_col], view[q.agg_col]
+    mask = filter_codes(fcol, q.lo, q.hi)
+    result = aggregate_sum(acol, mask)
+    scanned_bytes = fcol.encoded_bytes + acol.encoded_bytes
+    rows = fcol.n_rows * 2
+    if q.join_col is not None:
+        jcol = view[q.join_col]
+        result += hash_join_count(jcol, jcol, left_mask=mask)
+        scanned_bytes += 2 * jcol.encoded_bytes
+        rows += 2 * jcol.n_rows
+    if cost is not None:
+        n_sel = int(mask.sum())
+        if on_pim:
+            # fused decode->filter->aggregate (kernels/dict_ops): one
+            # sequential pass over the encoded columns, histogram aggregate
+            # — no per-row dictionary decode.
+            cost.add(phase="ana", island="ana", resource="pim",
+                     cycles=rows * PIM_CYCLES_PER_ROW, bytes_local=scanned_bytes)
+        else:
+            # CPU software decodes selected aggregate values through the
+            # dictionary (small, cache-resident: costs cycles, not traffic).
+            cost.add(phase="ana", island="ana", resource="cpu",
+                     cycles=rows * CPU_CYCLES_PER_ROW + n_sel * 2.0,
+                     bytes_offchip=scanned_bytes * ANA_MISS_FRACTION)
+    return result
+
+
+# --------------------------------------------------------------------------
+# NSM operators (single-instance baselines: analytics over the row store)
+# --------------------------------------------------------------------------
+
+# NSM scan traffic per touched column: the strided access pulls whole
+# cachelines (~2x the value), but OoO prefetching keeps it streaming.
+NSM_BYTES_PER_TOUCHED_COL = 2.0 * VALUE_BYTES
+
+
+def run_query_nsm(
+    table: np.ndarray,
+    q: Query,
+    cost: CostLog | None = None,
+) -> int:
+    """Execute one query against an NSM table (strided row access, §3.1-(2))."""
+    fvals = table[:, q.filter_col]
+    mask = (fvals >= q.lo) & (fvals <= q.hi)
+    result = int(table[mask, q.agg_col].astype(np.int64).sum())
+    n_rows, n_cols = table.shape
+    scanned = n_rows * 2 * NSM_BYTES_PER_TOUCHED_COL  # filter + agg columns
+    rows = n_rows
+    if q.join_col is not None:
+        jv = table[:, q.join_col]
+        uv, counts = np.unique(jv, return_counts=True)
+        lv, lcounts = np.unique(jv[mask], return_counts=True)
+        common, li, ri = np.intersect1d(lv, uv, return_indices=True)
+        result += int((lcounts[li].astype(np.int64) * counts[ri]).sum())
+        scanned += 2 * n_rows * NSM_BYTES_PER_TOUCHED_COL + n_rows * 6.0
+        rows += 2 * n_rows
+    if cost is not None:
+        cost.add(phase="ana", island="ana", resource="cpu",
+                 cycles=rows * CPU_CYCLES_PER_ROW * 1.5,
+                 bytes_offchip=scanned * ANA_MISS_FRACTION)
+    return result
+
+
+def query_task_rows(queries: list[Query], n_rows: int) -> list[tuple[int, int, float]]:
+    """(query_id, col_id, rows) scan list for the scheduler (§7.2)."""
+    out = []
+    for q in queries:
+        out.append((q.query_id, q.filter_col, n_rows))
+        out.append((q.query_id, q.agg_col, n_rows))
+        if q.join_col is not None:
+            out.append((q.query_id, q.join_col, n_rows))
+    return out

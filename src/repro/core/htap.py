@@ -1,0 +1,287 @@
+"""End-to-end HTAP system compositions (§4, §9.1).
+
+Six systems, matching Fig. 6:
+  SI-SS      single instance (NSM), software snapshotting
+  SI-MVCC    single instance (NSM), MVCC version chains
+  MI+SW      multiple instance, Polynesia's software optimizations, CPU only
+  MI+SW+HB   MI+SW with a hypothetical 8x off-chip bandwidth (256 GB/s)
+  PIM-Only   MI+SW run entirely on general-purpose PIM cores
+  Polynesia  islands + PIM accelerators + placement + scheduler (full system)
+
+plus the two normalization baselines:
+  Ideal-Txn  transactions alone (no analytics, zero-cost propagation)
+  Ana-Only   analytics alone on the multicore CPU
+
+Each run executes the workload *functionally* (every system computes real
+query answers — asserted equal across systems in tests/) while emitting
+cost events priced by the analytic hardware model (hwmodel.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import engine
+from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import DSMReplica
+from repro.core.hwmodel import (CostLog, HardwareModel, HardwareParams,
+                                HB_PARAMS, HMC_PARAMS)
+from repro.core.mvcc import MVCCStore
+from repro.core.nsm import RowStore
+from repro.core.placement import hybrid
+from repro.core.schema import UpdateStream
+from repro.core.shipping import ship_updates, FINAL_LOG_CAPACITY
+from repro.core.snapshot import SnapshotStore
+
+# PIM-Only calibration: OLTP on in-order PIM cores pays extra cycles (no OoO
+# ILP for pointer-heavy txn code) even though more threads are available.
+PIM_TXN_CYCLE_FACTOR = 1.4
+
+
+@dataclasses.dataclass
+class RunResult:
+    name: str
+    n_txn: int
+    n_ana: int
+    txn_seconds: float
+    ana_seconds: float
+    energy_joules: float
+    results: list[int]            # analytical query answers (for equality tests)
+    stats: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def txn_throughput(self) -> float:
+        return self.n_txn / self.txn_seconds if self.txn_seconds > 0 else float("inf")
+
+    @property
+    def ana_throughput(self) -> float:
+        return self.n_ana / self.ana_seconds if self.ana_seconds > 0 else float("inf")
+
+
+def _split_stream(stream: UpdateStream, n_rounds: int) -> list[UpdateStream]:
+    n = len(stream)
+    bounds = np.linspace(0, n, n_rounds + 1).astype(int)
+    out = []
+    for r in range(n_rounds):
+        s = slice(bounds[r], bounds[r + 1])
+        out.append(UpdateStream(stream.thread_id[s], stream.commit_id[s],
+                                stream.op[s], stream.row[s], stream.col[s],
+                                stream.value[s]))
+    return out
+
+
+def _split_queries(queries, n_rounds):
+    bounds = np.linspace(0, len(queries), n_rounds + 1).astype(int)
+    return [queries[bounds[r]:bounds[r + 1]] for r in range(n_rounds)]
+
+
+# ---------------------------------------------------------------------------
+# Normalization baselines
+# ---------------------------------------------------------------------------
+
+def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS) -> RunResult:
+    """Transactions alone: no analytics, zero-cost propagation/consistency."""
+    cost = CostLog()
+    store = RowStore(table)
+    store.execute(stream, cost)
+    model = HardwareModel(hw)
+    t = model.time(cost, concurrent_islands=False)
+    return RunResult("Ideal-Txn", len(stream), 0, t["txn"], 0.0,
+                     model.energy(cost), [])
+
+
+def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS) -> RunResult:
+    """Analytics alone on the multicore CPU over a DSM replica."""
+    cost = CostLog()
+    replica = DSMReplica.from_table(table)
+    results = [engine.run_query_dsm(replica.columns, q, cost, on_pim=False)
+               for q in queries]
+    model = HardwareModel(hw)
+    t = model.time(cost, concurrent_islands=False)
+    return RunResult("Ana-Only", 0, len(queries), 0.0, t["ana"],
+                     model.energy(cost), results)
+
+
+# ---------------------------------------------------------------------------
+# Single-instance systems (§3.1)
+# ---------------------------------------------------------------------------
+
+def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
+              n_rounds: int = 8, zero_cost_snapshot: bool = False) -> RunResult:
+    """Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
+
+    zero_cost_snapshot: the paper's normalization baseline — identical run,
+    snapshot creation costs nothing (Fig. 1-right / Fig. 8-right).
+    """
+    cost = CostLog()
+    store = RowStore(table)
+    snap = SnapshotStore(table)
+    results = []
+    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
+                                  _split_queries(queries, n_rounds)):
+        store.execute(txn_chunk, cost)
+        snap.data = store.data            # single instance: same storage
+        if txn_chunk.writes_mask().any():
+            snap.mark_dirty()
+        if q_chunk:
+            view = snap.take_snapshot_if_needed(
+                None if zero_cost_snapshot else cost)
+            for q in q_chunk:
+                results.append(engine.run_query_nsm(view, q, cost))
+    model = HardwareModel(hw)
+    t = model.time(cost)
+    return RunResult("SI-SS", len(stream), len(queries), t["txn"], t["ana"],
+                     model.energy(cost), results,
+                     stats={"snapshots": snap.snapshots_taken})
+
+
+def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
+                n_rounds: int = 8, zero_cost_mvcc: bool = False) -> RunResult:
+    """Single-Instance-MVCC: version chains; analytics traverse chains.
+
+    zero_cost_mvcc: identical run, chain traversal costs nothing (the
+    paper's Fig. 1-left normalization baseline).
+    """
+    cost = CostLog()
+    store = MVCCStore(table)
+    results = []
+    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
+                                  _split_queries(queries, n_rounds)):
+        # analytics run CONCURRENTLY with this round's transactions: their
+        # snapshot timestamp is the round start, so every version committed
+        # during the round is "newer" and must be hopped over (§3.1).
+        ts = int(txn_chunk.commit_id[0]) - 1 if len(txn_chunk) else 0
+        store.execute(txn_chunk, cost)
+        hops = not zero_cost_mvcc
+        for q in q_chunk:
+            fvals = store.read_column_at(q.filter_col, ts, cost, hops)
+            avals = store.read_column_at(q.agg_col, ts, cost, hops)
+            mask = (fvals >= q.lo) & (fvals <= q.hi)
+            res = int(avals[mask].astype(np.int64).sum())
+            if q.join_col is not None:
+                jv = store.read_column_at(q.join_col, ts, cost, hops)
+                uv, counts = np.unique(jv, return_counts=True)
+                lv, lcounts = np.unique(jv[mask], return_counts=True)
+                common, li, ri = np.intersect1d(lv, uv, return_indices=True)
+                res += int((lcounts[li].astype(np.int64) * counts[ri]).sum())
+            results.append(res)
+            # scan cycles beyond chain traversal (already priced in read_column_at)
+            cost.add(phase="ana", island="ana", resource="cpu",
+                     cycles=store.base.shape[0] * engine.CPU_CYCLES_PER_ROW)
+    model = HardwareModel(hw)
+    t = model.time(cost)
+    return RunResult("SI-MVCC", len(stream), len(queries), t["txn"], t["ana"],
+                     model.energy(cost), results,
+                     stats={"versions": store.n_versions})
+
+
+# ---------------------------------------------------------------------------
+# Multiple-instance systems (§3.2) and Polynesia (§4-§7)
+# ---------------------------------------------------------------------------
+
+def run_multi_instance(
+    table, stream, queries,
+    hw: HardwareParams = HMC_PARAMS,
+    name: str = "MI+SW",
+    propagation_on_pim: bool = False,
+    analytics_on_pim: bool = False,
+    txn_on_pim: bool = False,
+    optimized_application: bool = True,
+    n_rounds: int = 8,
+    shipping_only: bool = False,   # zero-cost application (Fig. 2 ablation)
+    zero_cost_propagation: bool = False,  # Fig. 2/7 "Ideal" baseline
+) -> RunResult:
+    """Shared driver for MI+SW / MI+SW+HB / PIM-Only / Polynesia.
+
+    The flags place each mechanism on the CPU island or the PIM islands:
+      MI+SW      : all False (software optimizations, CPU everywhere)
+      MI+SW+HB   : all False with hw=HB_PARAMS
+      PIM-Only   : analytics_on_pim=txn_on_pim=True, propagation on PIM cores
+      Polynesia  : propagation_on_pim=analytics_on_pim=True (accelerators)
+    """
+    cost = CostLog()
+    store = RowStore(table)
+    replica = DSMReplica.from_table(table)
+    cons = ConsistencyManager(replica, cost, on_pim=analytics_on_pim)
+    placement = hybrid(hw.n_vaults * hw.n_stacks)
+    results = []
+    applications = 0
+    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
+                                  _split_queries(queries, n_rounds)):
+        # -- transactional island -----------------------------------------
+        if txn_on_pim:
+            store.execute(txn_chunk)  # functional only; price on PIM cores:
+            n = len(txn_chunk)
+            cost.add(phase="txn", island="txn", resource="pim_txn",
+                     cycles=n * RowStore.CYCLES_PER_TXN * PIM_TXN_CYCLE_FACTOR,
+                     bytes_local=n * store.n_cols * 4 * RowStore.MISS_FRACTION)
+        else:
+            store.execute(txn_chunk, cost)
+
+        # -- update propagation (§5): ship when final log capacity reached --
+        while store.pending_updates >= FINAL_LOG_CAPACITY or (
+                store.pending_updates and q_chunk):
+            logs = store.drain_logs()
+            ship_cost = None if zero_cost_propagation else cost
+            buffers = ship_updates(logs, store.n_cols, ship_cost,
+                                   on_pim=propagation_on_pim)
+            for col_id, entries in buffers.items():
+                old = replica.columns[col_id]
+                app_cost = (None if (shipping_only or zero_cost_propagation)
+                            else cost)
+                if optimized_application:
+                    new = apply_updates(old, entries, app_cost,
+                                        on_pim=propagation_on_pim)
+                else:
+                    new = apply_updates_naive(old, entries, app_cost)
+                cons.on_update(col_id, new)
+                applications += 1
+
+        # -- analytical island (§6 consistency + §7 engine) -----------------
+        for q in q_chunk:
+            h = cons.begin_query(q.columns)
+            view = {c: cons.read(h, c) for c in q.columns}
+            results.append(engine.run_query_dsm(
+                view, q, cost, placement, on_pim=analytics_on_pim))
+            cons.end_query(h)
+    model = HardwareModel(hw)
+    t = model.time(cost)
+    return RunResult(name, len(stream), len(queries), t["txn"], t["ana"],
+                     model.energy(cost), results,
+                     stats={"applications": applications,
+                            "snapshots": cons.snapshots_created,
+                            "shared": cons.snapshots_shared})
+
+
+def run_mi_sw(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
+    return run_multi_instance(table, stream, queries, hw, name="MI+SW", **kw)
+
+
+def run_mi_sw_hb(table, stream, queries, **kw) -> RunResult:
+    return run_multi_instance(table, stream, queries, HB_PARAMS,
+                              name="MI+SW+HB", **kw)
+
+
+def run_pim_only(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
+    return run_multi_instance(table, stream, queries, hw, name="PIM-Only",
+                              propagation_on_pim=True, analytics_on_pim=True,
+                              txn_on_pim=True, **kw)
+
+
+def run_polynesia(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
+    return run_multi_instance(table, stream, queries, hw, name="Polynesia",
+                              propagation_on_pim=True, analytics_on_pim=True,
+                              **kw)
+
+
+ALL_SYSTEMS = {
+    "SI-SS": run_si_ss,
+    "SI-MVCC": run_si_mvcc,
+    "MI+SW": run_mi_sw,
+    "MI+SW+HB": run_mi_sw_hb,
+    "PIM-Only": run_pim_only,
+    "Polynesia": run_polynesia,
+}

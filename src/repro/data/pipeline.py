@@ -1,0 +1,114 @@
+"""HTAP-fed training data pipeline — the paper's system as the ML substrate.
+
+The transactional island (host threads) ingests token sequences as row
+inserts with ordered update logs; update propagation ships/applies them into
+the analytical replica (dictionary-encoded token column, vault-group
+partitioned); each training step begins an analytical "query": it pins a
+consistent snapshot (§6) and reads its batch from the freshest committed
+data. Freshness = train on data ingested moments ago; isolation = ingest
+never stalls the step; consistency = a step never sees a half-applied
+update batch.
+
+Determinism for fault tolerance: batch contents are a pure function of
+(step, store length at snapshot) — a restarted run replays identically
+(tests/test_fault_tolerance.py asserts bit-identical resumes).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.application import apply_updates
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import DSMReplica, encode_column
+from repro.core.hwmodel import CostLog
+from repro.core.nsm import RowStore, make_entries
+from repro.core.shipping import ship_updates
+
+
+class HTAPTokenPipeline:
+    """Streaming token store with HTAP freshness/consistency semantics."""
+
+    TOKEN_COL = 0
+
+    def __init__(self, vocab_size: int, seq_len: int, batch: int,
+                 seed: int = 0, initial_tokens: int = 1 << 16,
+                 n_threads: int = 4):
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.batch = batch
+        self.rng = np.random.default_rng(seed)
+        self._commit = 0
+        init = self.rng.integers(0, vocab_size, size=(initial_tokens, 1))
+        self.row_store = RowStore(init.astype(np.int32), n_threads=n_threads)
+        self.replica = DSMReplica(
+            columns={self.TOKEN_COL: encode_column(init[:, 0])})
+        self.cost = CostLog()
+        self.cons = ConsistencyManager(self.replica, self.cost, on_pim=True)
+        self.ingested = initial_tokens
+
+    # -- transactional island: streaming ingest ---------------------------
+    def ingest(self, tokens: np.ndarray) -> None:
+        """Append a chunk of tokens (row inserts + update-log entries)."""
+        tokens = np.asarray(tokens, dtype=np.int32).reshape(-1)
+        n = len(tokens)
+        rows = np.arange(self.ingested, self.ingested + n, dtype=np.int64)
+        commit = np.arange(self._commit, self._commit + n, dtype=np.int64)
+        self._commit += n
+        entries = make_entries(commit, np.full(n, 2, np.int8), tokens, rows,
+                               np.full(n, self.TOKEN_COL, np.int32))
+        # round-robin the entries over ingest threads (per-thread logs)
+        for t in range(self.row_store.n_threads):
+            self.row_store.logs[t].append(entries[t::self.row_store.n_threads])
+        self.ingested += n
+
+    # -- update propagation (§5) -------------------------------------------
+    def propagate(self) -> int:
+        """Ship + apply pending updates; returns #updates applied."""
+        pending = self.row_store.pending_updates
+        if not pending:
+            return 0
+        logs = self.row_store.drain_logs()
+        buffers = ship_updates(logs, n_cols=1, cost=self.cost, on_pim=True)
+        for col_id, entries in buffers.items():
+            new = apply_updates(self.replica.columns[col_id], entries,
+                                self.cost, on_pim=True)
+            self.cons.on_update(col_id, new)
+        return pending
+
+    # -- analytical island: the training step's batch read ------------------
+    def get_batch(self, step: int) -> tuple[np.ndarray, np.ndarray]:
+        """Consistent snapshot read -> (tokens, labels) of (B, S)."""
+        h = self.cons.begin_query([self.TOKEN_COL])
+        col = self.cons.read(h, self.TOKEN_COL)
+        data = np.asarray(col.dictionary)[np.asarray(col.codes)]
+        self.cons.end_query(h)
+        need = self.batch * (self.seq_len + 1)
+        n = len(data)
+        assert n >= need, f"store too small: {n} < {need}"
+        # deterministic offset schedule over the committed prefix
+        start = (step * need) % max(n - need, 1)
+        window = data[start:start + need].reshape(self.batch, self.seq_len + 1)
+        return window[:, :-1].astype(np.int32), window[:, 1:].astype(np.int32)
+
+    def freshness_lag(self) -> int:
+        """Tokens ingested but not yet visible to readers (data freshness)."""
+        head = self.replica.columns[self.TOKEN_COL]
+        return self.ingested - head.n_rows
+
+
+class SyntheticPipeline:
+    """RNG batches with the same interface (for pure-perf runs)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, batch: int,
+                 seed: int = 0):
+        self.vocab = vocab_size
+        self.seq_len = seq_len
+        self.batch = batch
+        self.seed = seed
+
+    def get_batch(self, step: int):
+        rng = np.random.default_rng((self.seed, step))
+        toks = rng.integers(0, self.vocab,
+                            size=(self.batch, self.seq_len + 1)).astype(np.int32)
+        return toks[:, :-1], toks[:, 1:]

@@ -1,0 +1,5 @@
+"""Distribution layer: sharding rules (DP/TP/EP/SP + FSDP), collective
+helpers, elastic re-meshing, and the sharded decode combine."""
+
+from repro.distributed.sharding import (param_shardings, batch_spec,
+                                        cache_shardings, MeshRules)

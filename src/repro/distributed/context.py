@@ -1,0 +1,69 @@
+"""Process-global partitioning context.
+
+Model code is mesh-agnostic; the launcher installs the axis names here and
+layers apply `with_sharding_constraint` only when a context is set (smoke
+tests on 1 device run without). This is how the MoE dispatch tensors get
+their (experts=model, capacity=data) sharding — without the constraint the
+SPMD partitioner keeps global-capacity buffers unsharded (observed 587
+GB/device on kimi-k2; EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+_CTX: dict | None = None
+
+
+def set_partitioning(mesh, dp_axes: tuple, model_axis: str = "model") -> None:
+    global _CTX
+    _CTX = {"mesh": mesh, "dp": dp_axes, "model": model_axis}
+
+
+def clear_partitioning() -> None:
+    global _CTX
+    _CTX = None
+
+
+@contextlib.contextmanager
+def partitioning(mesh, dp_axes: tuple, model_axis: str = "model"):
+    set_partitioning(mesh, dp_axes, model_axis)
+    try:
+        yield
+    finally:
+        clear_partitioning()
+
+
+def constrain(x, *spec):
+    """with_sharding_constraint if a partitioning context is installed.
+
+    spec entries: "dp" -> the data axes, "model" -> model axis, None -> none.
+    """
+    if _CTX is None:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import jax
+    mesh = _CTX["mesh"]
+    resolved = []
+    for s in spec:
+        if s == "dp":
+            dp = _CTX["dp"]
+            resolved.append(dp if len(dp) > 1 else dp[0])
+        elif s == "model":
+            resolved.append(_CTX["model"])
+        else:
+            resolved.append(s)
+    # drop axes that don't divide
+    dims = x.shape
+    fixed = []
+    for dim, ax in zip(dims, resolved):
+        if ax is None:
+            fixed.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        fixed.append(ax if dim % size == 0 else None)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))

@@ -1,0 +1,57 @@
+"""Elastic re-meshing: survive node loss by shrinking the mesh and
+re-placing checkpointed state (fault tolerance at the fleet level).
+
+Flow on failure (launch/train.py integration):
+  1. detect the reduced healthy-device set,
+  2. `degraded_mesh(n_healthy)` builds the largest valid (data, model)
+     mesh that keeps the model axis intact (TP degree is a property of the
+     compiled program; the data axis absorbs the loss),
+  3. `remesh(tree, new_mesh)` re-places host/checkpoint state onto the new
+     mesh's shardings (checkpoints are stored unsharded, so any mesh
+     works — checkpoint/manager.py),
+  4. the step is re-lowered for the new mesh; the global batch is kept by
+     raising microbatching (make_train_step(micro_batches=...)) when the
+     per-device batch no longer divides.
+
+Straggler mitigation lives one level down: the data pipeline's
+fine-grained segment balancing (core/scheduler.py — the paper's own
+mechanism) and the checkpoint manager's async writes keep slow hosts off
+the critical path.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.distributed.sharding import param_shardings
+
+
+def degraded_mesh(n_healthy: int, model_axis: int = 16,
+                  axis_names=("data", "model")):
+    """Largest (data, model) mesh with <= n_healthy devices, model intact."""
+    assert n_healthy >= model_axis, "cannot keep TP degree; shrink model axis"
+    data = n_healthy // model_axis
+    devices = jax.devices()[: data * model_axis]
+    return jax.make_mesh((data, model_axis), axis_names, devices=devices)
+
+
+def remesh(tree, new_mesh, fsdp: bool = True):
+    """Re-place a (host or differently-sharded) param tree onto new_mesh."""
+    abstract = jax.eval_shape(lambda: tree)
+    shardings = param_shardings(abstract, new_mesh, fsdp=fsdp)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(np.asarray(jax.device_get(a)), s),
+        tree, shardings)
+
+
+def pick_microbatches(global_batch: int, old_data: int, new_data: int,
+                      old_micro: int = 1) -> int:
+    """Keep the global batch when the data axis shrinks: raise grad-accum
+    so per-device-per-microbatch batch stays integral and bounded."""
+    for m in range(old_micro, global_batch + 1):
+        if global_batch % (new_data * m) == 0 and \
+                global_batch // (new_data * m) <= \
+                max(1, global_batch // (old_data * old_micro)):
+            return m
+    return global_batch // new_data

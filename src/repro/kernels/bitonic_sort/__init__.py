@@ -1,0 +1,1 @@
+from repro.kernels.bitonic_sort.ops import sort_rows, sort_1024

@@ -1,0 +1,32 @@
+"""Public wrappers for the bitonic sort unit."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.bitonic_sort.bitonic_sort import bitonic_sort_rows
+from repro.kernels.bitonic_sort.ref import sort_rows_ref
+from repro.kernels.common import default_interpret, next_pow2
+
+
+def sort_rows(x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """Sort each row ascending. Pads to a power of two with +inf sentinels."""
+    if not use_pallas:
+        return sort_rows_ref(x)
+    rows, width = x.shape
+    padded = next_pow2(width)
+    sentinel = jnp.iinfo(x.dtype).max if jnp.issubdtype(x.dtype, jnp.integer) \
+        else jnp.inf
+    if padded != width:
+        x = jnp.pad(x, ((0, 0), (0, padded - width)), constant_values=sentinel)
+    pad_rows = (-rows) % 8
+    if pad_rows:
+        x = jnp.pad(x, ((0, pad_rows), (0, 0)), constant_values=sentinel)
+    out = bitonic_sort_rows(x, block_rows=8, interpret=default_interpret())
+    return out[:rows, :width]
+
+
+def sort_1024(values: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
+    """The paper's sort-unit entry point: sort <=1024 values (§5.2)."""
+    assert values.shape[0] <= 1024, "sort unit is sized for 1024 values"
+    return sort_rows(values[None, :], use_pallas=use_pallas)[0]

@@ -1,0 +1,17 @@
+"""Shared kernel utilities."""
+
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode unless we are actually on TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p <<= 1
+    return p

@@ -1,0 +1,91 @@
+"""Flash-decode attention kernel: one query token vs a long KV cache.
+
+Serving shapes (decode_32k / long_500k) are dominated by streaming the KV
+cache once per generated token. The kernel tiles the cache along sequence,
+keeps the online-softmax state (m, l, acc) for one KV-head's query group in
+VMEM scratch, and normalizes on the final tile — a split-K flash-decoding
+design. HBM traffic = one sequential read of K and V per token, the decode
+roofline minimum. GQA comes free: all G query heads of a KV head share the
+streamed tiles. The sequence axis can additionally be sharded across
+devices; distributed/decode.py combines per-shard (m, l, acc) with the
+standard logsumexp merge.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, scale: float, softcap: float):
+    s_idx = pl.program_id(2)
+    n_s = pl.num_programs(2)
+
+    @pl.when(s_idx == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]                      # (G, d)
+    k = k_ref[0, :, 0, :]             # (sblk, d)
+    v = v_ref[0, :, 0, :]             # (sblk, d)
+    sblk = k.shape[0]
+    length = len_ref[0]
+
+    scores = jnp.dot(q.astype(jnp.float32), k.astype(jnp.float32).T) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = s_idx * sblk + jax.lax.iota(jnp.int32, sblk)
+    scores = jnp.where((pos < length)[None, :], scores, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, scores.max(axis=1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(scores - m_new[:, None])
+    m_ref[...] = m_new
+    l_ref[...] = l_prev * alpha + p.sum(axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p, v.astype(jnp.float32))
+
+    @pl.when(s_idx == n_s - 1)
+    def _final():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("s_block", "scale", "softcap", "interpret"))
+def decode_attention_kernel(q, k, v, length, scale: float, softcap: float = 0.0,
+                            s_block: int = 512, interpret: bool = True):
+    """q: (B,H,d); k,v: (B,S,Hkv,d); length: (1,) valid KV length. -> (B,H,d)."""
+    B, H, d = q.shape
+    _, S, Hkv, _ = k.shape
+    G = H // Hkv
+    assert H % Hkv == 0 and S % s_block == 0
+    grid = (B, Hkv, S // s_block)
+    kv_spec = pl.BlockSpec((1, s_block, 1, d), lambda b, h, s: (b, s, h, 0))
+    return pl.pallas_call(
+        functools.partial(_decode_kernel, scale=scale, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, G, d), lambda b, h, s: (b, h, 0)),
+            kv_spec,
+            kv_spec,
+            pl.BlockSpec((1,), lambda b, h, s: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, G, d), lambda b, h, s: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G,), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, length)

@@ -1,0 +1,25 @@
+"""Public wrapper for flash-decode attention."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.decode_attn.decode_attn import decode_attention_kernel
+from repro.kernels.decode_attn.ref import decode_attention_ref
+
+
+def decode_attention(q, k, v, length, scale=None, softcap: float = 0.0,
+                     use_pallas: bool = True, s_block: int = 512):
+    """One-token attention vs a (possibly partially filled) KV cache."""
+    B, H, d = q.shape
+    S = k.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    if (not use_pallas) or S % s_block:
+        return decode_attention_ref(q, k, v, length, scale, softcap)
+    length_arr = jnp.asarray([length], dtype=jnp.int32) \
+        if jnp.ndim(length) == 0 else length.astype(jnp.int32).reshape(1)
+    return decode_attention_kernel(q, k, v, length_arr, float(scale),
+                                   float(softcap), s_block=s_block,
+                                   interpret=default_interpret())

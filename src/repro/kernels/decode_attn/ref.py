@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for flash-decode attention."""
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, length, scale, softcap: float = 0.0):
+    """q: (B,H,d); k,v: (B,S,Hkv,d); length: valid prefix of S. -> (B,H,d)."""
+    B, H, d = q.shape
+    _, S, Hkv, _ = k.shape
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, d)
+    scores = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0.0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    mask = jnp.arange(S)[None, None, None, :] < length
+    scores = jnp.where(mask, scores, -1e30)
+    p = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, d).astype(q.dtype)

@@ -1,0 +1,1 @@
+from repro.kernels.dict_ops.ops import scan_filter_agg

@@ -1,0 +1,28 @@
+"""Public wrapper for the fused dictionary-encoded scan."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.dict_ops.dict_ops import scan_filter_agg_kernel
+from repro.kernels.dict_ops.ref import scan_filter_agg_ref
+
+
+def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
+                    use_pallas: bool = True, block: int = 4096):
+    """sum(dict[acodes]) and count over rows with code_lo <= fcodes < code_hi."""
+    if not use_pallas:
+        return scan_filter_agg_ref(fcodes, acodes, valid, dictionary,
+                                   code_lo, code_hi)
+    (n,) = fcodes.shape
+    pad = (-n) % block
+    if pad:
+        fcodes = jnp.pad(fcodes, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        acodes = jnp.pad(acodes, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    bounds = jnp.asarray([code_lo, code_hi], dtype=jnp.int32)
+    s, c = scan_filter_agg_kernel(fcodes, acodes, valid.astype(jnp.int32),
+                                  dictionary, bounds, block=block,
+                                  interpret=default_interpret())
+    return s[0], c[0]

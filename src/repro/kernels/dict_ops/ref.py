@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the fused scan-filter-aggregate."""
+
+import jax.numpy as jnp
+
+
+def scan_filter_agg_ref(fcodes, acodes, valid, dictionary, code_lo, code_hi):
+    mask = (fcodes >= code_lo) & (fcodes < code_hi) & (valid != 0)
+    vals = dictionary[acodes].astype(jnp.float32)
+    return jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask.astype(jnp.int32))

@@ -1,0 +1,1 @@
+from repro.kernels.hash_probe.ops import build_table, probe, HashTable

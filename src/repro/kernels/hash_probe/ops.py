@@ -1,0 +1,66 @@
+"""Public wrappers: build (host-side, data-dependent) + probe (kernel)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.common import default_interpret
+from repro.kernels.hash_probe.hash_probe import EMPTY, probe_table
+from repro.kernels.hash_probe.ref import probe_ref
+
+
+@dataclasses.dataclass
+class HashTable:
+    keys: jnp.ndarray    # (n_buckets, slots) int32, EMPTY = free
+    values: jnp.ndarray  # (n_buckets, slots) int32
+
+    @property
+    def n_buckets(self) -> int:
+        return self.keys.shape[0]
+
+
+def build_table(keys: np.ndarray, values: np.ndarray,
+                load_factor: float = 0.5, min_slots: int = 4) -> HashTable:
+    """Build the fixed-slot bucket table (paper: sized to the partition so
+    chains stay short; here: slots grown until the worst bucket fits)."""
+    keys = np.asarray(keys, dtype=np.int32)
+    values = np.asarray(values, dtype=np.int32)
+    assert len(np.unique(keys)) == len(keys), "hash table keys must be unique"
+    n = max(len(keys), 1)
+    n_buckets = max(8, int(2 ** np.ceil(np.log2(n / load_factor))))
+    bucket = keys.astype(np.int64) % n_buckets
+    counts = np.bincount(bucket, minlength=n_buckets)
+    slots = max(min_slots, int(counts.max()) if len(keys) else min_slots)
+    # lanes of 128 help nothing here; keep slots small & padded to 4
+    slots = int(np.ceil(slots / 4) * 4)
+    tk = np.full((n_buckets, slots), int(EMPTY), dtype=np.int32)
+    tv = np.zeros((n_buckets, slots), dtype=np.int32)
+    rank = np.zeros(n_buckets, dtype=np.int64)
+    order = np.argsort(bucket, kind="stable")
+    for i in order:  # vectorizable; small tables (dictionaries) in practice
+        b = bucket[i]
+        tk[b, rank[b]] = keys[i]
+        tv[b, rank[b]] = values[i]
+        rank[b] += 1
+    return HashTable(jnp.asarray(tk), jnp.asarray(tv))
+
+
+def probe(table: HashTable, queries: jnp.ndarray, default: int = -1,
+          use_pallas: bool = True, block: int = 1024) -> jnp.ndarray:
+    """Lookup values for queries (unique-key associative read)."""
+    if not use_pallas:
+        # reconstruct flat key/value view for the oracle
+        mask = np.asarray(table.keys).reshape(-1) != int(EMPTY)
+        flat_k = jnp.asarray(np.asarray(table.keys).reshape(-1)[mask])
+        flat_v = jnp.asarray(np.asarray(table.values).reshape(-1)[mask])
+        return probe_ref(queries, flat_k, flat_v, jnp.int32(default))
+    (n,) = queries.shape
+    pad = (-n) % block
+    q = jnp.pad(queries, (0, pad)) if pad else queries
+    out = probe_table(q, table.keys, table.values,
+                      jnp.asarray([default], dtype=table.values.dtype),
+                      block=block, interpret=default_interpret())
+    return out[:n]

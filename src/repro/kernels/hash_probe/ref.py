@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the hash probe unit (associative lookup)."""
+
+import jax.numpy as jnp
+
+
+def probe_ref(queries, keys, values, default):
+    """For each query, the value of the matching key (keys unique), else default."""
+    hit = queries[:, None] == keys[None, :]
+    val = jnp.max(jnp.where(hit, values[None, :], jnp.iinfo(jnp.int32).min), axis=1)
+    return jnp.where(hit.any(axis=1), val, default)

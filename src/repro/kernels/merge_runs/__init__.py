@@ -1,0 +1,1 @@
+from repro.kernels.merge_runs.ops import merge_sorted_pair, merge_sorted_runs

@@ -1,0 +1,76 @@
+"""Merge-unit kernel — the paper's update-shipping comparator tree (§5.1).
+
+The hardware merge unit streams 8 commit-ordered FIFO queues through a
+3-level comparator tree. A literal port would be a data-dependent serial
+loop — hostile to the VPU. The TPU-native equivalent exploits a classic
+identity: if A is ascending and B is ascending, then concat(A, reverse(B))
+is *bitonic*, and a bitonic MERGE network (log2(n) stages, not the full
+log^2 sort) sorts it. So an 8-way merge becomes 3 rounds of pairwise
+bitonic merges — the same comparator-tree depth as the hardware unit, with
+every stage a vector-wide reshape+min/max in VMEM.
+
+Payload handling: entries are merged by key (commit_id); payloads move with
+their key. We pack (key, payload-index) into one int64-like pair of int32
+lanes: the kernel sorts a (rows, 2*width) tile where lane 0 holds keys and
+lane 1 original indices; ops.py gathers payloads afterwards.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _merge_stage(keys, idxs, k_total, j):
+    """Compare-exchange with stride 2^j, ascending (merge network stage)."""
+    rows, width = keys.shape
+    stride = 1 << j
+    kr = keys.reshape(rows, width // (2 * stride), 2, stride)
+    ir = idxs.reshape(rows, width // (2 * stride), 2, stride)
+    a, b = kr[:, :, 0, :], kr[:, :, 1, :]
+    ia, ib = ir[:, :, 0, :], ir[:, :, 1, :]
+    swap = a > b
+    lo = jnp.where(swap, b, a)
+    hi = jnp.where(swap, a, b)
+    ilo = jnp.where(swap, ib, ia)
+    ihi = jnp.where(swap, ia, ib)
+    keys = jnp.stack([lo, hi], axis=2).reshape(rows, width)
+    idxs = jnp.stack([ilo, ihi], axis=2).reshape(rows, width)
+    return keys, idxs
+
+
+def _merge_kernel(a_ref, b_ref, ai_ref, bi_ref, ok_ref, oi_ref):
+    """Merge two ascending runs (rows, width) -> (rows, 2*width)."""
+    a, b = a_ref[...], b_ref[...]
+    ai, bi = ai_ref[...], bi_ref[...]
+    keys = jnp.concatenate([a, b[:, ::-1]], axis=-1)        # bitonic
+    idxs = jnp.concatenate([ai, bi[:, ::-1]], axis=-1)
+    width = keys.shape[-1]
+    for j in range(int(math.log2(width)) - 1, -1, -1):
+        keys, idxs = _merge_stage(keys, idxs, width, j)
+    ok_ref[...] = keys
+    oi_ref[...] = idxs
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def bitonic_merge_pair(a, b, ai, bi, block_rows: int = 8,
+                       interpret: bool = True):
+    """Row-wise merge of two ascending runs; widths equal powers of two."""
+    rows, width = a.shape
+    assert b.shape == a.shape and rows % block_rows == 0
+    grid = (rows // block_rows,)
+    spec = pl.BlockSpec((block_rows, width), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_rows, 2 * width), lambda i: (i, 0))
+    return pl.pallas_call(
+        _merge_kernel,
+        grid=grid,
+        in_specs=[spec, spec, spec, spec],
+        out_specs=(out_spec, out_spec),
+        out_shape=(jax.ShapeDtypeStruct((rows, 2 * width), a.dtype),
+                   jax.ShapeDtypeStruct((rows, 2 * width), ai.dtype)),
+        interpret=interpret,
+    )(a, b, ai, bi)

@@ -1,0 +1,67 @@
+"""Public wrappers for the merge unit (k-way merge as a comparator tree)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret, next_pow2
+from repro.kernels.merge_runs.merge_runs import bitonic_merge_pair
+from repro.kernels.merge_runs.ref import merge_pair_ref, merge_runs_ref
+
+
+def _pad_run(keys, idxs, width):
+    sentinel = jnp.iinfo(keys.dtype).max
+    pad = width - keys.shape[-1]
+    if pad:
+        keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=sentinel)
+        idxs = jnp.pad(idxs, ((0, 0), (0, pad)), constant_values=-1)
+    return keys, idxs
+
+
+def merge_sorted_pair(a, b, ai, bi, use_pallas: bool = True):
+    """Merge two ascending (rows, w) runs -> (rows, 2w) with carried indices."""
+    if not use_pallas:
+        return merge_pair_ref(a, b, ai, bi)
+    rows, w = a.shape
+    width = next_pow2(max(w, b.shape[-1], 128))
+    a, ai = _pad_run(a, ai, width)
+    b, bi = _pad_run(b, bi, width)
+    pad_rows = (-rows) % 8
+    if pad_rows:
+        a = jnp.pad(a, ((0, pad_rows), (0, 0)), constant_values=jnp.iinfo(a.dtype).max)
+        b = jnp.pad(b, ((0, pad_rows), (0, 0)), constant_values=jnp.iinfo(b.dtype).max)
+        ai = jnp.pad(ai, ((0, pad_rows), (0, 0)), constant_values=-1)
+        bi = jnp.pad(bi, ((0, pad_rows), (0, 0)), constant_values=-1)
+    keys, idxs = bitonic_merge_pair(a, b, ai, bi, interpret=default_interpret())
+    keys, idxs = keys[:rows], idxs[:rows]
+    # valid entries sort before int-max sentinels; trim to true length
+    return keys[:, : w + b.shape[-1]], idxs[:, : w + b.shape[-1]]
+
+
+def merge_sorted_runs(runs: list, use_pallas: bool = True):
+    """K-way merge (the 8-queue comparator tree): pairwise tournament.
+
+    runs: list of 1-D ascending int32 key arrays (per-thread update logs).
+    Returns (merged_keys, merged_source_index) where source index is the
+    position in the concatenated input — ops callers gather payloads with it.
+    """
+    offsets = []
+    total = 0
+    for r in runs:
+        offsets.append(total)
+        total += r.shape[-1]
+    keyed = [(r[None, :], (jnp.arange(r.shape[-1], dtype=jnp.int32) + off)[None, :])
+             for r, off in zip(runs, offsets)]
+    if not use_pallas:
+        k, i = merge_runs_ref([k for k, _ in keyed], [i for _, i in keyed])
+        return k[0], i[0]
+    while len(keyed) > 1:
+        nxt = []
+        for p in range(0, len(keyed) - 1, 2):
+            (ak, ai), (bk, bi) = keyed[p], keyed[p + 1]
+            nxt.append(merge_sorted_pair(ak, bk, ai, bi))
+        if len(keyed) % 2:
+            nxt.append(keyed[-1])
+        keyed = nxt
+    keys, idxs = keyed[0]
+    return keys[0], idxs[0]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the merge unit."""
+
+import jax.numpy as jnp
+
+
+def merge_pair_ref(a, b, ai, bi):
+    keys = jnp.concatenate([a, b], axis=-1)
+    idxs = jnp.concatenate([ai, bi], axis=-1)
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.take_along_axis(keys, order, -1), jnp.take_along_axis(idxs, order, -1)
+
+
+def merge_runs_ref(runs, idxs):
+    keys = jnp.concatenate(runs, axis=-1)
+    ids = jnp.concatenate(idxs, axis=-1)
+    order = jnp.argsort(keys, axis=-1, stable=True)
+    return jnp.take_along_axis(keys, order, -1), jnp.take_along_axis(ids, order, -1)

@@ -1,0 +1,1 @@
+from repro.kernels.selective_scan.ops import selective_scan

@@ -1,0 +1,17 @@
+"""Public wrapper for the selective scan."""
+
+from __future__ import annotations
+
+from repro.kernels.common import default_interpret
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.selective_scan.selective_scan import selective_scan_kernel
+
+
+def selective_scan(x, dt, a, b, c, d, use_pallas: bool = True,
+                   d_block: int = 128, t_block: int = 256):
+    B, T, D = x.shape
+    if (not use_pallas) or D % d_block or T % t_block:
+        return selective_scan_ref(x, dt, a, b, c, d)
+    return selective_scan_kernel(x, dt, a, b, c, d, d_block=d_block,
+                                 t_block=t_block,
+                                 interpret=default_interpret())

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the selective scan (used by models on CPU/dry-run)."""
+
+import jax
+import jax.numpy as jnp
+
+
+def selective_scan_ref(x, dt, a, b, c, d):
+    """x,dt: (B,T,D); a: (D,N); b,c: (B,T,N); d: (D,) -> y (B,T,D)."""
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp            # (B,D), (B,D), (B,N), (B,N)
+        da = jnp.exp(dtt[..., None] * a[None])          # (B,D,N)
+        h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+        y = (h * ct[:, None, :]).sum(-1) + d[None] * xt
+        return h, y
+
+    B, T, D = x.shape
+    N = a.shape[1]
+    h0 = jnp.zeros((B, D, N), dtype=jnp.float32)
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(b, 1, 0), jnp.moveaxis(c, 1, 0))
+    _, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+def selective_scan_step_ref(h, xt, dtt, a, bt, ct, d):
+    """Single decode step: h (B,D,N) -> (h', y_t (B,D))."""
+    da = jnp.exp(dtt[..., None] * a[None])
+    h = da * h + (dtt * xt)[..., None] * bt[:, None, :]
+    y = (h * ct[:, None, :]).sum(-1) + d[None] * xt
+    return h, y

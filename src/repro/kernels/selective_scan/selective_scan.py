@@ -1,0 +1,74 @@
+"""Selective state-space scan kernel (Mamba-1) for the SSM/hybrid archs.
+
+Recurrence (diagonal A, per-channel state of size N):
+    h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) outer B_t
+    y_t = <h_t, C_t> + D * x_t
+
+TPU design: the state h (d_block, N) lives in VMEM scratch for the entire
+sequence; the grid is (batch, d_blocks, t_blocks) with time innermost
+(sequential on TPU), so each (batch, channel-block) streams its time tiles
+through VMEM exactly once — HBM traffic is one read of x/dt/B/C and one
+write of y, the roofline minimum for a recurrence that cannot be
+materialized. The time loop inside a tile is a fori_loop over VMEM-resident
+registers (VPU elementwise + small (d_block x N) outer products).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref, h_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]            # (dblk, N)
+    dskip = d_ref[...]        # (dblk,)
+    tblk = x_ref.shape[1]
+
+    def body(t, _):
+        xt = x_ref[0, t, :]               # (dblk,)
+        dtt = dt_ref[0, t, :]             # (dblk,)
+        bt = b_ref[0, t, :]               # (N,)
+        ct = c_ref[0, t, :]               # (N,)
+        da = jnp.exp(dtt[:, None] * a)    # (dblk, N)
+        h = da * h_ref[...] + (dtt * xt)[:, None] * bt[None, :]
+        h_ref[...] = h
+        y_ref[0, t, :] = (h * ct[None, :]).sum(axis=1) + dskip * xt
+        return 0
+
+    jax.lax.fori_loop(0, tblk, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("d_block", "t_block", "interpret"))
+def selective_scan_kernel(x, dt, a, b, c, d, d_block: int = 128,
+                          t_block: int = 256, interpret: bool = True):
+    """x,dt: (B,T,D); a: (D,N); b,c: (B,T,N); d: (D,). Returns y (B,T,D)."""
+    B, T, D = x.shape
+    N = a.shape[1]
+    assert D % d_block == 0 and T % t_block == 0
+    grid = (B, D // d_block, T // t_block)
+    xspec = pl.BlockSpec((1, t_block, d_block), lambda bb, db, tb: (bb, tb, db))
+    nspec = pl.BlockSpec((1, t_block, N), lambda bb, db, tb: (bb, tb, 0))
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=grid,
+        in_specs=[
+            xspec,                                                    # x
+            xspec,                                                    # dt
+            pl.BlockSpec((d_block, N), lambda bb, db, tb: (db, 0)),   # A
+            nspec,                                                    # B
+            nspec,                                                    # C
+            pl.BlockSpec((d_block,), lambda bb, db, tb: (db,)),       # D skip
+        ],
+        out_specs=xspec,
+        out_shape=jax.ShapeDtypeStruct((B, T, D), x.dtype),
+        scratch_shapes=[pltpu.VMEM((d_block, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b, c, d)

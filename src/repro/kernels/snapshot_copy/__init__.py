@@ -1,0 +1,1 @@
+from repro.kernels.snapshot_copy.ops import snapshot_copy

@@ -1,0 +1,26 @@
+"""Public wrapper for the copy unit."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.common import default_interpret
+from repro.kernels.snapshot_copy.ref import snapshot_copy_ref
+from repro.kernels.snapshot_copy.snapshot_copy import snapshot_copy_kernel
+
+
+def snapshot_copy(src, prev, dirty, block: int = 8192,
+                  use_pallas: bool = True) -> jnp.ndarray:
+    """Copy dirty chunks from src, carry clean chunks from prev."""
+    (n,) = src.shape
+    n_chunks = (n + block - 1) // block
+    assert dirty.shape[0] == n_chunks
+    if not use_pallas:
+        return snapshot_copy_ref(src, prev, dirty, block)
+    pad = n_chunks * block - n
+    if pad:
+        src = jnp.pad(src, (0, pad))
+        prev = jnp.pad(prev, (0, pad))
+    out = snapshot_copy_kernel(src, prev, dirty.astype(jnp.int32), block=block,
+                               interpret=default_interpret())
+    return out[:n]

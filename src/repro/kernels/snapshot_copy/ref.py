@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the copy unit."""
+
+import jax.numpy as jnp
+
+
+def snapshot_copy_ref(src, prev, dirty, block):
+    mask = jnp.repeat(dirty != 0, block)[: src.shape[0]]
+    return jnp.where(mask, src, prev)

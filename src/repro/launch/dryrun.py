@@ -1,0 +1,393 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: builds the
+production mesh from 512 placeholder host devices, lowers train/prefill/
+serve steps with the real shardings, compiles, and extracts
+  memory_analysis()  - per-device bytes (proves it fits),
+  cost_analysis()    - per-device FLOPs / bytes accessed,
+  collective wire bytes parsed from the optimized HLO,
+then derives the three roofline terms (EXPERIMENTS.md §Roofline).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma2-9b \
+      --shape train_4k --mesh single --out results/
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out results/
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_NAMES, SHAPES, get_config, shape_applicable
+from repro.distributed.sharding import (batch_spec, cache_shardings,
+                                        param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (abstract_params, input_specs, make_prefill_step,
+                                make_serve_step, make_train_step, pad_for_mesh)
+from repro.optim import default_optimizer_for, get_optimizer
+
+# TPU v5e hardware constants (§Roofline)
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "c64": 8,
+                "c128": 16}
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+_LINE_RE = re.compile(
+    r"=\s*(?P<lhs>.*?)\s+(?P<kind>all-reduce|all-gather|reduce-scatter"
+    r"|all-to-all|collective-permute)(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUP_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUP_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _tensor_bytes(lhs: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(lhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUP_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUP_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device wire bytes per collective kind (ring formulas).
+
+    Result-shape convention: all-gather results are full (post-gather)
+    shapes, all-reduce results equal inputs, reduce-scatter results are
+    shards. Wire bytes per device:
+      all-gather      (g-1)/g * result
+      all-reduce      2 (g-1)/g * result
+      reduce-scatter  (g-1)/g * result * g  (input = result*g)
+      all-to-all      (g-1)/g * result
+      collective-permute  result
+    """
+    out = {k: 0.0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:   # async pairs: count the start only
+            continue
+        kind = m.group("kind")
+        nbytes = _tensor_bytes(m.group("lhs"))
+        g = max(_group_size(line), 1)
+        frac = (g - 1) / g if g > 1 else 0.0
+        if kind == "all-gather":
+            wire = frac * nbytes
+        elif kind == "all-reduce":
+            wire = 2.0 * frac * nbytes
+        elif kind == "reduce-scatter":
+            wire = frac * nbytes * g
+        elif kind == "all-to-all":
+            wire = frac * nbytes
+        else:  # collective-permute
+            wire = nbytes
+        out[kind] += wire
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+def model_flops(cfg, shape) -> float:
+    """Global MODEL_FLOPS: 6*N_active*D (train) / 2*N_active*D (inference)."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def _batch_shardings(specs: dict, mesh, shape, all_axes_dp: bool = False) -> dict:
+    """all_axes_dp: small-model mode — the whole mesh is one DP domain."""
+    if all_axes_dp:
+        dp_axes = tuple(mesh.axis_names)
+    else:
+        dp_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
+    dp_size = int(np.prod([mesh.shape[a] for a in dp_axes]))
+    out = {}
+    for k, v in specs.items():
+        if k in ("tokens", "labels"):
+            spec = P(dp, None) if v.shape[0] % dp_size == 0 else P()
+        elif k in ("frames", "patch_embeds"):
+            spec = P(dp, None, None) if v.shape[0] % dp_size == 0 else P()
+        elif k == "token":
+            spec = P(dp, None) if v.shape[0] % dp_size == 0 else P()
+        elif k == "index":
+            spec = P()
+        else:
+            continue
+        out[k] = NamedSharding(mesh, spec)
+    return out
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, fsdp: bool = True,
+             opt_name: str = "auto", micro_batches: int = 1,
+             replicate_params: bool = False,
+             cache_dtype: str | None = None) -> dict:
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    cfg = pad_for_mesh(get_config(arch))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(list(mesh.shape.values())))
+
+    params_abs = abstract_params(cfg)
+    if replicate_params:
+        # small-model mode: no TP/FSDP — pure DP (whisper-class models)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        p_shardings = jax.tree.map(
+            lambda _: NamedSharding(mesh, P()), params_abs)
+    else:
+        p_shardings = param_shardings(params_abs, mesh, fsdp=fsdp)
+    specs = input_specs(cfg, shape)
+    b_shardings = _batch_shardings(specs, mesh, shape,
+                                   all_axes_dp=replicate_params)
+
+    from repro.distributed.context import set_partitioning, clear_partitioning
+    dp_axes = (tuple(mesh.axis_names) if replicate_params else
+               tuple(a for a in mesh.axis_names if a in ("pod", "data")))
+    set_partitioning(mesh, dp_axes)
+
+    with mesh:
+        if shape.kind == "train":
+            if opt_name == "auto":
+                opt_name = default_optimizer_for(cfg.param_count())
+            optimizer = get_optimizer(opt_name)
+            opt_abs = jax.eval_shape(optimizer[0], params_abs)
+            if replicate_params:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                o_shardings = jax.tree.map(
+                    lambda _: NamedSharding(mesh, P()), opt_abs)
+            else:
+                o_shardings = _opt_shardings(opt_abs, p_shardings, mesh)
+            step_fn = make_train_step(cfg, optimizer,
+                                      micro_batches=micro_batches)
+            batch = {k: v for k, v in specs.items()}
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, o_shardings, None, b_shardings),
+                out_shardings=(p_shardings, o_shardings, None),
+                donate_argnums=(0, 1),
+            ).lower(params_abs, opt_abs,
+                    jax.ShapeDtypeStruct((), jnp.int32), batch)
+        elif shape.kind == "prefill":
+            step_fn = make_prefill_step(cfg)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, b_shardings),
+            ).lower(params_abs, {k: v for k, v in specs.items()})
+        else:  # decode
+            step_fn = make_serve_step(cfg)
+            cache_abs = specs["cache"]
+            if cache_dtype is not None:
+                # KV-cache quantization (storage dtype; dequant on read)
+                dt = jnp.dtype(cache_dtype)
+                cache_abs = jax.tree.map(
+                    lambda l: jax.ShapeDtypeStruct(
+                        l.shape, dt if l.dtype == jnp.bfloat16 else l.dtype),
+                    cache_abs)
+            c_shardings = cache_shardings(cache_abs, mesh,
+                                          shape.global_batch)
+            lowered = jax.jit(
+                step_fn,
+                in_shardings=(p_shardings, c_shardings,
+                              b_shardings["token"], b_shardings["index"]),
+                out_shardings=(b_shardings["token"], c_shardings),
+                donate_argnums=(1,),
+            ).lower(params_abs, cache_abs, specs["token"], specs["index"])
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    clear_partitioning()
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)           # loop-body-once (reported raw)
+    from repro.launch.hlo_analysis import analyze_hlo
+    trip_aware = analyze_hlo(hlo)           # §Roofline source (loop-aware)
+
+    flops_dev = float(trip_aware["flops"])
+    bytes_dev = float(trip_aware["bytes"])
+    coll_total = float(trip_aware["coll_total"])
+    mf_global = model_flops(cfg, shape)
+    mf_dev = mf_global / n_chips
+    terms = {
+        "compute_s": flops_dev / PEAK_FLOPS,
+        "memory_s": bytes_dev / HBM_BW,
+        "collective_s": coll_total / ICI_BW,
+    }
+    dominant = max(terms, key=terms.get)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "n_chips": n_chips, "fsdp": fsdp,
+        "optimizer": opt_name if shape.kind == "train" else None,
+        "kind": shape.kind,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_est_bytes": (ma.argument_size_in_bytes
+                               + ma.temp_size_in_bytes
+                               + ma.output_size_in_bytes
+                               - ma.alias_size_in_bytes),
+        },
+        "cost": {"flops_per_dev": flops_dev, "bytes_per_dev": bytes_dev,
+                 "xla_flops_body_once": float(ca.get("flops", 0.0)),
+                 "xla_bytes_body_once": float(ca.get("bytes accessed", 0.0))},
+        "collectives": {**{k: v for k, v in trip_aware["coll"].items()},
+                        "total": coll_total,
+                        "body_once_parse": coll},
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "model_flops_global": mf_global,
+            "model_flops_per_dev": mf_dev,
+            "useful_flops_ratio": (mf_dev / flops_dev) if flops_dev else 0.0,
+            "step_time_est_s": max(terms.values()),
+            "roofline_fraction": (
+                (mf_dev / PEAK_FLOPS) / max(max(terms.values()), 1e-30)),
+        },
+        "hlo_bytes": len(hlo),
+    }
+    return result
+
+
+def _opt_shardings(opt_abs, p_shardings, mesh):
+    """Optimizer-state shardings: mirror the param shardings; factored
+    Adafactor states drop the corresponding axis."""
+    import jax.tree_util as jtu
+
+    flat_p = {}
+    for path, s in jtu.tree_flatten_with_path(p_shardings)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        flat_p[key] = s
+
+    def one(path, leaf):
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        parts = key.split("/")
+        if parts[0] in ("m", "v", "master"):
+            return flat_p["/".join(parts[1:])]
+        if parts[0] == "f":
+            pkey = "/".join(parts[1:-1])
+            base = flat_p[pkey]
+            spec = tuple(base.spec) + (None,) * (
+                (leaf.ndim + 1) - len(tuple(base.spec)))
+            if parts[-1] == "vr":     # param shape minus last dim
+                return NamedSharding(mesh, P(*spec[:leaf.ndim]))
+            if parts[-1] == "vc":     # param shape minus 2nd-to-last dim
+                return NamedSharding(mesh,
+                                     P(*(spec[:leaf.ndim - 1] + (spec[leaf.ndim],))))
+            return NamedSharding(mesh, P(*spec[:leaf.ndim]))
+        return NamedSharding(mesh, P())
+
+    return jtu.tree_map_with_path(one, opt_abs)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--opt", default="auto")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--micro-batches", type=int, default=1)
+    ap.add_argument("--replicate-params", action="store_true")
+    ap.add_argument("--cache-dtype", default=None)
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    if args.all:
+        cells = [(a, s) for a in ARCH_NAMES for s in SHAPES]
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape)]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape_name in cells:
+        ok, why = shape_applicable(arch, shape_name)
+        for mp in meshes:
+            tag = f"{arch}__{shape_name}__{'multi' if mp else 'single'}"
+            if args.tag:
+                tag += f"__{args.tag}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip-existing] {tag}")
+                continue
+            if not ok:
+                with open(path, "w") as f:
+                    json.dump({"arch": arch, "shape": shape_name,
+                               "mesh": "multi" if mp else "single",
+                               "skipped": True, "reason": why}, f, indent=1)
+                print(f"[skipped] {tag}: {why}")
+                continue
+            try:
+                res = run_cell(arch, shape_name, mp,
+                               fsdp=not args.no_fsdp, opt_name=args.opt,
+                               micro_batches=args.micro_batches,
+                               replicate_params=args.replicate_params,
+                               cache_dtype=args.cache_dtype)
+                with open(path, "w") as f:
+                    json.dump(res, f, indent=1)
+                r = res["roofline"]
+                print(f"[ok] {tag}: compile={res['compile_s']}s "
+                      f"dominant={r['dominant']} "
+                      f"roofline_frac={r['roofline_fraction']:.3f} "
+                      f"mem={res['memory']['peak_est_bytes']/2**30:.2f}GiB")
+            except Exception as e:  # noqa: BLE001 — record and continue
+                failures += 1
+                with open(path + ".err", "w") as f:
+                    f.write(traceback.format_exc())
+                print(f"[FAIL] {tag}: {type(e).__name__}: {e}")
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Production mesh definitions.
+
+Single pod: 16x16 = 256 chips, axes ("data", "model").
+Multi-pod:  2x16x16 = 512 chips, axes ("pod", "data", "model").
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS before first jax init; smoke tests see
+1 CPU device and use `make_test_mesh`).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devices) >= n, (
+        f"need {n} devices for the production mesh, have {len(devices)} — "
+        "run under launch/dryrun.py (it forces 512 host devices)")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_test_mesh():
+    """Whatever devices exist, as a (1, n_dev) ("data","model") mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def vault_groups(mesh, group_size: int = 4):
+    """Strategy-3 device groups: contiguous blocks of the 'model' axis
+    (the TPU analog of the paper's 4-vault groups; DESIGN.md §2)."""
+    m = mesh.shape["model"]
+    assert m % group_size == 0
+    return [tuple(range(g * group_size, (g + 1) * group_size))
+            for g in range(m // group_size)]

@@ -1,0 +1,146 @@
+"""Step factories + abstract input specs for every (arch x shape) cell.
+
+train_step: loss -> grads -> optimizer update (donated params/opt state).
+serve_step: one decode token against the KV/SSM caches (donated caches).
+input_specs: ShapeDtypeStruct stand-ins (weak-type-correct, shardable,
+zero allocation) for the dry-run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import Shape
+from repro.models.config import ModelConfig
+from repro.models.encdec import (encdec_loss, encdec_decode_step, init_encdec,
+                                 init_encdec_cache)
+from repro.models.lm import (init_lm, init_lm_cache, lm_apply, lm_decode_step,
+                             lm_loss)
+
+
+def pad_for_mesh(cfg: ModelConfig, model_axis: int = 16) -> ModelConfig:
+    """Pad vocab to a mesh-divisible multiple (flattened head dims already
+    divide the model axis for every assigned arch — checked in tests)."""
+    mult = model_axis * 16
+    v = ((cfg.vocab_size + mult - 1) // mult) * mult
+    if v == cfg.vocab_size:
+        return cfg
+    return dataclasses.replace(cfg, vocab_size=v)
+
+
+# ---------------------------------------------------------------------------
+# Abstract shapes
+# ---------------------------------------------------------------------------
+
+def abstract_params(cfg: ModelConfig):
+    init = init_encdec if cfg.is_encoder_decoder else init_lm
+    return jax.eval_shape(lambda: init(jax.random.PRNGKey(0), cfg))
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    if cfg.is_encoder_decoder:
+        return jax.eval_shape(
+            lambda: init_encdec_cache(cfg, batch, max_len))
+    return jax.eval_shape(lambda: init_lm_cache(cfg, batch, max_len))
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> dict:
+    """Model inputs for one cell, as ShapeDtypeStructs."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs = {"tokens": sds((B, S), i32)}
+        if shape.kind == "train":
+            specs["labels"] = sds((B, S), i32)
+        if cfg.is_encoder_decoder:
+            specs["frames"] = sds((B, S, cfg.d_model), cfg.adtype)
+        elif cfg.frontend is not None:
+            specs["patch_embeds"] = sds((B, cfg.n_frontend_tokens, cfg.d_model),
+                                        cfg.adtype)
+        return specs
+    # decode: one new token against a seq_len cache
+    specs = {
+        "token": sds((B, 1), i32),
+        "index": sds((), i32),
+        "cache": abstract_cache(cfg, B, S),
+    }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, optimizer, micro_batches: int = 1):
+    """micro_batches > 1: sequential gradient accumulation — activation
+    memory shrinks by the microbatch factor (the saved-residual stack is
+    per-microbatch), grads accumulate in the grad dtype (§Perf)."""
+    _, opt_update = optimizer
+
+    def loss_of(p, batch):
+        if cfg.is_encoder_decoder:
+            return encdec_loss(p, batch["frames"], batch["tokens"],
+                               batch["labels"], cfg)
+        return lm_loss(p, batch["tokens"], batch["labels"], cfg,
+                       batch.get("patch_embeds"))
+
+    def train_step(params, opt_state, step, batch):
+        if micro_batches == 1:
+            loss, grads = jax.value_and_grad(loss_of)(params, batch)
+        else:
+            def split(x):
+                return x.reshape((micro_batches, x.shape[0] // micro_batches)
+                                 + x.shape[1:])
+
+            micro = {k: split(v) for k, v in batch.items()}
+
+            def body(carry, mb):
+                loss_acc, grads_acc = carry
+                l, g = jax.value_and_grad(loss_of)(params, mb)
+                return (loss_acc + l,
+                        jax.tree.map(jnp.add, grads_acc, g)), None
+
+            zeros = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zeros),
+                                            micro)
+            loss = loss / micro_batches
+            grads = jax.tree.map(lambda g: g / micro_batches, grads)
+        new_params, new_opt = opt_update(params, grads, opt_state, step)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, batch):
+        if cfg.is_encoder_decoder:
+            from repro.models.encdec import encdec_apply
+            logits, _ = encdec_apply(params, batch["frames"], batch["tokens"],
+                                     cfg)
+        else:
+            logits, _ = lm_apply(params, batch["tokens"], cfg,
+                                 batch.get("patch_embeds"))
+        # return only the last position (what serving actually needs) to
+        # keep the output transfer sane at 32k prompts
+        return logits[:, -1, :]
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, index):
+        if cfg.is_encoder_decoder:
+            logits, new_cache = encdec_decode_step(params, cache, token,
+                                                   index, cfg)
+        else:
+            logits, new_cache = lm_decode_step(params, cache, token, index,
+                                               cfg)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return next_token[:, None], new_cache
+
+    return serve_step

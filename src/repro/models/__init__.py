@@ -1,0 +1,12 @@
+"""Model zoo: a unified block-pattern LM covering all 10 assigned archs.
+
+`ModelConfig.blocks` is a repeating period of (mixer, mlp) block specs;
+jax.lax.scan runs over stacked period params (small HLO, fast 512-device
+SPMD compiles). Whisper (enc-dec) has a dedicated assembly reusing the same
+attention substrate.
+"""
+
+from repro.models.config import BlockSpec, ModelConfig
+from repro.models.lm import init_lm, lm_apply, lm_decode_step, init_lm_cache
+from repro.models.encdec import (init_encdec, encdec_apply, encdec_decode_step,
+                                 init_encdec_cache)

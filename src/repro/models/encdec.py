@@ -1,0 +1,180 @@
+"""Encoder-decoder model (whisper-base backbone).
+
+The conv frontend is a STUB per the assignment: `input_specs()` provides
+precomputed frame embeddings (B, T_enc, d). Encoder: bidirectional
+attention + dense MLP. Decoder: causal self-attention + cross-attention +
+dense MLP. Layers are few (6+6) so depth is unrolled.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.attention import (attention_decode, attention_train,
+                                bidir_attention_train, cross_attention_train,
+                                init_attention, init_kv_cache, _sdpa, dense)
+from repro.nn.layers import embed, init_dense, init_embed, init_rmsnorm, rmsnorm
+from repro.nn.moe import init_swiglu, swiglu
+
+
+def _init_enc_layer(rng, cfg):
+    ks = jax.random.split(rng, 2)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_, False, cfg.pdtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": init_swiglu(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def _init_dec_layer(rng, cfg):
+    ks = jax.random.split(rng, 3)
+    return {
+        "ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.head_dim_, False, cfg.pdtype),
+        "lnx": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "xattn": init_attention(ks[1], cfg.d_model, cfg.n_heads,
+                                cfg.n_kv_heads, cfg.head_dim_, False,
+                                cfg.pdtype),
+        "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "mlp": init_swiglu(ks[2], cfg.d_model, cfg.d_ff, cfg.pdtype),
+    }
+
+
+def init_encdec(rng, cfg: ModelConfig):
+    n_enc = cfg.n_enc_layers or cfg.n_layers
+    keys = jax.random.split(rng, n_enc + cfg.n_layers + 3)
+    return {
+        "embed": init_embed(keys[0], cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "enc": [_init_enc_layer(keys[1 + i], cfg) for i in range(n_enc)],
+        "dec": [_init_dec_layer(keys[1 + n_enc + i], cfg)
+                for i in range(cfg.n_layers)],
+        "ln_enc": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": init_dense(keys[-1], cfg.d_model, cfg.vocab_size,
+                           dtype=cfg.pdtype),
+    }
+
+
+def _maybe_remat(fn, cfg):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames: (B, T_enc, d) precomputed frame embeddings (stub frontend)."""
+    x = frames.astype(cfg.adtype)
+
+    def layer(p, x):
+        h = bidir_attention_train(p["attn"], rmsnorm(p["ln1"], x),
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim_)
+        x = x + h
+        return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+    layer = _maybe_remat(layer, cfg)
+    for p in params["enc"]:
+        x = layer(p, x)
+    return rmsnorm(params["ln_enc"], x)
+
+
+def encdec_apply(params, frames, tokens, cfg: ModelConfig):
+    """Training forward: (frames (B,Te,d), tokens (B,Td)) -> logits."""
+    ctx = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens).astype(cfg.adtype)
+    for p in params["dec"]:
+        h = attention_train(p["attn"], rmsnorm(p["ln1"], x),
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+        x = x + h
+        h = cross_attention_train(p["xattn"], rmsnorm(p["lnx"], x), ctx,
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim_)
+        x = x + h
+        x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+    x = rmsnorm(params["ln_f"], x)
+    logits = (x @ params["head"]["w"]).astype(jnp.float32)
+    return logits, jnp.float32(0.0)
+
+
+def encdec_loss(params, frames, tokens, labels, cfg: ModelConfig):
+    from repro.models.lm import chunked_ce
+    ctx = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens).astype(cfg.adtype)
+
+    def layer(p, x):
+        h = attention_train(p["attn"], rmsnorm(p["ln1"], x),
+                            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+                            head_dim=cfg.head_dim_, rope_theta=cfg.rope_theta)
+        x = x + h
+        h = cross_attention_train(p["xattn"], rmsnorm(p["lnx"], x), ctx,
+                                  n_heads=cfg.n_heads,
+                                  n_kv_heads=cfg.n_kv_heads,
+                                  head_dim=cfg.head_dim_)
+        x = x + h
+        return x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+
+    layer_fn = _maybe_remat(layer, cfg)
+    for p in params["dec"]:
+        x = layer_fn(p, x)
+    x = rmsnorm(params["ln_f"], x)
+    return chunked_ce(x, params["head"]["w"], labels, cfg)
+
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    """Self-attn caches per decoder layer + precomputed cross K/V slots."""
+    return {
+        "self": [init_kv_cache(batch, max_len, cfg.n_kv_heads, cfg.head_dim_,
+                               dtype) for _ in range(cfg.n_layers)],
+        "cross_kv": [init_kv_cache(batch, cfg.enc_context, cfg.n_kv_heads,
+                                   cfg.head_dim_, dtype)
+                     for _ in range(cfg.n_layers)],
+    }
+
+
+def precompute_cross_kv(params, ctx, cfg: ModelConfig, dtype=jnp.bfloat16):
+    """Fill the cross-attention K/V cache from encoder outputs once."""
+    out = []
+    B, T, _ = ctx.shape
+    for p in params["dec"]:
+        k = dense(p["xattn"]["wk"], ctx).reshape(B, T, cfg.n_kv_heads,
+                                                 cfg.head_dim_)
+        v = dense(p["xattn"]["wv"], ctx).reshape(B, T, cfg.n_kv_heads,
+                                                 cfg.head_dim_)
+        out.append({"k": k.astype(dtype), "v": v.astype(dtype)})
+    return out
+
+
+def encdec_decode_step(params, cache, token, index, cfg: ModelConfig):
+    """One decoder token against self-cache(index) + fixed cross K/V."""
+    x = embed(params["embed"], token).astype(cfg.adtype)
+    new_self = []
+    for li, p in enumerate(params["dec"]):
+        h, nc = attention_decode(p["attn"], rmsnorm(p["ln1"], x),
+                                 cache["self"][li], index,
+                                 n_heads=cfg.n_heads,
+                                 n_kv_heads=cfg.n_kv_heads,
+                                 head_dim=cfg.head_dim_,
+                                 rope_theta=cfg.rope_theta)
+        x = x + h
+        new_self.append(nc)
+        # cross attention against the precomputed encoder K/V
+        B = x.shape[0]
+        q = dense(p["xattn"]["wq"], rmsnorm(p["lnx"], x)).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim_)
+        ck = cache["cross_kv"][li]["k"]
+        cv = cache["cross_kv"][li]["v"]
+        mask = jnp.ones((1, 1, 1, ck.shape[1]), dtype=bool)
+        h = _sdpa(q, ck, cv, mask)
+        h = dense(p["xattn"]["wo"], h.reshape(B, 1, cfg.n_heads * cfg.head_dim_))
+        x = x + h
+        x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x))
+    x = rmsnorm(params["ln_f"], x)
+    logits = (x @ params["head"]["w"]).astype(jnp.float32)
+    return logits, {"self": new_self, "cross_kv": cache["cross_kv"]}

@@ -1,0 +1,260 @@
+"""Unified decoder LM: block-pattern periods scanned over depth.
+
+Covers dense GQA (phi3/deepseek/qwen2.5), local/global alternation + softcaps
+(gemma2), MoE (kimi-k2, llama4), pure SSM (falcon-mamba), hybrid 1:7
+attn:mamba + MoE (jamba), and the VLM backbone (internvl2 — patch-embedding
+stub prepended). Depth is `jax.lax.scan` over stacked period parameters:
+HLO size stays O(period), which keeps 512-device SPMD compiles tractable
+and is what a production framework does (MaxText-style).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.nn.attention import (attention_decode, attention_train,
+                                init_attention, init_kv_cache)
+from repro.nn.layers import embed, init_dense, init_embed, init_rmsnorm, rmsnorm
+from repro.nn.layers import softcap as apply_softcap
+from repro.nn.mamba import (init_mamba, init_mamba_cache, mamba_decode,
+                            mamba_train)
+from repro.nn.moe import init_moe, init_swiglu, moe_apply, swiglu
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(rng, cfg: ModelConfig, spec):
+    ks = jax.random.split(rng, 4)
+    p = {"ln1": init_rmsnorm(cfg.d_model, cfg.pdtype),
+         "ln2": init_rmsnorm(cfg.d_model, cfg.pdtype)}
+    if spec.mixer in ("attn", "attn_local"):
+        p["attn"] = init_attention(ks[0], cfg.d_model, cfg.n_heads,
+                                   cfg.n_kv_heads, cfg.head_dim_,
+                                   cfg.qkv_bias, cfg.pdtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = init_mamba(ks[0], cfg.d_model, cfg.d_inner, cfg.d_state,
+                                cfg.d_conv, cfg.dt_rank, cfg.pdtype)
+    else:
+        raise ValueError(spec.mixer)
+    if spec.mlp == "dense":
+        p["mlp"] = init_swiglu(ks[1], cfg.d_model, cfg.d_ff, cfg.pdtype)
+    elif spec.mlp == "moe":
+        p["moe"] = init_moe(ks[1], cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.top_k, cfg.n_shared_experts, cfg.pdtype)
+    elif spec.mlp != "none":
+        raise ValueError(spec.mlp)
+    return p
+
+
+def init_lm(rng, cfg: ModelConfig):
+    k_embed, k_head, k_layers = jax.random.split(rng, 3)
+    period_keys = jax.random.split(k_layers, cfg.n_periods)
+
+    def init_period(k):
+        pks = jax.random.split(k, cfg.period)
+        return tuple(_init_block(pks[i], cfg, spec)
+                     for i, spec in enumerate(cfg.blocks))
+
+    stacked = jax.vmap(init_period)(period_keys)   # leading axis = n_periods
+    return {
+        "embed": init_embed(k_embed, cfg.vocab_size, cfg.d_model, cfg.pdtype),
+        "layers": stacked,
+        "ln_f": init_rmsnorm(cfg.d_model, cfg.pdtype),
+        "head": init_dense(k_head, cfg.d_model, cfg.vocab_size,
+                           dtype=cfg.pdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill forward
+# ---------------------------------------------------------------------------
+
+def _block_train(p, x, cfg: ModelConfig, spec, aux):
+    h = rmsnorm(p["ln1"], x)
+    if spec.mixer == "attn":
+        h = attention_train(p["attn"], h, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                            rope_theta=cfg.rope_theta,
+                            attn_softcap=cfg.attn_softcap)
+    elif spec.mixer == "attn_local":
+        h = attention_train(p["attn"], h, n_heads=cfg.n_heads,
+                            n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                            rope_theta=cfg.rope_theta, window=cfg.window,
+                            attn_softcap=cfg.attn_softcap)
+    else:
+        h = mamba_train(p["mamba"], h, d_inner=cfg.d_inner,
+                        d_state=cfg.d_state, d_conv=cfg.d_conv,
+                        dt_rank=cfg.dt_rank)
+    x = x + h
+    if spec.mlp == "none":
+        return x, aux
+    h = rmsnorm(p["ln2"], x)
+    if spec.mlp == "dense":
+        h = swiglu(p["mlp"], h)
+    else:
+        h, a = moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                         top_k=cfg.top_k, capacity_factor=cfg.capacity_factor)
+        aux = aux + a
+    return x + h, aux
+
+
+def _period_train(cfg: ModelConfig):
+    def fn(carry, period_params):
+        x, aux = carry
+        for i, spec in enumerate(cfg.blocks):
+            x, aux = _block_train(period_params[i], x, cfg, spec, aux)
+        return (x, aux), None
+    return fn
+
+
+def lm_hidden(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    """tokens: (B, S) -> hidden states (B, S, d); aux losses."""
+    from repro.distributed.context import constrain
+    x = embed(params["embed"], tokens).astype(cfg.adtype)
+    # activations live (batch: DP, seq: None, d: None) — without this the
+    # FSDP-sharded embedding gather leaks its "data"-sharded d dim into the
+    # activations and the batch axis silently unshards (115 GB/device
+    # scan-saved residuals observed on kimi-k2; EXPERIMENTS.md §Dry-run).
+    x = constrain(x, "dp", None, None)
+    if cfg.frontend is not None and patch_embeds is not None:
+        # VLM/audio stub: precomputed frontend embeddings replace the first
+        # n_frontend_tokens positions (input_specs supplies them).
+        nf = patch_embeds.shape[1]
+        x = jnp.concatenate([patch_embeds.astype(cfg.adtype), x[:, nf:]],
+                            axis=1)
+
+    period = _period_train(cfg)
+
+    def fn(carry, period_params):
+        x, aux = carry
+        # blocks compute in the full-sequence domain (batch: DP)
+        x = constrain(x, "dp", None, None)
+        (x, aux), _ = period((x, aux), period_params)
+        # carry leaves the period SEQUENCE-SHARDED over "model" (Megatron
+        # SP): the remat-saved residual stack shrinks by the TP degree
+        # (106 GiB -> ~7 GiB/device on kimi-k2) at the cost of one
+        # all-gather per period — see EXPERIMENTS.md §Perf.
+        x = constrain(x, "dp", "model", None)
+        return (x, aux), None
+
+    if cfg.remat:
+        fn = jax.checkpoint(fn)
+    (x, aux), _ = jax.lax.scan(fn, (x, jnp.float32(0.0)), params["layers"])
+    x = constrain(x, "dp", None, None)
+    return rmsnorm(params["ln_f"], x), aux
+
+
+def lm_apply(params, tokens, cfg: ModelConfig, patch_embeds=None):
+    """Full forward to logits (B, S, V)."""
+    x, aux = lm_hidden(params, tokens, cfg, patch_embeds)
+    logits = x @ params["head"]["w"]
+    return apply_softcap(logits.astype(jnp.float32), cfg.final_softcap), aux
+
+
+def chunked_ce(x, head_w, labels, cfg: ModelConfig):
+    """Cross entropy with seq-chunked logits: the (B,S,V) f32 tensor never
+    materializes for big-vocab configs (memory-roofline fix, §Perf)."""
+
+    def ce(xc, yc):
+        logits = xc @ head_w
+        logits = apply_softcap(logits.astype(jnp.float32), cfg.final_softcap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        return (logz - gold).mean()
+
+    chunk = cfg.loss_chunk
+    if chunk and x.shape[1] % chunk == 0 and x.shape[1] > chunk:
+        n_chunks = x.shape[1] // chunk
+        xs = x.reshape(x.shape[0], n_chunks, chunk, -1)
+        ys = labels.reshape(labels.shape[0], n_chunks, chunk)
+
+        def body(carry, inp):
+            xc, yc = inp
+            return carry + ce(xc, yc), None
+
+        total, _ = jax.lax.scan(
+            body, jnp.float32(0.0),
+            (jnp.moveaxis(xs, 1, 0), jnp.moveaxis(ys, 1, 0)))
+        return total / n_chunks
+    return ce(x, labels)
+
+
+def lm_loss(params, tokens, labels, cfg: ModelConfig, patch_embeds=None):
+    """Next-token cross entropy; optional seq-chunked logits (big vocabs)."""
+    x, aux = lm_hidden(params, tokens, cfg, patch_embeds)
+    loss = chunked_ce(x, params["head"]["w"], labels, cfg)
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Decode (KV/SSM caches, one token per step)
+# ---------------------------------------------------------------------------
+
+def init_lm_cache(cfg: ModelConfig, batch: int, max_len: int,
+                  dtype=jnp.bfloat16):
+    """Stacked per-period caches. attn_local layers keep a rolling window."""
+
+    def one_period(_):
+        caches = []
+        for spec in cfg.blocks:
+            if spec.mixer == "attn":
+                caches.append(init_kv_cache(batch, max_len, cfg.n_kv_heads,
+                                            cfg.head_dim_, dtype))
+            elif spec.mixer == "attn_local":
+                caches.append(init_kv_cache(batch, min(cfg.window, max_len),
+                                            cfg.n_kv_heads, cfg.head_dim_,
+                                            dtype))
+            else:
+                caches.append(init_mamba_cache(batch, cfg.d_inner, cfg.d_state,
+                                               cfg.d_conv, dtype))
+        return tuple(caches)
+
+    return jax.vmap(one_period)(jnp.arange(cfg.n_periods))
+
+
+def lm_decode_step(params, cache, token, index, cfg: ModelConfig):
+    """token: (B,1) int32; index: scalar current position.
+    Returns (logits (B,1,V), new_cache)."""
+    x = embed(params["embed"], token).astype(cfg.adtype)
+
+    def period_fn(carry, inp):
+        x = carry
+        pparams, pcache = inp
+        new_caches = []
+        for i, spec in enumerate(cfg.blocks):
+            p = pparams[i]
+            h = rmsnorm(p["ln1"], x)
+            if spec.mixer in ("attn", "attn_local"):
+                h, nc = attention_decode(
+                    p["attn"], h, pcache[i], index, n_heads=cfg.n_heads,
+                    n_kv_heads=cfg.n_kv_heads, head_dim=cfg.head_dim_,
+                    rope_theta=cfg.rope_theta,
+                    window=cfg.window if spec.mixer == "attn_local" else 0,
+                    attn_softcap=cfg.attn_softcap)
+            else:
+                h, nc = mamba_decode(p["mamba"], h, pcache[i],
+                                     d_inner=cfg.d_inner, d_state=cfg.d_state,
+                                     d_conv=cfg.d_conv, dt_rank=cfg.dt_rank)
+            x = x + h
+            if spec.mlp != "none":
+                h = rmsnorm(p["ln2"], x)
+                if spec.mlp == "dense":
+                    h = swiglu(p["mlp"], h)
+                else:
+                    h, _ = moe_apply(p["moe"], h, n_experts=cfg.n_experts,
+                                     top_k=cfg.top_k,
+                                     capacity_factor=cfg.capacity_factor)
+                x = x + h
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(period_fn, x, (params["layers"], cache))
+    x = rmsnorm(params["ln_f"], x)
+    logits = x @ params["head"]["w"]
+    return apply_softcap(logits.astype(jnp.float32), cfg.final_softcap), new_cache

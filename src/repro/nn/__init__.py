@@ -1,0 +1,9 @@
+"""Minimal functional NN substrate: param pytrees + pure apply functions.
+
+No flax/haiku dependency: every module is an `init_*(rng, ...) -> params`
+plus a pure `apply`-style function. Params are nested dicts whose leaf path
+names drive the sharding rules in distributed/sharding.py.
+"""
+
+from repro.nn.layers import (dense, embed, init_dense, init_embed,
+                             init_rmsnorm, rmsnorm)

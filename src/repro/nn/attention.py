@@ -1,0 +1,160 @@
+"""GQA attention: training (causal, optional sliding window / softcap /
+cross-attention) and decode (KV cache, flash-decode kernel optional)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import dense, init_dense, softcap
+from repro.nn.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool = False, dtype=jnp.float32):
+    ks = jax.random.split(rng, 4)
+    return {
+        "wq": init_dense(ks[0], d_model, n_heads * head_dim, qkv_bias, dtype),
+        "wk": init_dense(ks[1], d_model, n_kv_heads * head_dim, qkv_bias, dtype),
+        "wv": init_dense(ks[2], d_model, n_kv_heads * head_dim, qkv_bias, dtype),
+        "wo": init_dense(ks[3], n_heads * head_dim, d_model, False, dtype),
+    }
+
+
+def _qkv(p, x, n_heads, n_kv_heads, head_dim):
+    B, S, _ = x.shape
+    q = dense(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = dense(p["wk"], x).reshape(B, S, n_kv_heads, head_dim)
+    v = dense(p["wv"], x).reshape(B, S, n_kv_heads, head_dim)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, attn_softcap: float = 0.0):
+    """q: (B,S,H,dh); k,v: (B,T,Hkv,dh); mask broadcastable to (B,Hkv,G,S,T)
+    via trailing (S,T) dims (e.g. (1,1,S,T) or (1,1,1,S,T))."""
+    B, S, H, dh = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, S, Hkv, G, dh)
+    scores = jnp.einsum("bshgd,bthd->bhgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * (dh ** -0.5)
+    scores = softcap(scores, attn_softcap)
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, dh).astype(q.dtype)
+
+
+def causal_mask(S: int, window: int = 0):
+    """(1, S, S) causal mask; window>0 adds a sliding-window band."""
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window > 0:
+        m = m & (j > i - window)
+    return m[None]
+
+
+# sequences at or above this length take the blocked (flash) path
+FLASH_THRESHOLD = 2048
+
+
+def attention_train(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta=1e4,
+                    window: int = 0, attn_softcap: float = 0.0,
+                    positions=None, use_rope: bool = True):
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv_heads, head_dim)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    if S >= FLASH_THRESHOLD and S % 1024 == 0:
+        from repro.nn.flash import flash_attention
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              softcap=attn_softcap)
+    else:
+        mask = causal_mask(S, window)[:, None]  # (1,1,S,T), broadcasts
+        out = _sdpa(q, k, v, mask, attn_softcap)
+    return dense(p["wo"], out.reshape(B, S, n_heads * head_dim))
+
+
+def cross_attention_train(p, x, ctx, *, n_heads, n_kv_heads, head_dim):
+    """Encoder-decoder cross attention (no mask, no rope)."""
+    B, S, _ = x.shape
+    T = ctx.shape[1]
+    q = dense(p["wq"], x).reshape(B, S, n_heads, head_dim)
+    k = dense(p["wk"], ctx).reshape(B, T, n_kv_heads, head_dim)
+    v = dense(p["wv"], ctx).reshape(B, T, n_kv_heads, head_dim)
+    if S >= FLASH_THRESHOLD and S % 1024 == 0 and T % 1024 == 0:
+        from repro.nn.flash import flash_attention
+        out = flash_attention(q, k, v, causal=False)
+    else:
+        mask = jnp.ones((1, 1, S, T), dtype=bool)
+        out = _sdpa(q, k, v, mask)
+    return dense(p["wo"], out.reshape(B, S, n_heads * head_dim))
+
+
+def bidir_attention_train(p, x, *, n_heads, n_kv_heads, head_dim):
+    """Encoder self-attention (bidirectional, no rope — whisper style)."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, n_heads, n_kv_heads, head_dim)
+    if S >= FLASH_THRESHOLD and S % 1024 == 0:
+        from repro.nn.flash import flash_attention
+        out = flash_attention(q, k, v, causal=False)
+    else:
+        mask = jnp.ones((1, 1, S, S), dtype=bool)
+        out = _sdpa(q, k, v, mask)
+    return dense(p["wo"], out.reshape(B, S, n_heads * head_dim))
+
+
+# ---------------------------------------------------------------------------
+# Decode path (KV cache, one token)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(batch: int, max_len: int, n_kv_heads: int, head_dim: int,
+                  dtype=jnp.bfloat16):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype=dtype),
+        "v": jnp.zeros((batch, max_len, n_kv_heads, head_dim), dtype=dtype),
+    }
+
+
+def attention_decode(p, x, cache, index, *, n_heads, n_kv_heads, head_dim,
+                     rope_theta=1e4, window: int = 0,
+                     attn_softcap: float = 0.0, use_rope: bool = True,
+                     use_kernel: bool = False):
+    """One-token decode. x: (B, 1, d); cache k/v: (B, S_max, Hkv, dh);
+    index: scalar int32 — current length (position of the new token).
+
+    For window > 0 the cache is a rolling buffer of size window (the
+    gemma2 local layers); positions are still absolute via `index`.
+    Returns (out (B,1,d), new_cache).
+    """
+    B = x.shape[0]
+    S_max = cache["k"].shape[1]
+    q = dense(p["wq"], x).reshape(B, 1, n_heads, head_dim)
+    k_new = dense(p["wk"], x).reshape(B, 1, n_kv_heads, head_dim)
+    v_new = dense(p["wv"], x).reshape(B, 1, n_kv_heads, head_dim)
+    pos = jnp.full((B, 1), index, dtype=jnp.int32)
+    if use_rope:
+        q = apply_rope(q, pos, rope_theta)
+        k_new = apply_rope(k_new, pos, rope_theta)
+    slot = index % S_max if window > 0 else index
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    length = jnp.minimum(index + 1, S_max)
+    if use_kernel:
+        from repro.kernels.decode_attn import decode_attention
+        out = decode_attention(q[:, 0], k, v, length,
+                               softcap=attn_softcap)[:, None]
+    else:
+        j = jnp.arange(S_max)[None, None, None, :]
+        mask = j < length
+        out = _sdpa(q, k, v, mask, attn_softcap)
+    out = dense(p["wo"], out.reshape(B, 1, n_heads * head_dim))
+    return out, {"k": k, "v": v}

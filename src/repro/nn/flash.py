@@ -1,0 +1,84 @@
+"""Blocked (flash-style) attention in pure jnp — the train/prefill memory fix.
+
+Nested lax.scan over (q blocks x kv blocks) with online-softmax state keeps
+the largest live intermediate at (B, H, q_block, kv_block) instead of
+(B, H, S, S): mandatory for the 32k prefill cells and the 4k trains at
+production batch. The math is identical to _sdpa (tests assert allclose);
+on TPU the same schedule is what a Pallas flash kernel would do — this is
+the jnp twin that the 512-device dry-run lowers (DESIGN.md §8).
+
+GQA: KV blocks are repeated to full heads inside the block (working-set
+stays (kv_block); HBM never sees the repeated tensor after fusion).
+Sharding: batch over DP axes, heads over "model" (configs pad head counts
+to mesh-divisible; see launch/pad.py), so the scan body partitions cleanly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.layers import softcap as apply_softcap
+
+NEG_INF = -1e30
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                              "q_block", "kv_block"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, q_block: int = 256,
+                    kv_block: int = 1024):
+    """q: (B,Sq,H,dh); k,v: (B,Skv,Hkv,dh) -> (B,Sq,H,dh)."""
+    B, Sq, H, dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = dh ** -0.5
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    assert Sq % q_block == 0 and Skv % kv_block == 0
+    nq, nk = Sq // q_block, Skv // kv_block
+
+    kb = jnp.moveaxis(k.reshape(B, nk, kv_block, Hkv, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nk, kv_block, Hkv, dh), 1, 0)
+    qb = jnp.moveaxis(q.reshape(B, nq, q_block, H, dh), 1, 0)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx                      # (B,qblk,H,dh), scalar
+        qpos = iq * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kv_and_idx):
+            m, l, acc = carry
+            ki, vi, ik = kv_and_idx
+            kpos = ik * kv_block + jnp.arange(kv_block)
+            kh = jnp.repeat(ki, G, axis=2)       # (B,kvblk,H,dh)
+            vh = jnp.repeat(vi, G, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qi.astype(jnp.float32),
+                           kh.astype(jnp.float32)) * scale
+            s = apply_softcap(s, softcap)
+            mask = jnp.ones((q_block, kv_block), dtype=bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window > 0:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vh.astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_block), jnp.float32)
+        a0 = jnp.zeros((B, H, q_block, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0), (kb, vb, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B,qblk,H,dh)
+
+    _, blocks = jax.lax.scan(q_step, None, (qb, jnp.arange(nq)))
+    # blocks: (nq, B, q_block, H, dh) -> (B, Sq, H, dh)
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, dh)

@@ -1,0 +1,48 @@
+"""Core layers: dense, embedding, RMSNorm."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(rng, d_in: int, d_out: int, bias: bool = False,
+               dtype=jnp.float32, scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    p = {"w": (jax.random.normal(rng, (d_in, d_out)) * scale).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype=dtype)
+    return p
+
+
+def dense(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def init_embed(rng, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": (jax.random.normal(rng, (vocab, d)) * 1.0).astype(dtype)}
+
+
+def embed(p, ids):
+    return jnp.take(p["table"], ids, axis=0)
+
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def softcap(x, cap: float):
+    return cap * jnp.tanh(x / cap) if cap > 0 else x

@@ -1,0 +1,91 @@
+"""Mamba-1 block (falcon-mamba, jamba's SSM layers).
+
+in_proj -> (x, z); causal depthwise conv (d_conv taps); x_proj -> (dt,B,C);
+selective scan (kernels/selective_scan, ref on CPU); silu(z) gate; out_proj.
+Decode keeps a (d_conv-1)-tap conv state and the (D, N) ssm state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.selective_scan.ops import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_step_ref
+from repro.nn.layers import init_dense, silu
+
+
+def init_mamba(rng, d_model: int, d_inner: int, d_state: int, d_conv: int,
+               dt_rank: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 7)
+    return {
+        "in_proj": init_dense(ks[0], d_model, 2 * d_inner, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[1], (d_conv, d_inner)) *
+                   (d_conv ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype=dtype),
+        "x_proj": init_dense(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": init_dense(ks[3], dt_rank, d_inner, bias=True, dtype=dtype),
+        # S4D-real init: A = -(1..N) per channel
+        "a_log": jnp.log(jnp.tile(jnp.arange(1, d_state + 1,
+                                             dtype=jnp.float32)[None],
+                                  (d_inner, 1))),
+        "d_skip": jnp.ones((d_inner,), dtype=jnp.float32),
+        "out_proj": init_dense(ks[4], d_inner, d_model, dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b):
+    """x: (B,T,D); w: (K,D) depthwise; left-pad K-1."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :]
+
+
+def _ssm_params(p, xc, d_state, dt_rank):
+    proj = xc @ p["x_proj"]["w"]                               # (B,T,R+2N)
+    dt_r, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"]["w"] + p["dt_proj"]["b"])
+    a = -jnp.exp(p["a_log"])                                   # (D, N)
+    return dt, a, b_mat, c_mat
+
+
+def mamba_train(p, x, *, d_inner, d_state, d_conv, dt_rank,
+                use_kernel: bool = False):
+    """x: (B,T,d_model) -> (B,T,d_model)."""
+    xz = x @ p["in_proj"]["w"]
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xc = silu(_causal_conv(xin, p["conv_w"], p["conv_b"]))
+    dt, a, b_mat, c_mat = _ssm_params(p, xc, d_state, dt_rank)
+    y = selective_scan(xc.astype(jnp.float32), dt.astype(jnp.float32), a,
+                       b_mat.astype(jnp.float32), c_mat.astype(jnp.float32),
+                       p["d_skip"], use_pallas=use_kernel)
+    y = y.astype(x.dtype) * silu(z)
+    return y @ p["out_proj"]["w"]
+
+
+def init_mamba_cache(batch: int, d_inner: int, d_state: int, d_conv: int,
+                     dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_inner), dtype=dtype),
+        "ssm": jnp.zeros((batch, d_inner, d_state), dtype=jnp.float32),
+    }
+
+
+def mamba_decode(p, x, cache, *, d_inner, d_state, d_conv, dt_rank):
+    """One-token step. x: (B,1,d_model) -> (y (B,1,d_model), new cache)."""
+    B = x.shape[0]
+    xz = x[:, 0] @ p["in_proj"]["w"]
+    xin, z = jnp.split(xz, 2, axis=-1)                         # (B, d_inner)
+    window = jnp.concatenate([cache["conv"],
+                              xin[:, None].astype(cache["conv"].dtype)], axis=1)
+    xc = (window * p["conv_w"][None]).sum(axis=1) + p["conv_b"]
+    xc = silu(xc)
+    dt, a, b_mat, c_mat = _ssm_params(p, xc[:, None], d_state, dt_rank)
+    h, y = selective_scan_step_ref(cache["ssm"], xc.astype(jnp.float32),
+                                   dt[:, 0].astype(jnp.float32), a,
+                                   b_mat[:, 0].astype(jnp.float32),
+                                   c_mat[:, 0].astype(jnp.float32), p["d_skip"])
+    y = y.astype(x.dtype) * silu(z)
+    out = (y @ p["out_proj"]["w"])[:, None]
+    return out, {"conv": window[:, 1:], "ssm": h}

@@ -1,0 +1,135 @@
+"""Mixture-of-Experts layer: top-k routing with capacity, group-local
+dispatch (GShard-style grouping) + gather-based combine.
+
+Design notes (learned the hard way on the 1T kimi-k2 dry-run — see
+EXPERIMENTS.md §Dry-run):
+  * tokens are grouped by batch row (G = B); every dispatch gather and its
+    backward scatter stays INSIDE a data shard, so the SPMD partitioner
+    never replicates a (tokens, d_model) buffer or inserts per-layer
+    all-reduces of it (observed 30 GB f32 all-reduces with a global
+    scatter combine);
+  * the combine is a GATHER back through the slot map (scatter only in the
+    backward, and only group-local);
+  * expert weights (E, d, f) shard E over "model" (EP) and d over "data"
+    (FSDP); dispatch buffers (G, E, C, d) shard G over DP and E over model
+    via context constraints;
+  * no (T, E, C) one-hot dispatch tensor is ever materialized — position-
+    in-expert comes from a per-group stable argsort (O(S*k) memory).
+
+Vault-group analogy (DESIGN.md §3): experts = column partitions spread
+over a device group; the router (small, replicated) is Strategy 3's
+replicated dictionary.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.context import constrain
+from repro.nn.layers import init_dense, silu
+
+
+def init_moe(rng, d_model: int, d_ff: int, n_experts: int, top_k: int,
+             n_shared: int = 0, dtype=jnp.float32):
+    ks = jax.random.split(rng, 5)
+    scale = d_model ** -0.5
+    p = {
+        "router": init_dense(ks[0], d_model, n_experts, dtype=jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (n_experts, d_model, d_ff))
+                   * scale).astype(dtype),
+        "w_up": (jax.random.normal(ks[2], (n_experts, d_model, d_ff))
+                 * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[3], (n_experts, d_ff, d_model))
+                   * (d_ff ** -0.5)).astype(dtype),
+    }
+    if n_shared > 0:
+        p["shared"] = init_swiglu(ks[4], d_model, d_ff * n_shared, dtype)
+    return p
+
+
+def init_swiglu(rng, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    return {
+        "w_gate": init_dense(ks[0], d_model, d_ff, dtype=dtype),
+        "w_up": init_dense(ks[1], d_model, d_ff, dtype=dtype),
+        "w_down": init_dense(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p, x):
+    return (silu(x @ p["w_gate"]["w"]) * (x @ p["w_up"]["w"])) @ p["w_down"]["w"]
+
+
+def _positions_in_expert(flat_expert: jnp.ndarray, n_experts: int):
+    """(N,) expert ids -> (N,) arrival rank within each expert (stable)."""
+    n = flat_expert.shape[0]
+    order = jnp.argsort(flat_expert, stable=True)
+    sorted_e = flat_expert[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(n_experts))
+    pos_sorted = jnp.arange(n, dtype=jnp.int32) - seg_start[sorted_e]
+    return jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted)
+
+
+def moe_apply(p, x, *, n_experts: int, top_k: int,
+              capacity_factor: float = 1.25, router_z_weight: float = 1e-3):
+    """x: (B, S, d) -> (y, aux_loss). Group-local dispatch: G = B when S is
+    long enough to fill experts, else one global group."""
+    B, S, d = x.shape
+    E = n_experts
+    if S * top_k >= 4 * n_experts:
+        xg = x                               # groups = batch rows
+    else:
+        xg = x.reshape(1, B * S, d)          # small token counts: one group
+    G, Sg, _ = xg.shape
+    C = max(1, int(Sg * top_k * capacity_factor / E))
+    C = min(Sg, ((C + 7) // 8) * 8)
+
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32),
+                        p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)        # (G,Sg,k)
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = gate_idx.reshape(G, Sg * top_k)
+    pos = jax.vmap(lambda fe: _positions_in_expert(fe, E))(flat_e)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)          # E*C = drop slot
+
+    # dispatch index map (G, E*C) -> token position in group (Sg = pad row)
+    token_of = jnp.tile(
+        jnp.repeat(jnp.arange(Sg, dtype=jnp.int32), top_k)[None], (G, 1))
+    idx = jnp.full((G, E * C + 1), Sg, dtype=jnp.int32)
+    idx = jax.vmap(lambda i, s, t: i.at[s].set(t, mode="drop"))(
+        idx, slot, token_of)
+    idx = idx[:, : E * C]
+
+    xp = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    xe = jnp.take_along_axis(xp, idx[..., None], axis=1)     # (G, E*C, d)
+    xe = xe.reshape(G, E, C, d)
+    xe = constrain(xe, "dp", "model", None, None)
+
+    h = silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    h = constrain(h, "dp", "model", None, None)
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])        # (G, E, C, d)
+    ye = constrain(ye, "dp", "model", None, None)
+
+    # combine: gather each token's k slots back (zero row for drops).
+    # Stay in the activation dtype: an f32 (T,k,d) here doubles the
+    # cross-model-shard all-reduce (EXPERIMENTS.md §Perf iteration 1).
+    ye_flat = jnp.concatenate(
+        [ye.reshape(G, E * C, d), jnp.zeros((G, 1, d), ye.dtype)], axis=1)
+    yk = jnp.take_along_axis(ye_flat, slot[..., None], axis=1)  # (G,Sg*k,d)
+    yk = yk.reshape(G, Sg, top_k, d)
+    y = (yk * gate_vals[..., None].astype(yk.dtype)).sum(axis=2)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], xg)
+
+    # load-balancing aux loss (Switch) + router z-loss
+    me = probs.mean(axis=(0, 1))
+    ce = jax.nn.one_hot(gate_idx[..., 0], E).mean(axis=(0, 1))
+    aux = E * jnp.sum(me * ce) \
+        + router_z_weight * jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return y.reshape(B, S, d).astype(x.dtype), aux

@@ -1,0 +1,23 @@
+"""Optimizers (no optax dependency): AdamW and Adafactor.
+
+Both keep their states in the same sharding as the parameters (the
+param_shardings tree applies leaf-wise), so ZeRO-style state sharding
+falls out of FSDP. Models >100B default to Adafactor (factored second
+moment, no momentum) to fit the HBM budget — see EXPERIMENTS.md §Dry-run.
+"""
+
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+
+
+def get_optimizer(name: str, lr: float = 1e-4, **kw):
+    if name == "adamw":
+        return adamw(lr=lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr=lr, **kw)
+    raise ValueError(name)
+
+
+def default_optimizer_for(param_count: int) -> str:
+    """>100B params: factored states (kimi-k2, jamba, llama4)."""
+    return "adafactor" if param_count > 100e9 else "adamw"

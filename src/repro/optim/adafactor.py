@@ -1,0 +1,58 @@
+"""Adafactor (factored second moments, no momentum) — the >100B default.
+
+State per matrix-like leaf: row/col second-moment factors over the last two
+dims (leading stacked-period/expert dims are kept). Vectors keep a full
+second moment. Updates are RMS-clipped (Shazeer & Stern, 2018).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adafactor(lr: float = 1e-4, decay: float = 0.8, eps: float = 1e-30,
+              clip_threshold: float = 1.0):
+    def init(params):
+        def one(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"f": jax.tree.map(one, params)}
+
+    def update(params, grads, state, step):
+        step = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - step ** (-decay)
+
+        def one(p, g, s):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = vr.mean(axis=-1, keepdims=True)
+                u = g / jnp.sqrt(
+                    (vr / jnp.maximum(denom, eps))[..., None]
+                    * vc[..., None, :] + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        leaves_p, tdef = jax.tree.flatten(params)
+        leaves_g = tdef.flatten_up_to(grads)
+        leaves_s = tdef.flatten_up_to(state["f"])
+        outs = [one(p, g, s) for p, g, s in zip(leaves_p, leaves_g, leaves_s)]
+        new_params = tdef.unflatten([o[0] for o in outs])
+        new_state = {"f": tdef.unflatten([o[1] for o in outs])}
+        return new_params, new_state
+
+    return init, update

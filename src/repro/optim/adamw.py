@@ -1,0 +1,53 @@
+"""AdamW with optional fp32 master weights for bf16 params."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.01,
+          master_weights: bool = True):
+    def init(params):
+        state = {
+            "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+        if master_weights:
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(params, grads, state, step):
+        step = step.astype(jnp.float32) + 1.0
+        bc1 = 1.0 - b1 ** step
+        bc2 = 1.0 - b2 ** step
+        has_master = "master" in state
+
+        leaves_p, tdef = jax.tree.flatten(params)
+        leaves_g = tdef.flatten_up_to(grads)
+        leaves_m = tdef.flatten_up_to(state["m"])
+        leaves_v = tdef.flatten_up_to(state["v"])
+        leaves_w = (tdef.flatten_up_to(state["master"]) if has_master
+                    else [p.astype(jnp.float32) for p in leaves_p])
+
+        new_p, new_m, new_v, new_w = [], [], [], []
+        for p, g, m, v, w in zip(leaves_p, leaves_g, leaves_m, leaves_v,
+                                 leaves_w):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps) + weight_decay * w
+            w = w - lr * u
+            new_p.append(w.astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+            new_w.append(w)
+
+        new_state = {"m": tdef.unflatten(new_m), "v": tdef.unflatten(new_v)}
+        if has_master:
+            new_state["master"] = tdef.unflatten(new_w)
+        return tdef.unflatten(new_p), new_state
+
+    return init, update

@@ -1,0 +1,101 @@
+"""Distribution layer: sharding rules + a real multi-device jit execution
+(8 forced host devices, subprocess-isolated so other tests see 1 device)."""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import jax
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config
+from repro.launch.steps import abstract_params, pad_for_mesh
+from repro.models.config import ModelConfig
+
+
+def test_flattened_head_dims_divide_model_axis():
+    """The TP sharding contract: H*hd and Hkv*hd divide 16 for every arch."""
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        if cfg.name.startswith("falcon"):
+            continue  # attn-free
+        assert (cfg.n_heads * cfg.head_dim_) % 16 == 0, name
+        assert (cfg.n_kv_heads * cfg.head_dim_) % 16 == 0, name
+        assert cfg.d_ff % 16 == 0 or cfg.d_ff == 0, name
+
+
+def test_vocab_padding():
+    cfg = get_config("internvl2-26b")
+    padded = pad_for_mesh(cfg)
+    assert padded.vocab_size % 256 == 0
+    assert padded.vocab_size >= cfg.vocab_size
+    # already-divisible vocabs unchanged
+    cfg2 = get_config("kimi-k2-1t-a32b")
+    assert pad_for_mesh(cfg2).vocab_size == cfg2.vocab_size
+
+
+_SUBPROCESS_PROG = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_smoke_config
+    from repro.distributed.sharding import param_shardings, batch_spec
+    from repro.distributed.context import set_partitioning
+    from repro.launch.steps import make_train_step
+    from repro.models import init_lm
+    from repro.optim import get_optimizer
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    set_partitioning(mesh, ("data",))
+    cfg = get_smoke_config("gemma2-9b")
+    params = init_lm(jax.random.PRNGKey(0), cfg)
+    p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
+    params = jax.device_put(params, p_sh)
+    opt = get_optimizer("adamw", lr=1e-3)
+    opt_state = jax.jit(opt[0], out_shardings=None)(params)
+    step_fn = make_train_step(cfg, opt)
+    toks = jnp.zeros((4, 16), jnp.int32)
+    batch = {"tokens": toks, "labels": toks}
+    bs = NamedSharding(mesh, batch_spec(mesh))
+    batch = jax.device_put(batch, {"tokens": bs, "labels": bs})
+    jitted = jax.jit(step_fn, in_shardings=(p_sh, None, None,
+                                            {"tokens": bs, "labels": bs}))
+    p2, o2, metrics = jitted(params, opt_state, jnp.int32(0), batch)
+    # run a second step on the sharded outputs (round trip)
+    p3, o3, metrics2 = jitted(p2, o2, jnp.int32(1), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics2["loss"]))
+    assert float(metrics2["loss"]) < float(metrics["loss"]) + 1.0
+    print(json.dumps({"ok": True, "loss": float(metrics["loss"])}))
+""")
+
+
+def test_multidevice_train_step_executes():
+    """Real 8-device SPMD execution of a sharded train step (gemma2 smoke)."""
+    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROG],
+                         capture_output=True, text=True, timeout=600,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"]
+
+
+def test_hlo_analyzer_counts_loop_trips():
+    """Trip-count-aware accounting on a toy scan (the §Roofline source)."""
+    import jax.numpy as jnp
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def step(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((13, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    compiled = jax.jit(jax.grad(step)).lower(w, x).compile()
+    res = analyze_hlo(compiled.as_text())
+    expect = 3 * 13 * 2 * 4 * 64 * 64  # fwd + dgrad + wgrad, 13 trips
+    assert 0.9 * expect <= res["flops"] <= 1.2 * expect

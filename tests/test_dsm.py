@@ -1,0 +1,56 @@
+"""Dictionary-encoded column store: §5.2/§7.1 invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dsm import (DSMReplica, decode_column, encode_column,
+                            value_range_to_code_range)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=300))
+def test_encode_decode_roundtrip(values):
+    col = encode_column(np.array(values, dtype=np.int32))
+    np.testing.assert_array_equal(np.asarray(decode_column(col)),
+                                  np.array(values, dtype=np.int32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=200),
+       st.integers(0, 1000), st.integers(0, 1000))
+def test_order_preserving_predicate_pushdown(values, a, b):
+    """lo <= value <= hi  <=>  code_lo <= code < code_hi (no decode)."""
+    lo, hi = min(a, b), max(a, b)
+    col = encode_column(np.array(values, dtype=np.int32))
+    code_lo, code_hi = value_range_to_code_range(col, lo, hi)
+    codes = np.asarray(col.codes)
+    got = (codes >= int(code_lo)) & (codes < int(code_hi))
+    expect = (np.array(values) >= lo) & (np.array(values) <= hi)
+    np.testing.assert_array_equal(got, expect)
+
+
+def test_dictionary_sorted_and_codes_ordered(rng):
+    vals = rng.integers(0, 100, size=1000).astype(np.int32)
+    col = encode_column(vals)
+    d = np.asarray(col.dictionary)
+    assert (np.diff(d) > 0).all()          # sorted, unique
+    # order-preserving: value order == code order
+    v = np.asarray(decode_column(col))
+    c = np.asarray(col.codes)
+    order = np.argsort(v, kind="stable")
+    assert (np.diff(c[order]) >= 0).all()
+
+
+def test_replica_roundtrip(rng):
+    table = rng.integers(0, 50, size=(500, 4)).astype(np.int32)
+    rep = DSMReplica.from_table(table)
+    np.testing.assert_array_equal(rep.to_table(), table)
+    assert rep.encoded_bytes < table.nbytes  # compression actually helps
+
+
+def test_bit_width():
+    col = encode_column(np.arange(32, dtype=np.int32))
+    assert col.bit_width == 5
+    col2 = encode_column(np.zeros(10, dtype=np.int32))
+    assert col2.bit_width == 1

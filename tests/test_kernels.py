@@ -1,0 +1,138 @@
+"""Per-kernel allclose sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitonic_sort import sort_1024, sort_rows
+from repro.kernels.decode_attn import decode_attention
+from repro.kernels.decode_attn.ref import decode_attention_ref
+from repro.kernels.dict_ops import scan_filter_agg
+from repro.kernels.dict_ops.ref import scan_filter_agg_ref
+from repro.kernels.hash_probe import build_table, probe
+from repro.kernels.merge_runs import merge_sorted_pair, merge_sorted_runs
+from repro.kernels.selective_scan import selective_scan
+from repro.kernels.selective_scan.ref import selective_scan_ref
+from repro.kernels.snapshot_copy import snapshot_copy
+from repro.kernels.snapshot_copy.ref import snapshot_copy_ref
+
+
+@pytest.mark.parametrize("rows,width", [(8, 128), (16, 1024), (3, 100),
+                                        (1, 1024), (5, 513)])
+@pytest.mark.parametrize("dtype", [np.int32, np.float32])
+def test_bitonic_sort_sweep(rng, rows, width, dtype):
+    x = rng.integers(-1000, 1000, size=(rows, width)).astype(dtype)
+    got = np.asarray(sort_rows(jnp.asarray(x)))
+    np.testing.assert_array_equal(got, np.sort(x, axis=-1))
+
+
+def test_sort_1024_unit_is_sized_like_the_paper(rng):
+    v = rng.integers(0, 1 << 20, size=1024).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(sort_1024(jnp.asarray(v))),
+                                  np.sort(v))
+    with pytest.raises(AssertionError):
+        sort_1024(jnp.zeros(2048, jnp.int32))
+
+
+@pytest.mark.parametrize("k,length", [(2, 128), (4, 100), (8, 333), (3, 50)])
+def test_merge_runs_sweep(rng, k, length):
+    runs = [np.sort(rng.integers(0, 10**6, size=length).astype(np.int32))
+            for _ in range(k)]
+    mk, mi = merge_sorted_runs([jnp.asarray(r) for r in runs])
+    cat = np.concatenate(runs)
+    valid = np.asarray(mi) >= 0
+    got = np.asarray(mk)[valid]
+    np.testing.assert_array_equal(got, np.sort(cat))
+    np.testing.assert_array_equal(cat[np.asarray(mi)[valid]], got)
+
+
+@pytest.mark.parametrize("n_keys,n_queries", [(10, 64), (500, 1000),
+                                              (2000, 4096)])
+def test_hash_probe_sweep(rng, n_keys, n_queries):
+    keys = rng.choice(1 << 20, size=n_keys, replace=False).astype(np.int32)
+    vals = rng.integers(0, 1000, size=n_keys).astype(np.int32)
+    t = build_table(keys, vals)
+    qs = np.concatenate([keys[: n_keys // 2],
+                         rng.choice(1 << 20, size=n_queries - n_keys // 2)
+                         .astype(np.int32)])
+    got = np.asarray(probe(t, jnp.asarray(qs), default=-7))
+    kv = dict(zip(keys.tolist(), vals.tolist()))
+    exp = np.array([kv.get(int(q), -7) for q in qs], dtype=np.int32)
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("n,k", [(4096, 8), (10_000, 64), (100_000, 500)])
+def test_scan_filter_agg_sweep(rng, n, k):
+    fcodes = rng.integers(0, k, size=n).astype(np.int32)
+    acodes = rng.integers(0, k, size=n).astype(np.int32)
+    valid = rng.random(n) < 0.9
+    d = np.sort(rng.choice(10**6, size=k, replace=False)).astype(np.int32)
+    lo, hi = k // 4, 3 * k // 4
+    s, c = scan_filter_agg(jnp.asarray(fcodes), jnp.asarray(acodes),
+                           jnp.asarray(valid), jnp.asarray(d), lo, hi)
+    rs, rc = scan_filter_agg_ref(jnp.asarray(fcodes), jnp.asarray(acodes),
+                                 jnp.asarray(valid), jnp.asarray(d), lo, hi)
+    np.testing.assert_allclose(float(s), float(rs), rtol=1e-6)
+    assert int(c) == int(rc)
+
+
+@pytest.mark.parametrize("n,block", [(50_000, 8192), (8192, 1024),
+                                     (1000, 256)])
+def test_snapshot_copy_sweep(rng, n, block):
+    src = rng.integers(0, 100, size=n).astype(np.int32)
+    prev = rng.integers(0, 100, size=n).astype(np.int32)
+    n_chunks = (n + block - 1) // block
+    dirty = rng.integers(0, 2, size=n_chunks).astype(np.int32)
+    got = np.asarray(snapshot_copy(jnp.asarray(src), jnp.asarray(prev),
+                                   jnp.asarray(dirty), block=block))
+    exp = np.asarray(snapshot_copy_ref(jnp.asarray(src), jnp.asarray(prev),
+                                       jnp.asarray(dirty), block))
+    np.testing.assert_array_equal(got, exp)
+
+
+@pytest.mark.parametrize("B,T,D,N", [(1, 256, 128, 8), (2, 512, 256, 16)])
+def test_selective_scan_sweep(rng, B, T, D, N):
+    x = jnp.asarray(rng.normal(size=(B, T, D)).astype(np.float32))
+    dt = jnp.asarray(np.abs(rng.normal(size=(B, T, D))).astype(np.float32)
+                     * 0.1)
+    a = jnp.asarray(-np.abs(rng.normal(size=(D, N))).astype(np.float32))
+    b = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    c = jnp.asarray(rng.normal(size=(B, T, N)).astype(np.float32))
+    d = jnp.asarray(rng.normal(size=(D,)).astype(np.float32))
+    got = selective_scan(x, dt, a, b, c, d, d_block=min(128, D),
+                         t_block=min(256, T))
+    ref = selective_scan_ref(x, dt, a, b, c, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("H,Hkv,S,L,cap", [(8, 2, 1024, 777, 0.0),
+                                           (4, 4, 2048, 2048, 0.0),
+                                           (8, 1, 512, 100, 50.0)])
+def test_decode_attention_sweep(rng, H, Hkv, S, L, cap):
+    B, d = 2, 64
+    q = jnp.asarray(rng.normal(size=(B, H, d)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, d)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, d)).astype(np.float32))
+    got = decode_attention(q, k, v, jnp.int32(L), softcap=cap)
+    ref = decode_attention_ref(q, k, v, L, d ** -0.5, softcap=cap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_matches_sdpa(rng):
+    from repro.nn.attention import _sdpa, causal_mask
+    from repro.nn.flash import flash_attention
+    B, S, H, Hkv, dh = 2, 2048, 4, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, dh)).astype(np.float32))
+    for kw in [dict(causal=True), dict(causal=True, window=256),
+               dict(causal=False), dict(causal=True, softcap=30.0)]:
+        got = flash_attention(q, k, v, **kw)
+        m = causal_mask(S, kw.get("window", 0))[:, None] if kw["causal"] \
+            else jnp.ones((1, 1, S, S), bool)
+        ref = _sdpa(q, k, v, m, kw.get("softcap", 0.0))
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)

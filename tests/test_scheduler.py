@@ -1,0 +1,48 @@
+"""§7.2 scheduler: fine-grained pull + stealing vs the basic heuristic."""
+
+from repro.core.hwmodel import HMC_PARAMS
+from repro.core.placement import hybrid, local, remote
+from repro.core.scheduler import SEGMENT_ROWS, make_tasks, simulate
+
+
+def _skewed_queries(n_queries=8, n_rows=100_000):
+    # §9.4 setup: all queries hit the same column -> one busy group
+    return [(q, 0, n_rows) for q in range(n_queries)]
+
+
+def test_fine_grained_tasks_segment_count():
+    placement = hybrid(16)
+    tasks = make_tasks([(0, 0, 10_000)], placement, HMC_PARAMS, 4.0)
+    assert len(tasks) == (10_000 + SEGMENT_ROWS - 1) // SEGMENT_ROWS
+    coarse = make_tasks([(0, 0, 10_000)], placement, HMC_PARAMS, 4.0,
+                        fine_grained=False)
+    assert len(coarse) <= placement.vaults_per_group * HMC_PARAMS.pim_cores_per_vault
+
+
+def test_stealing_beats_static_on_skew():
+    placement = hybrid(16)
+    tasks = make_tasks(_skewed_queries(), placement, HMC_PARAMS, 4.0)
+    t_static = simulate(tasks, placement, HMC_PARAMS, policy="static_push")
+    t_pull = simulate(tasks, placement, HMC_PARAMS, policy="pull")
+    t_steal = simulate(tasks, placement, HMC_PARAMS, policy="pull_steal")
+    assert t_steal.makespan < t_pull.makespan        # idle groups helped
+    assert t_steal.makespan < t_static.makespan
+    assert t_steal.stolen_remote > 0
+    assert t_steal.utilization > t_static.utilization
+
+
+def test_balanced_load_needs_no_remote_steals():
+    placement = hybrid(16)
+    queries = [(q, c, 50_000) for q, c in enumerate(range(4))]
+    tasks = make_tasks(queries, placement, HMC_PARAMS, 4.0)
+    res = simulate(tasks, placement, HMC_PARAMS, policy="pull_steal")
+    assert res.utilization > 0.5
+
+
+def test_all_tasks_run_exactly_once():
+    placement = hybrid(16)
+    tasks = make_tasks(_skewed_queries(4, 20_000), placement, HMC_PARAMS, 4.0)
+    res = simulate(tasks, placement, HMC_PARAMS, policy="pull_steal")
+    total_work = sum(t.seconds_local for t in tasks)
+    assert sum(res.busy) >= total_work  # work conserved (+steal penalties)
+    assert res.makespan >= total_work / len(res.busy)  # lower bound

@@ -1,0 +1,61 @@
+"""§5.2: the optimized two-stage algorithm must match the naive oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.dsm import decode_column, encode_column
+from repro.core.nsm import make_entries
+
+
+def _mk_updates(rows, values, ops):
+    n = len(rows)
+    return make_entries(np.arange(n, dtype=np.int64),
+                        np.array(ops, dtype=np.int8),
+                        np.array(values, dtype=np.int32),
+                        np.array(rows, dtype=np.int64),
+                        np.zeros(n, dtype=np.int32))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_optimized_equals_naive(data):
+    n = data.draw(st.integers(4, 200))
+    base = data.draw(st.lists(st.integers(0, 500), min_size=n, max_size=n))
+    m = data.draw(st.integers(1, 64))
+    rows = data.draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    vals = data.draw(st.lists(st.integers(0, 500), min_size=m, max_size=m))
+    col = encode_column(np.array(base, dtype=np.int32))
+    ups = _mk_updates(rows, vals, [1] * m)
+    got = apply_updates(col, ups)
+    ref = apply_updates_naive(col, ups)
+    np.testing.assert_array_equal(np.asarray(decode_column(got)),
+                                  np.asarray(decode_column(ref)))
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(ref.valid))
+
+
+def test_commit_order_last_writer_wins():
+    col = encode_column(np.array([10, 20, 30], dtype=np.int32))
+    # two modifies to row 1; higher commit id must win
+    ups = _mk_updates([1, 1], [111, 222], [1, 1])
+    out = apply_updates(col, ups)
+    assert int(decode_column(out)[1]) == 222
+
+
+def test_insert_and_delete():
+    col = encode_column(np.array([1, 2, 3], dtype=np.int32))
+    ups = _mk_updates([3, 4, 0], [7, 8, 0], [2, 2, 3])  # insert r3,r4; del r0
+    out = apply_updates(col, ups)
+    vals = np.asarray(decode_column(out))
+    valid = np.asarray(out.valid)
+    assert vals[3] == 7 and vals[4] == 8
+    assert not valid[0] and valid[1] and valid[3] and valid[4]
+
+
+def test_dictionary_superset_and_version_bump():
+    col = encode_column(np.array([5, 6], dtype=np.int32))
+    ups = _mk_updates([0], [99], [1])
+    out = apply_updates(col, ups)
+    assert out.version == col.version + 1
+    assert set(np.asarray(col.dictionary)) <= set(np.asarray(out.dictionary))
+    assert 99 in set(np.asarray(out.dictionary))

@@ -1,0 +1,80 @@
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, re
+import jax.numpy as jnp
+from repro.launch.dryrun import _opt_shardings, _batch_shardings
+from repro.launch.hlo_analysis import HloCostModel, _DEF_RE, _shape_elems_bytes
+from repro.configs import get_config, SHAPES
+from repro.launch.steps import *
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.sharding import param_shardings, cache_shardings
+from repro.distributed.context import set_partitioning
+from repro.optim import get_optimizer, default_optimizer_for
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+cfg = pad_for_mesh(get_config(arch))
+shape = SHAPES[shape_name]
+mesh = make_production_mesh()
+set_partitioning(mesh, ("data",))
+params_abs = abstract_params(cfg)
+p_sh = param_shardings(params_abs, mesh)
+specs = input_specs(cfg, shape)
+b_sh = _batch_shardings(specs, mesh, shape)
+with mesh:
+    if shape.kind == "train":
+        opt = get_optimizer(default_optimizer_for(cfg.param_count()))
+        opt_abs = jax.eval_shape(opt[0], params_abs)
+        o_sh = _opt_shardings(opt_abs, p_sh, mesh)
+        step = make_train_step(cfg, opt)
+        c = jax.jit(step, in_shardings=(p_sh, o_sh, None, b_sh),
+                    out_shardings=(p_sh, o_sh, None), donate_argnums=(0,1)).lower(
+            params_abs, opt_abs, jax.ShapeDtypeStruct((), jnp.int32), specs).compile()
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg)
+        c = jax.jit(step, in_shardings=(p_sh, b_sh)).lower(params_abs, specs).compile()
+    else:
+        step = make_serve_step(cfg)
+        c_sh = cache_shardings(specs["cache"], mesh, shape.global_batch)
+        c = jax.jit(step, in_shardings=(p_sh, c_sh, b_sh["token"], b_sh["index"]),
+                    out_shardings=(b_sh["token"], c_sh), donate_argnums=(1,)).lower(
+            params_abs, specs["cache"], specs["token"], specs["index"]).compile()
+txt = c.as_text()
+open(f"/tmp/{arch}_{shape_name}.hlo", "w").write(txt)
+m = HloCostModel(txt)
+
+def local_coll(name):
+    loc = []
+    for ln in m.comps[name]:
+        mm = _DEF_RE.match(ln)
+        if not mm: continue
+        rhs = mm.group(2)
+        for kind in ("all-reduce","all-gather","reduce-scatter","all-to-all","collective-permute"):
+            if f" {kind}(" in rhs or f" {kind}-start(" in rhs:
+                if f"{kind}-done(" in rhs: continue
+                loc.append((m._collective_bytes(kind, rhs, ln), kind, ln[:170]))
+    return loc
+
+rows = []
+for name in m.comps:
+    if name == "__entry__": continue
+    loc = local_coll(name)
+    if loc: rows.append((sum(b for b,_,_ in loc), name, loc))
+rows.sort(reverse=True)
+for total, name, loc in rows[:4]:
+    print(f"== {name}  local_coll={total:.3e}")
+    loc.sort(reverse=True)
+    for b, k, l in loc[:6]:
+        print(f"   {b/1e9:9.3f}GB {k:13s} {l[:150]}")
+# biggest buffers
+print("== biggest instruction outputs in entry/while bodies")
+big = []
+for name in m.comps:
+    if name == "__entry__": continue
+    for ln in m.comps[name]:
+        mm = _DEF_RE.match(ln)
+        if not mm: continue
+        _, ob = _shape_elems_bytes(mm.group(2).split("(",1)[0])
+        if ob > 2e9: big.append((ob, name[:40], ln[:130]))
+big.sort(reverse=True)
+for b, n, l in big[:10]:
+    print(f"   {b/2**30:8.2f}GiB [{n}] {l}")

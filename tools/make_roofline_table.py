@@ -1,0 +1,50 @@
+"""Render EXPERIMENTS.md roofline tables from results/dryrun/*.json."""
+
+import json
+import os
+import sys
+
+ARCHS = ["falcon-mamba-7b", "internvl2-26b", "kimi-k2-1t-a32b",
+         "llama4-scout-17b-a16e", "phi3-medium-14b", "deepseek-coder-33b",
+         "gemma2-9b", "qwen2.5-14b", "whisper-base", "jamba-1.5-large-398b"]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.2f}ms"
+    return f"{x*1e6:.1f}us"
+
+
+def main(d="results/dryrun", mesh="single"):
+    rows = []
+    for a in ARCHS:
+        for s in SHAPES:
+            p = os.path.join(d, f"{a}__{s}__{mesh}.json")
+            if not os.path.exists(p):
+                continue
+            j = json.load(open(p))
+            if j.get("skipped"):
+                rows.append((a, s, None, j["reason"]))
+                continue
+            rows.append((a, s, j, None))
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPs/HLO | roofline frac | mem/dev | fits 16G |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a, s, j, skip in rows:
+        if skip:
+            print(f"| {a} | {s} | — | — | — | SKIP | — | — | — | n/a |")
+            continue
+        r = j["roofline"]
+        mem = j["memory"]["peak_est_bytes"] / 2**30
+        fits = "yes" if mem <= 16 else f"NO ({mem:.0f}G)"
+        print(f"| {a} | {s} | {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} "
+              f"| {fmt_s(r['collective_s'])} | {r['dominant'].split('_')[0]} "
+              f"| {r['useful_flops_ratio']:.2f} | {r['roofline_fraction']:.4f} "
+              f"| {mem:.1f}G | {fits} |")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -2,6 +2,11 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus paper-claim check tables
 on stderr-style stdout lines prefixed with spaces).
+
+Usage: python -m benchmarks.run [fig6] [--backend=numpy|pallas]
+
+--backend selects the execution backend (core/backend.py) for every system
+driver; the REPRO_BACKEND environment variable does the same.
 """
 
 import sys
@@ -26,7 +31,20 @@ def main() -> None:
         ("fig10", fig10_scaling_energy),
         ("lm_step", lm_step),
     ]
-    only = sys.argv[1] if len(sys.argv) > 1 else None
+    args = sys.argv[1:]
+    for a in [a for a in args if a.startswith("--")]:
+        if a.startswith("--backend="):
+            from repro.core.backend import set_default_backend
+            try:
+                set_default_backend(a.split("=", 1)[1])
+            except KeyError as e:
+                sys.exit(f"{e.args[0]}; usage: "
+                         "python -m benchmarks.run [figN] [--backend=NAME]")
+            args.remove(a)
+        else:
+            sys.exit(f"unknown option {a!r}; usage: "
+                     "python -m benchmarks.run [figN] [--backend=NAME]")
+    only = args[0] if args else None
     all_rows = []
     print("name,us_per_call,derived")
     for tag, mod in modules:

@@ -2,12 +2,17 @@
 fused-kernel queries, with the Pallas PIM-analog kernels doing the work.
 
     PYTHONPATH=src python examples/htap_analytics.py
+
+The whole propagation/consistency/query pipeline here runs on the "pallas"
+execution backend (core/backend.py), so the merge/hash/sort/copy units are
+the actual kernels; the closing section cross-checks one query against the
+"numpy" reference backend bit-for-bit.
 """
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schema
+from repro.core import engine, schema
 from repro.core.application import apply_updates
 from repro.core.consistency import ConsistencyManager
 from repro.core.dsm import DSMReplica, decode_column
@@ -29,9 +34,9 @@ def main():
     store.execute(stream)
     print(f"pending updates in per-thread logs: {store.pending_updates}")
 
-    # analytical island: DSM replica + consistency
+    # analytical island: DSM replica + consistency, on the kernel backend
     replica = DSMReplica.from_table(table)
-    cons = ConsistencyManager(replica)
+    cons = ConsistencyManager(replica, backend="pallas")
 
     # a long analytical query pins its snapshot...
     h = cons.begin_query([0, 1])
@@ -40,9 +45,10 @@ def main():
     # ...update propagation ships + applies concurrently (merge unit ->
     # hash unit -> sort unit -> merge -> re-encode; kernels validated in
     # interpret mode)
-    buffers = ship_updates(store.drain_logs(), store.n_cols)
+    buffers = ship_updates(store.drain_logs(), store.n_cols, backend="pallas")
     for col_id, entries in buffers.items():
-        cons.on_update(col_id, apply_updates(replica.columns[col_id], entries))
+        cons.on_update(col_id, apply_updates(replica.columns[col_id], entries,
+                                             backend="pallas"))
     print(f"applied {sum(len(b) for b in buffers.values())} updates "
           f"across {len(buffers)} columns")
 
@@ -69,6 +75,14 @@ def main():
     codes = probe(t, jnp.asarray(old_dict[:16]))
     assert np.array_equal(np.asarray(codes), np.arange(16))
     print("hash-probe unit: 16/16 dictionary lookups correct")
+
+    # backend layer: the same query through run_query_dsm on both backends
+    q = engine.Query(query_id=0, filter_col=0, lo=lo, hi=hi, agg_col=1,
+                     join_col=2)
+    answers = {name: engine.run_query_dsm(replica.columns, q, backend=name)
+               for name in ("numpy", "pallas")}
+    assert answers["numpy"] == answers["pallas"]
+    print(f"backend cross-check: numpy == pallas == {answers['numpy']}")
 
 
 if __name__ == "__main__":

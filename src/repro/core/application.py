@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.backend import get_backend
 from repro.core.dsm import EncodedColumn
 from repro.core.hwmodel import CostLog
 from repro.core.schema import VALUE_BYTES
@@ -51,8 +52,15 @@ def _split_ops(updates: np.ndarray):
 
 
 def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
-                   mods: np.ndarray, ins: np.ndarray, dels: np.ndarray):
-    """Scatter modify/insert/delete row ops in commit order (vectorized)."""
+                   mods: np.ndarray, ins: np.ndarray, dels: np.ndarray,
+                   encode=None):
+    """Scatter modify/insert/delete row ops in commit order (vectorized).
+
+    `encode` maps update values to their codes in `new_dict` (§5.2's hash
+    unit on the accelerator backend); defaults to binary search.
+    """
+    if encode is None:
+        encode = lambda v: np.searchsorted(new_dict, v)
     if len(ins):
         # Inserts append rows; their per-column values arrive as entries with
         # row >= n. Extend the arrays to cover the max inserted row id.
@@ -65,7 +73,7 @@ def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
     if len(write_ops):
         order = np.argsort(write_ops["commit_id"], kind="stable")
         write_ops = write_ops[order]
-        new_codes_for_writes = np.searchsorted(new_dict, write_ops["value"])
+        new_codes_for_writes = encode(write_ops["value"])
         codes[write_ops["row"]] = new_codes_for_writes.astype(codes.dtype)
         valid[write_ops["row"]] = True
     if len(dels):
@@ -78,8 +86,16 @@ def apply_updates(
     updates: np.ndarray,
     cost: CostLog | None = None,
     on_pim: bool = True,
+    backend=None,
 ) -> EncodedColumn:
-    """Optimized two-stage update application (the paper's contribution)."""
+    """Optimized two-stage update application (the paper's contribution).
+
+    Each stage runs on the selected execution backend: the PallasBackend
+    dispatches the sort to kernels/bitonic_sort, the dictionary merge to
+    kernels/merge_runs and the value->code encodes to kernels/hash_probe;
+    the NumpyBackend keeps the original unique/union1d/searchsorted path.
+    """
+    be = get_backend(backend)
     old_codes = np.asarray(col.codes)
     old_dict = np.asarray(col.dictionary)
     valid = np.array(col.valid, copy=True)
@@ -90,16 +106,18 @@ def apply_updates(
 
     # Stage 1: sort+dedupe the pending update values -> update dictionary.
     # (hardware: 1024-value bitonic sorter; kernels/bitonic_sort)
-    update_dict = np.unique(write_vals) if len(write_vals) else np.empty(0, np.int32)
+    update_dict = be.sort_unique(write_vals) if len(write_vals) else np.empty(0, np.int32)
 
     # Stage 2: linear merge of two sorted dictionaries + old->new hash index.
     # (hardware: merge unit + hash unit)
-    new_dict = np.union1d(old_dict, update_dict).astype(old_dict.dtype)
-    old_to_new = np.searchsorted(new_dict, old_dict)  # the "hash index"
+    new_dict = be.merge_dictionaries(old_dict, update_dict)
+    encode = be.make_encoder(new_dict)
+    old_to_new = encode(old_dict)  # the "hash index"
 
     # Stage 3: sequential re-encode through the index + scatter update codes.
     new_codes = old_to_new[old_codes].astype(np.int32)
-    new_codes, valid = _apply_row_ops(new_codes, valid, new_dict, mods, ins, dels)
+    new_codes, valid = _apply_row_ops(new_codes, valid, new_dict, mods, ins,
+                                      dels, encode=encode)
 
     if cost is not None and m:
         k_new = len(new_dict)

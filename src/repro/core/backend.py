@@ -1,0 +1,391 @@
+"""Pluggable execution backends: numpy reference vs Pallas accelerator units.
+
+Polynesia's speedups come from specialized in-memory hardware; this repo
+models those units as Pallas kernels. The hot path (engine, shipping,
+update application, consistency) is written against the small operator
+surface below, so the same drivers can run either on
+
+* ``NumpyBackend`` — the original pure-numpy code paths, extracted here as
+  the functional reference, or
+* ``PallasBackend`` — dispatching each operator to its hardware-analog
+  kernel (interpret mode off-TPU):
+
+    ==========================  =================================
+    operator                    kernel
+    ==========================  =================================
+    filter + aggregate          kernels/dict_ops.scan_filter_agg
+                                (+ _batch for fused multi-query)
+    hash join / value encode    kernels/hash_probe.build_table/probe
+    update-log / dict merge     kernels/merge_runs
+    update-dictionary sort      kernels/bitonic_sort
+    snapshot copy               kernels/snapshot_copy
+    ==========================  =================================
+
+Every backend must produce *bit-identical* results: the integer query
+answers, merged logs, dictionaries and snapshots are asserted equal across
+backends in tests/test_backend.py. Selection is by name (``backend="pallas"``
+threaded through the system drivers), by instance, or globally via
+``set_default_backend`` / the ``REPRO_BACKEND`` environment variable.
+"""
+
+from __future__ import annotations
+
+import abc
+import os
+from typing import Callable, Iterable, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.dsm import EncodedColumn
+from repro.core.nsm import UPDATE_DTYPE
+from repro.kernels.bitonic_sort import sort_1024, sort_rows
+from repro.kernels.dict_ops import scan_filter_agg, scan_filter_agg_batch
+from repro.kernels.hash_probe import EMPTY_KEY, build_table, probe
+from repro.kernels.merge_runs import merge_sorted_runs
+from repro.kernels.snapshot_copy import snapshot_copy
+
+SNAPSHOT_BLOCK = 8192  # copy-unit chunk size (kernels/snapshot_copy default)
+
+
+class ExecutionBackend(abc.ABC):
+    """Operator surface the HTAP hot path is written against.
+
+    Methods take/return host (numpy) values and EncodedColumns; backends are
+    free to stage through device arrays internally. All results must be
+    exact — equality across backends is part of the contract, not a tolerance.
+    """
+
+    name: str = "?"
+
+    # -- analytical engine (§7) -------------------------------------------
+    def code_range(self, col: EncodedColumn, lo: int, hi: int) -> tuple[int, int]:
+        """Value range -> code range through the order-preserving dictionary."""
+        d = np.asarray(col.dictionary)
+        return (int(np.searchsorted(d, lo, side="left")),
+                int(np.searchsorted(d, hi, side="right")))
+
+    @abc.abstractmethod
+    def filter_mask(self, col: EncodedColumn, lo: int, hi: int) -> np.ndarray:
+        """Boolean row mask for lo <= value <= hi (dictionary pushdown)."""
+
+    @abc.abstractmethod
+    def filter_agg(self, fcol: EncodedColumn, acol: EncodedColumn,
+                   lo: int, hi: int) -> tuple[int, int]:
+        """(sum of acol values, selected-row count) over the filter range."""
+
+    @abc.abstractmethod
+    def filter_agg_batch(self, fcol: EncodedColumn, acol: EncodedColumn,
+                         bounds: Sequence[tuple[int, int]]
+                         ) -> list[tuple[int, int]]:
+        """Fused multi-query scan: one pass answering all (lo, hi) bounds."""
+
+    def filter_agg_mask(self, fcol: EncodedColumn, acol: EncodedColumn,
+                        lo: int, hi: int) -> tuple[int, int, np.ndarray]:
+        """filter_agg plus the row mask (needed by join queries). Backends
+        that fuse the aggregate (so the mask is not a by-product) get it
+        from one extra filter_mask pass."""
+        s, c = self.filter_agg(fcol, acol, lo, hi)
+        return s, c, self.filter_mask(fcol, lo, hi)
+
+    @abc.abstractmethod
+    def hash_join_count(self, left: EncodedColumn, right: EncodedColumn,
+                        left_mask: np.ndarray | None = None) -> int:
+        """|left JOIN right on value| via dictionary-level hash matching."""
+
+    # -- update propagation (§5) ------------------------------------------
+    @abc.abstractmethod
+    def merge_update_logs(self, logs: Iterable[np.ndarray]) -> np.ndarray:
+        """K-way merge of commit-ordered per-thread logs into the final log."""
+
+    @abc.abstractmethod
+    def sort_unique(self, values: np.ndarray) -> np.ndarray:
+        """Sort + dedupe pending update values -> update dictionary."""
+
+    @abc.abstractmethod
+    def merge_dictionaries(self, old_dict: np.ndarray,
+                           update_dict: np.ndarray) -> np.ndarray:
+        """Linear merge of two sorted dictionaries -> sorted-unique union."""
+
+    @abc.abstractmethod
+    def make_encoder(self, dictionary: np.ndarray
+                     ) -> Callable[[np.ndarray], np.ndarray]:
+        """value -> code lookup for values present in `dictionary` (§5.2's
+        hash index; also used for the old_code -> new_code re-encode map)."""
+
+    # -- consistency (§6) --------------------------------------------------
+    @abc.abstractmethod
+    def snapshot_column(self, col: EncodedColumn,
+                        prev: EncodedColumn | None = None) -> EncodedColumn:
+        """Copy-unit snapshot of `col`; `prev` is the chain head, from which
+        clean chunks may be carried instead of re-read."""
+
+
+def _join_counts(left: EncodedColumn, right: EncodedColumn,
+                 left_mask: np.ndarray | None):
+    """Shared join prep: per-dictionary-value occurrence counts."""
+    lv = np.asarray(left.dictionary)
+    rv = np.asarray(right.dictionary)
+    lcodes = np.asarray(left.codes)
+    if left_mask is not None:
+        lcodes = lcodes[left_mask & np.asarray(left.valid)]
+    else:
+        lcodes = lcodes[np.asarray(left.valid)]
+    rcodes = np.asarray(right.codes)[np.asarray(right.valid)]
+    lcount = np.bincount(lcodes, minlength=len(lv)).astype(np.int64)
+    rcount = np.bincount(rcodes, minlength=len(rv)).astype(np.int64)
+    return lv, rv, lcount, rcount
+
+
+def _fits_int32(values: np.ndarray) -> bool:
+    if len(values) == 0:
+        return True
+    info = np.iinfo(np.int32)
+    return bool(values.min() >= info.min and values.max() <= info.max)
+
+
+class NumpyBackend(ExecutionBackend):
+    """The original pure-numpy hot path, extracted verbatim."""
+
+    name = "numpy"
+
+    def filter_mask(self, col, lo, hi):
+        code_lo, code_hi = self.code_range(col, lo, hi)
+        codes = np.asarray(col.codes)
+        return (codes >= code_lo) & (codes < code_hi) & np.asarray(col.valid)
+
+    def aggregate_sum(self, col, mask):
+        """Histogram-of-codes aggregate: one sequential pass, no random access."""
+        codes = np.asarray(col.codes)
+        counts = np.bincount(codes[mask], minlength=col.dict_size)
+        return int(counts @ np.asarray(col.dictionary, dtype=np.int64))
+
+    def filter_agg(self, fcol, acol, lo, hi):
+        mask = self.filter_mask(fcol, lo, hi)
+        return self.aggregate_sum(acol, mask), int(mask.sum())
+
+    def filter_agg_mask(self, fcol, acol, lo, hi):
+        # one scan: the mask is the aggregate's by-product, as in the
+        # original engine code path
+        mask = self.filter_mask(fcol, lo, hi)
+        return self.aggregate_sum(acol, mask), int(mask.sum()), mask
+
+    def filter_agg_batch(self, fcol, acol, bounds):
+        # one materialization of the encoded columns, shared by all queries
+        fcodes = np.asarray(fcol.codes)
+        fvalid = np.asarray(fcol.valid)
+        acodes = np.asarray(acol.codes)
+        adict = np.asarray(acol.dictionary, dtype=np.int64)
+        fdict = np.asarray(fcol.dictionary)
+        out = []
+        for lo, hi in bounds:
+            code_lo = np.searchsorted(fdict, lo, side="left")
+            code_hi = np.searchsorted(fdict, hi, side="right")
+            mask = (fcodes >= code_lo) & (fcodes < code_hi) & fvalid
+            counts = np.bincount(acodes[mask], minlength=acol.dict_size)
+            out.append((int(counts @ adict), int(mask.sum())))
+        return out
+
+    def hash_join_count(self, left, right, left_mask=None):
+        lv, rv, lcount, rcount = _join_counts(left, right, left_mask)
+        common, li, ri = np.intersect1d(lv, rv, return_indices=True)
+        return int((lcount[li] * rcount[ri]).sum())
+
+    def merge_update_logs(self, logs):
+        logs = [l for l in logs if len(l)]
+        if not logs:
+            return np.empty(0, dtype=UPDATE_DTYPE)
+        cat = np.concatenate(logs)
+        order = np.argsort(cat["commit_id"], kind="stable")
+        return cat[order]
+
+    def sort_unique(self, values):
+        return np.unique(values)
+
+    def merge_dictionaries(self, old_dict, update_dict):
+        return np.union1d(old_dict, update_dict).astype(old_dict.dtype)
+
+    def make_encoder(self, dictionary):
+        d = np.asarray(dictionary)
+        return lambda values: np.searchsorted(d, values)
+
+    def snapshot_column(self, col, prev=None):
+        # JAX arrays are immutable: aliasing IS a consistent snapshot. The
+        # hardware copy is priced by the caller regardless.
+        return EncodedColumn(codes=col.codes, dictionary=col.dictionary,
+                             valid=col.valid, version=col.version)
+
+
+class PallasBackend(NumpyBackend):
+    """Dispatches the hot path to the PIM-analog Pallas kernels.
+
+    Inherits numpy glue (bincounts, grouping) — the paper's fixed-function
+    units do the data-plane work while small control-plane steps stay on the
+    host. Falls back to the numpy path only where a kernel precondition
+    can't hold (e.g. commit ids beyond int32, EMPTY_KEY colliding with a
+    dictionary value); every fallback keeps results identical.
+    """
+
+    name = "pallas"
+
+    # -- analytical engine -------------------------------------------------
+    def filter_agg(self, fcol, acol, lo, hi):
+        code_lo, code_hi = self.code_range(fcol, lo, hi)
+        s, c = scan_filter_agg(fcol.codes, acol.codes, fcol.valid,
+                               acol.dictionary, code_lo, code_hi, exact=True)
+        return int(s), int(c)
+
+    def filter_agg_mask(self, fcol, acol, lo, hi):
+        # the fused kernel does not materialize the mask; produce it with
+        # one extra host pass (explicit override — inheriting would pick up
+        # NumpyBackend's all-numpy scan and bypass the kernel entirely)
+        s, c = self.filter_agg(fcol, acol, lo, hi)
+        return s, c, self.filter_mask(fcol, lo, hi)
+
+    def filter_agg_batch(self, fcol, acol, bounds):
+        if len(bounds) == 1:
+            [(lo, hi)] = bounds
+            return [self.filter_agg(fcol, acol, lo, hi)]
+        code_bounds = [self.code_range(fcol, lo, hi) for lo, hi in bounds]
+        return scan_filter_agg_batch(fcol.codes, acol.codes, fcol.valid,
+                                     acol.dictionary, code_bounds)
+
+    def hash_join_count(self, left, right, left_mask=None):
+        lv, rv, lcount, rcount = _join_counts(left, right, left_mask)
+        if (len(rv) == 0 or len(lv) == 0
+                or (rv == int(EMPTY_KEY)).any()       # can't build the table
+                or (lv == int(EMPTY_KEY)).any()):     # probe matches empties
+            common, li, ri = np.intersect1d(lv, rv, return_indices=True)
+            return int((lcount[li] * rcount[ri]).sum())
+        # hash unit: probe each left dictionary value against the right
+        # dictionary's table; hits multiply pre-grouped occurrence counts.
+        table = build_table(rv, np.arange(len(rv), dtype=np.int32))
+        ri = np.asarray(probe(table, jnp.asarray(lv), default=-1))
+        hit = ri >= 0
+        return int((lcount[hit] * rcount[ri[hit]]).sum())
+
+    # -- update propagation ------------------------------------------------
+    def merge_update_logs(self, logs):
+        logs = [l for l in logs if len(l)]
+        if not logs:
+            return np.empty(0, dtype=UPDATE_DTYPE)
+        cat = np.concatenate(logs)
+        if len(logs) == 1:
+            return cat
+        keys = cat["commit_id"]
+        if len(keys) and (keys.min() < 0 or keys.max() >= np.iinfo(np.int32).max):
+            return super().merge_update_logs(logs)  # int32 comparator tree
+        runs = [jnp.asarray(l["commit_id"].astype(np.int32)) for l in logs]
+        _, src = merge_sorted_runs(runs)
+        idx = np.asarray(src)
+        return cat[idx[idx >= 0]]
+
+    def sort_unique(self, values):
+        if len(values) == 0 or not _fits_int32(np.asarray(values)):
+            return super().sort_unique(values)  # int32 sort unit
+        v = jnp.asarray(np.asarray(values, dtype=np.int32))
+        if len(values) <= 1024:  # the paper's 1024-value sort unit
+            s = np.asarray(sort_1024(v))
+        else:
+            s = np.asarray(sort_rows(v[None, :])[0])
+        keep = np.concatenate([[True], s[1:] != s[:-1]])
+        return s[keep].astype(np.asarray(values).dtype)
+
+    def merge_dictionaries(self, old_dict, update_dict):
+        if len(old_dict) == 0 or len(update_dict) == 0:
+            return super().merge_dictionaries(old_dict, update_dict)
+        _, src = merge_sorted_runs([jnp.asarray(old_dict),
+                                    jnp.asarray(update_dict)])
+        idx = np.asarray(src)
+        cat = np.concatenate([np.asarray(old_dict), np.asarray(update_dict)])
+        merged = cat[idx[idx >= 0]]
+        keep = np.concatenate([[True], merged[1:] != merged[:-1]])
+        return merged[keep].astype(old_dict.dtype)
+
+    def make_encoder(self, dictionary):
+        d = np.asarray(dictionary)
+        if (len(d) == 0 or not _fits_int32(d)
+                or (d == int(EMPTY_KEY)).any()):
+            return super().make_encoder(dictionary)
+        table = build_table(d, np.arange(len(d), dtype=np.int32))
+        fallback = super().make_encoder(dictionary)
+
+        def encode(values):
+            values = np.asarray(values)
+            if len(values) == 0:
+                return np.empty(0, dtype=np.int64)
+            if not _fits_int32(values):
+                return fallback(values)  # int32 probe unit
+            codes = np.asarray(probe(table, jnp.asarray(values.astype(np.int32))))
+            return codes.astype(np.int64)
+
+        return encode
+
+    # -- consistency -------------------------------------------------------
+    def snapshot_column(self, col, prev=None):
+        n = col.n_rows
+        if n == 0:
+            return super().snapshot_column(col, prev)
+        n_chunks = (n + SNAPSHOT_BLOCK - 1) // SNAPSHOT_BLOCK
+        src = np.asarray(col.codes)
+        if (prev is not None and prev.n_rows == n
+                and np.array_equal(np.asarray(prev.dictionary),
+                                   np.asarray(col.dictionary))):
+            # tracking buffer: only chunks that changed since the previous
+            # snapshot are fetched from the main replica (codes are only
+            # comparable when the dictionaries match).
+            prev_codes = np.asarray(prev.codes)
+            pad = n_chunks * SNAPSHOT_BLOCK - n
+            diff = np.pad(src, (0, pad)) != np.pad(prev_codes, (0, pad))
+            dirty = diff.reshape(n_chunks, SNAPSHOT_BLOCK).any(axis=1)
+            prev_arr = prev.codes
+        else:
+            dirty = np.ones(n_chunks, dtype=bool)
+            prev_arr = col.codes
+        codes = snapshot_copy(col.codes, prev_arr,
+                              jnp.asarray(dirty.astype(np.int32)),
+                              block=SNAPSHOT_BLOCK)
+        return EncodedColumn(codes=codes, dictionary=col.dictionary,
+                             valid=col.valid, version=col.version)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+BACKENDS: dict[str, ExecutionBackend] = {
+    "numpy": NumpyBackend(),
+    "pallas": PallasBackend(),
+}
+
+_default_backend = os.environ.get("REPRO_BACKEND", "numpy")
+
+
+def register_backend(name: str, backend: ExecutionBackend) -> None:
+    BACKENDS[name] = backend
+
+
+def set_default_backend(name: str) -> None:
+    """Set the backend used when callers pass backend=None (see also the
+    REPRO_BACKEND environment variable)."""
+    global _default_backend
+    if name not in BACKENDS:
+        raise KeyError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
+    _default_backend = name
+
+
+def default_backend_name() -> str:
+    return _default_backend
+
+
+def get_backend(spec: str | ExecutionBackend | None = None) -> ExecutionBackend:
+    """Resolve a backend argument: None -> session default, str -> registry."""
+    if spec is None:
+        spec = _default_backend
+    if isinstance(spec, ExecutionBackend):
+        return spec
+    try:
+        return BACKENDS[spec]
+    except KeyError:
+        raise KeyError(
+            f"unknown backend {spec!r}; have {sorted(BACKENDS)}") from None

@@ -23,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 
+from repro.core.backend import get_backend
 from repro.core.dsm import DSMReplica, EncodedColumn
 from repro.core.hwmodel import CostLog
 from repro.core.schema import VALUE_BYTES
@@ -65,10 +66,11 @@ class ConsistencyManager:
     """Snapshot-isolation for analytics over a DSMReplica (§6)."""
 
     def __init__(self, replica: DSMReplica, cost: CostLog | None = None,
-                 on_pim: bool = True):
+                 on_pim: bool = True, backend=None):
         self.replica = replica
         self.cost = cost
         self.on_pim = on_pim
+        self.backend = get_backend(backend)
         self.chains = {c: SnapshotChain(c) for c in replica.columns}
         self._version_ids = itertools.count()
         self._handles: dict[int, dict[int, _Version]] = {}
@@ -85,11 +87,15 @@ class ConsistencyManager:
     # -- analytical side ---------------------------------------------------
     def _snapshot(self, col_id: int) -> _Version:
         col = self.replica.columns[col_id]
-        # Copy-unit snapshot: functional copy of codes + dictionary. JAX
-        # arrays are immutable, so aliasing IS a consistent snapshot; we
-        # still price the copy the hardware would do and bump the chain.
-        snap = EncodedColumn(codes=col.codes, dictionary=col.dictionary,
-                             valid=col.valid, version=col.version)
+        # Copy-unit snapshot on the execution backend: the NumpyBackend
+        # aliases (JAX arrays are immutable, so aliasing IS a consistent
+        # snapshot), the PallasBackend streams the codes through the
+        # kernels/snapshot_copy copy unit, carrying chunks that are clean
+        # relative to the previous chain head. Either way the copy the
+        # hardware would do is priced below and the chain is bumped.
+        head = self.chains[col_id].head
+        snap = self.backend.snapshot_column(
+            col, prev=head.column if head is not None else None)
         v = _Version(version_id=next(self._version_ids), column=snap)
         self.chains[col_id].versions.append(v)
         self.chains[col_id].dirty = False

@@ -22,6 +22,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core.backend import get_backend
 from repro.core.dsm import DSMReplica, EncodedColumn
 from repro.core.hwmodel import CostLog
 from repro.core.placement import Placement
@@ -79,19 +80,12 @@ def gen_queries(rng: np.random.Generator, n_queries: int, n_cols: int,
 
 def filter_codes(col: EncodedColumn, lo: int, hi: int) -> np.ndarray:
     """Predicate pushdown through the order-preserving dictionary."""
-    d = np.asarray(col.dictionary)
-    code_lo = np.searchsorted(d, lo, side="left")
-    code_hi = np.searchsorted(d, hi, side="right")
-    codes = np.asarray(col.codes)
-    return (codes >= code_lo) & (codes < code_hi) & np.asarray(col.valid)
+    return get_backend("numpy").filter_mask(col, lo, hi)
 
 
 def aggregate_sum(col: EncodedColumn, mask: np.ndarray) -> int:
     """Histogram-of-codes aggregate: one sequential pass, no random access."""
-    codes = np.asarray(col.codes)
-    k = col.dict_size
-    counts = np.bincount(codes[mask], minlength=k)
-    return int(counts @ np.asarray(col.dictionary, dtype=np.int64))
+    return get_backend("numpy").aggregate_sum(col, mask)
 
 
 def hash_join_count(left: EncodedColumn, right: EncodedColumn,
@@ -101,18 +95,29 @@ def hash_join_count(left: EncodedColumn, right: EncodedColumn,
     Build on the smaller dictionary, probe the larger; match counts multiply
     (values are pre-grouped by the encoding — the DSM+dict fast path).
     """
-    lv = np.asarray(left.dictionary)
-    rv = np.asarray(right.dictionary)
-    lcodes = np.asarray(left.codes)
-    if left_mask is not None:
-        lcodes = lcodes[left_mask & np.asarray(left.valid)]
+    return get_backend("numpy").hash_join_count(left, right, left_mask)
+
+
+def _query_cost(cost: CostLog, fcol, acol, jcol, n_sel: int, on_pim: bool):
+    """Per-query cost events — identical whether queries run alone or fused
+    (batching amortizes kernel *launches*, not the modeled scan traffic)."""
+    scanned_bytes = fcol.encoded_bytes + acol.encoded_bytes
+    rows = fcol.n_rows * 2
+    if jcol is not None:
+        scanned_bytes += 2 * jcol.encoded_bytes
+        rows += 2 * jcol.n_rows
+    if on_pim:
+        # fused decode->filter->aggregate (kernels/dict_ops): one
+        # sequential pass over the encoded columns, histogram aggregate
+        # — no per-row dictionary decode.
+        cost.add(phase="ana", island="ana", resource="pim",
+                 cycles=rows * PIM_CYCLES_PER_ROW, bytes_local=scanned_bytes)
     else:
-        lcodes = lcodes[np.asarray(left.valid)]
-    rcodes = np.asarray(right.codes)[np.asarray(right.valid)]
-    lcount = np.bincount(lcodes, minlength=len(lv)).astype(np.int64)
-    rcount = np.bincount(rcodes, minlength=len(rv)).astype(np.int64)
-    common, li, ri = np.intersect1d(lv, rv, return_indices=True)
-    return int((lcount[li] * rcount[ri]).sum())
+        # CPU software decodes selected aggregate values through the
+        # dictionary (small, cache-resident: costs cycles, not traffic).
+        cost.add(phase="ana", island="ana", resource="cpu",
+                 cycles=rows * CPU_CYCLES_PER_ROW + n_sel * 2.0,
+                 bytes_offchip=scanned_bytes * ANA_MISS_FRACTION)
 
 
 def run_query_dsm(
@@ -121,33 +126,78 @@ def run_query_dsm(
     cost: CostLog | None = None,
     placement: Placement | None = None,
     on_pim: bool = True,
+    backend=None,
 ) -> int:
     """Execute one query against (a snapshot view of) the DSM replica."""
+    be = get_backend(backend)
     fcol, acol = view[q.filter_col], view[q.agg_col]
-    mask = filter_codes(fcol, q.lo, q.hi)
-    result = aggregate_sum(acol, mask)
-    scanned_bytes = fcol.encoded_bytes + acol.encoded_bytes
-    rows = fcol.n_rows * 2
-    if q.join_col is not None:
+    jcol = None
+    if q.join_col is None:
+        result, n_sel = be.filter_agg(fcol, acol, q.lo, q.hi)
+    else:
+        result, n_sel, mask = be.filter_agg_mask(fcol, acol, q.lo, q.hi)
         jcol = view[q.join_col]
-        result += hash_join_count(jcol, jcol, left_mask=mask)
-        scanned_bytes += 2 * jcol.encoded_bytes
-        rows += 2 * jcol.n_rows
+        result += be.hash_join_count(jcol, jcol, left_mask=mask)
     if cost is not None:
-        n_sel = int(mask.sum())
-        if on_pim:
-            # fused decode->filter->aggregate (kernels/dict_ops): one
-            # sequential pass over the encoded columns, histogram aggregate
-            # — no per-row dictionary decode.
-            cost.add(phase="ana", island="ana", resource="pim",
-                     cycles=rows * PIM_CYCLES_PER_ROW, bytes_local=scanned_bytes)
-        else:
-            # CPU software decodes selected aggregate values through the
-            # dictionary (small, cache-resident: costs cycles, not traffic).
-            cost.add(phase="ana", island="ana", resource="cpu",
-                     cycles=rows * CPU_CYCLES_PER_ROW + n_sel * 2.0,
-                     bytes_offchip=scanned_bytes * ANA_MISS_FRACTION)
+        _query_cost(cost, fcol, acol, jcol, n_sel, on_pim)
     return result
+
+
+def group_queries(queries: list[Query]) -> list[list[Query]]:
+    """Group queries touching the same column set for fused execution.
+
+    Order within a group follows the input; callers keep the original
+    result order by mapping answers back through the query objects.
+    """
+    groups: dict[tuple, list[Query]] = {}
+    for q in queries:
+        groups.setdefault((q.filter_col, q.agg_col, q.join_col), []).append(q)
+    return list(groups.values())
+
+
+def run_query_group_dsm(
+    view: dict[int, EncodedColumn],
+    queries: list[Query],
+    cost: CostLog | None = None,
+    placement: Placement | None = None,
+    on_pim: bool = True,
+    backend=None,
+) -> list[int]:
+    """Execute a same-column-set query group as one fused multi-query scan.
+
+    The backend answers all code-range predicates in a single pass over the
+    encoded columns (PallasBackend: one kernel launch for the whole group),
+    which is what lets the accelerator path amortize launches. Cost events
+    stay per-query, so modeled throughput matches unbatched execution.
+    """
+    if not queries:
+        return []
+    be = get_backend(backend)
+    q0 = queries[0]
+    fcol, acol = view[q0.filter_col], view[q0.agg_col]
+    # join-free queries fuse into one multi-predicate scan; join queries run
+    # through filter_agg_mask so the mask is produced by the same scan that
+    # aggregates (no second filter pass on mask-producing backends)
+    no_join = [q for q in queries if q.join_col is None]
+    answers: dict[int, tuple[int, int]] = {}
+    if no_join:
+        fused = be.filter_agg_batch(fcol, acol,
+                                    [(q.lo, q.hi) for q in no_join])
+        for q, sc in zip(no_join, fused):
+            answers[id(q)] = sc
+    out = []
+    for q in queries:
+        jcol = None
+        if q.join_col is None:
+            result, n_sel = answers[id(q)]
+        else:
+            result, n_sel, mask = be.filter_agg_mask(fcol, acol, q.lo, q.hi)
+            jcol = view[q.join_col]
+            result += be.hash_join_count(jcol, jcol, left_mask=mask)
+        if cost is not None:
+            _query_cost(cost, fcol, acol, jcol, n_sel, on_pim)
+        out.append(result)
+    return out
 
 
 # --------------------------------------------------------------------------
@@ -163,8 +213,16 @@ def run_query_nsm(
     table: np.ndarray,
     q: Query,
     cost: CostLog | None = None,
+    backend=None,
 ) -> int:
-    """Execute one query against an NSM table (strided row access, §3.1-(2))."""
+    """Execute one query against an NSM table (strided row access, §3.1-(2)).
+
+    `backend` is accepted for driver-API uniformity but row-store scans
+    always execute the numpy path: the Pallas kernels model the PIM units,
+    which operate on the dictionary-encoded DSM replica — the single-instance
+    baselines never have one (that's the point of the baseline).
+    """
+    get_backend(backend)  # validate the selection even though it's unused
     fvals = table[:, q.filter_col]
     mask = (fvals >= q.lo) & (fvals <= q.hi)
     result = int(table[mask, q.agg_col].astype(np.int64).sum())

@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.backend import get_backend
 from repro.core.consistency import ConsistencyManager
 from repro.core.dsm import DSMReplica
 from repro.core.hwmodel import (CostLog, HardwareModel, HardwareParams,
@@ -82,8 +83,10 @@ def _split_queries(queries, n_rounds):
 # Normalization baselines
 # ---------------------------------------------------------------------------
 
-def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS) -> RunResult:
+def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
+                  backend=None) -> RunResult:
     """Transactions alone: no analytics, zero-cost propagation/consistency."""
+    get_backend(backend)  # no analytical work; validate selection only
     cost = CostLog()
     store = RowStore(table)
     store.execute(stream, cost)
@@ -93,11 +96,13 @@ def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS) -> RunResult:
                      model.energy(cost), [])
 
 
-def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS) -> RunResult:
+def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
+                 backend=None) -> RunResult:
     """Analytics alone on the multicore CPU over a DSM replica."""
     cost = CostLog()
     replica = DSMReplica.from_table(table)
-    results = [engine.run_query_dsm(replica.columns, q, cost, on_pim=False)
+    results = [engine.run_query_dsm(replica.columns, q, cost, on_pim=False,
+                                    backend=backend)
                for q in queries]
     model = HardwareModel(hw)
     t = model.time(cost, concurrent_islands=False)
@@ -110,7 +115,8 @@ def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS) -> RunResult:
 # ---------------------------------------------------------------------------
 
 def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
-              n_rounds: int = 8, zero_cost_snapshot: bool = False) -> RunResult:
+              n_rounds: int = 8, zero_cost_snapshot: bool = False,
+              backend=None) -> RunResult:
     """Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
 
     zero_cost_snapshot: the paper's normalization baseline — identical run,
@@ -130,7 +136,8 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
             view = snap.take_snapshot_if_needed(
                 None if zero_cost_snapshot else cost)
             for q in q_chunk:
-                results.append(engine.run_query_nsm(view, q, cost))
+                results.append(engine.run_query_nsm(view, q, cost,
+                                                    backend=backend))
     model = HardwareModel(hw)
     t = model.time(cost)
     return RunResult("SI-SS", len(stream), len(queries), t["txn"], t["ana"],
@@ -139,12 +146,18 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
 
 
 def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
-                n_rounds: int = 8, zero_cost_mvcc: bool = False) -> RunResult:
+                n_rounds: int = 8, zero_cost_mvcc: bool = False,
+                backend=None) -> RunResult:
     """Single-Instance-MVCC: version chains; analytics traverse chains.
 
     zero_cost_mvcc: identical run, chain traversal costs nothing (the
     paper's Fig. 1-left normalization baseline).
+
+    `backend` is accepted for driver-API uniformity; MVCC chain reads are
+    pointer-chasing over host versions, which the PIM-analog kernels do not
+    model — the numpy path always executes.
     """
+    get_backend(backend)
     cost = CostLog()
     store = MVCCStore(table)
     results = []
@@ -193,6 +206,7 @@ def run_multi_instance(
     n_rounds: int = 8,
     shipping_only: bool = False,   # zero-cost application (Fig. 2 ablation)
     zero_cost_propagation: bool = False,  # Fig. 2/7 "Ideal" baseline
+    backend=None,
 ) -> RunResult:
     """Shared driver for MI+SW / MI+SW+HB / PIM-Only / Polynesia.
 
@@ -201,11 +215,17 @@ def run_multi_instance(
       MI+SW+HB   : all False with hw=HB_PARAMS
       PIM-Only   : analytics_on_pim=txn_on_pim=True, propagation on PIM cores
       Polynesia  : propagation_on_pim=analytics_on_pim=True (accelerators)
+
+    `backend` selects the execution backend for the whole hot path (update
+    shipping/application, snapshots, analytical scans); answers are
+    bit-identical across backends, only what executes the operators changes.
     """
+    be = get_backend(backend)
     cost = CostLog()
     store = RowStore(table)
     replica = DSMReplica.from_table(table)
-    cons = ConsistencyManager(replica, cost, on_pim=analytics_on_pim)
+    cons = ConsistencyManager(replica, cost, on_pim=analytics_on_pim,
+                              backend=be)
     placement = hybrid(hw.n_vaults * hw.n_stacks)
     results = []
     applications = 0
@@ -227,26 +247,37 @@ def run_multi_instance(
             logs = store.drain_logs()
             ship_cost = None if zero_cost_propagation else cost
             buffers = ship_updates(logs, store.n_cols, ship_cost,
-                                   on_pim=propagation_on_pim)
+                                   on_pim=propagation_on_pim, backend=be)
             for col_id, entries in buffers.items():
                 old = replica.columns[col_id]
                 app_cost = (None if (shipping_only or zero_cost_propagation)
                             else cost)
                 if optimized_application:
                     new = apply_updates(old, entries, app_cost,
-                                        on_pim=propagation_on_pim)
+                                        on_pim=propagation_on_pim, backend=be)
                 else:
                     new = apply_updates_naive(old, entries, app_cost)
                 cons.on_update(col_id, new)
                 applications += 1
 
         # -- analytical island (§6 consistency + §7 engine) -----------------
-        for q in q_chunk:
-            h = cons.begin_query(q.columns)
-            view = {c: cons.read(h, c) for c in q.columns}
-            results.append(engine.run_query_dsm(
-                view, q, cost, placement, on_pim=analytics_on_pim))
-            cons.end_query(h)
+        # Queries over the same column set run as one fused multi-query scan
+        # (one kernel launch per group on the accelerator backend). Every
+        # query still pins its own snapshot handle, and no update lands
+        # mid-round, so the group shares a single consistent view; answers
+        # are emitted in the original query order.
+        round_results: dict[int, int] = {}
+        for group in engine.group_queries(q_chunk):
+            handles = [cons.begin_query(q.columns) for q in group]
+            view = {c: cons.read(handles[0], c) for c in group[0].columns}
+            answers = engine.run_query_group_dsm(
+                view, group, cost, placement, on_pim=analytics_on_pim,
+                backend=be)
+            for q, a in zip(group, answers):
+                round_results[id(q)] = a
+            for h in handles:
+                cons.end_query(h)
+        results.extend(round_results[id(q)] for q in q_chunk)
     model = HardwareModel(hw)
     t = model.time(cost)
     return RunResult(name, len(stream), len(queries), t["txn"], t["ana"],

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.backend import get_backend
 from repro.core.hwmodel import CostLog
 from repro.core.nsm import UPDATE_DTYPE
 from repro.core.schema import LOG_ENTRY_BYTES
@@ -66,9 +67,15 @@ def ship_updates(
     n_cols: int,
     cost: CostLog | None = None,
     on_pim: bool = True,
+    backend=None,
 ) -> dict[int, np.ndarray]:
-    """Run all three shipping stages; returns {col_id: commit-ordered entries}."""
-    merged = merge_logs(per_thread_logs)
+    """Run all three shipping stages; returns {col_id: commit-ordered entries}.
+
+    Stage 1's k-way merge runs on the selected execution backend (the
+    PallasBackend dispatches to kernels/merge_runs, the comparator-tree
+    analog); stages 2-3 are host-side grouping either way.
+    """
+    merged = get_backend(backend).merge_update_logs(per_thread_logs)
     n = len(merged)
     targets = locate_columns(merged, n_cols)
     buffers: dict[int, np.ndarray] = {}

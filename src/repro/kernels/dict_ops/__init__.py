@@ -1,1 +1,1 @@
-from repro.kernels.dict_ops.ops import scan_filter_agg
+from repro.kernels.dict_ops.ops import scan_filter_agg, scan_filter_agg_batch

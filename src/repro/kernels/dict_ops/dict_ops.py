@@ -20,6 +20,63 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def _scan_exact_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
+                       lo_ref, hi_ref, cnt_ref, neg_ref):
+    """Multi-query exact variant: Q predicates share one pass over the tile.
+
+    Integer sums are accumulated as split 16-bit halves of the two's-
+    complement representation (per-block partials, so each int32 accumulator
+    holds at most block * 0xFFFF < 2^31); the host reassembles the exact
+    int64 total. This is what lets the Pallas backend return bit-identical
+    answers to the numpy engine, whose aggregate is an int64 histogram-dot.
+    """
+    f = fcodes_ref[...]                      # (block,)
+    a = acodes_ref[...]
+    valid = valid_ref[...]
+    b = bounds_ref[...]                      # (Q, 2) code ranges
+    lo = b[:, 0][:, None]
+    hi = b[:, 1][:, None]
+    mask = (f[None, :] >= lo) & (f[None, :] < hi) & (valid[None, :] != 0)
+    m = mask.astype(jnp.int32)               # (Q, block)
+    vals = jnp.take(dict_ref[...], a)        # decode via VMEM dictionary
+    lo16 = (vals & 0xFFFF)[None, :]          # low half of u32(vals)
+    hi16 = ((vals >> 16) & 0xFFFF)[None, :]  # high half (mask kills sign ext)
+    lo_ref[...] = jnp.sum(m * lo16, axis=1, keepdims=True).T
+    hi_ref[...] = jnp.sum(m * hi16, axis=1, keepdims=True).T
+    cnt_ref[...] = jnp.sum(m, axis=1, keepdims=True).T
+    neg_ref[...] = jnp.sum(m * (vals < 0)[None, :].astype(jnp.int32),
+                           axis=1, keepdims=True).T
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def scan_filter_agg_exact_kernel(fcodes, acodes, valid, dictionary, bounds,
+                                 block: int = 4096, interpret: bool = True):
+    """Per-block split-sum partials for Q fused queries; combined on host."""
+    (n,) = fcodes.shape
+    assert n % block == 0
+    n_blocks = n // block
+    k = dictionary.shape[0]
+    q = bounds.shape[0]
+    part = jax.ShapeDtypeStruct((n_blocks, q), jnp.int32)
+    return pl.pallas_call(
+        _scan_exact_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((q, 2), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0))),
+        out_shape=(part, part, part, part),
+        interpret=interpret,
+    )(fcodes, acodes, valid, dictionary, bounds)
+
+
 def _scan_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
                  sum_ref, cnt_ref):
     @pl.when(pl.program_id(0) == 0)

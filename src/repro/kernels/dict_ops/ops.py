@@ -1,17 +1,31 @@
-"""Public wrapper for the fused dictionary-encoded scan."""
+"""Public wrappers for the fused dictionary-encoded scan."""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.common import default_interpret
-from repro.kernels.dict_ops.dict_ops import scan_filter_agg_kernel
-from repro.kernels.dict_ops.ref import scan_filter_agg_ref
+from repro.kernels.common import default_interpret, next_pow2
+from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
+                                             scan_filter_agg_kernel)
+from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
+                                        scan_filter_agg_ref)
 
 
 def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
-                    use_pallas: bool = True, block: int = 4096):
-    """sum(dict[acodes]) and count over rows with code_lo <= fcodes < code_hi."""
+                    use_pallas: bool = True, block: int = 4096,
+                    exact: bool = False):
+    """sum(dict[acodes]) and count over rows with code_lo <= fcodes < code_hi.
+
+    exact=True routes through the split-accumulator kernel and returns exact
+    python ints (the execution-backend path); the default keeps the original
+    float32 accumulation.
+    """
+    if exact:
+        [(s, c)] = scan_filter_agg_batch(fcodes, acodes, valid, dictionary,
+                                         [(code_lo, code_hi)],
+                                         use_pallas=use_pallas, block=block)
+        return s, c
     if not use_pallas:
         return scan_filter_agg_ref(fcodes, acodes, valid, dictionary,
                                    code_lo, code_hi)
@@ -26,3 +40,45 @@ def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
                                   dictionary, bounds, block=block,
                                   interpret=default_interpret())
     return s[0], c[0]
+
+
+def scan_filter_agg_batch(fcodes, acodes, valid, dictionary, bounds,
+                          use_pallas: bool = True, block: int = 4096):
+    """One fused pass answering Q code-range queries over the same columns.
+
+    bounds: sequence of (code_lo, code_hi). Returns [(sum, count), ...] as
+    exact python ints — bit-identical to the numpy engine's int64 aggregate.
+    """
+    if not use_pallas:
+        return scan_filter_agg_batch_ref(fcodes, acodes, valid, dictionary,
+                                         bounds)
+    (n,) = fcodes.shape
+    if n == 0 or not len(bounds):
+        return [(0, 0) for _ in bounds]
+    pad = (-n) % block
+    if pad:
+        fcodes = jnp.pad(fcodes, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        acodes = jnp.pad(acodes, (0, pad))
+        valid = jnp.pad(valid, (0, pad))
+    # pad the dictionary to a power of two so growing dictionaries reuse
+    # compiled kernel shapes; padded entries are never addressed by a code
+    k = dictionary.shape[0]
+    kpad = next_pow2(k) - k
+    if kpad:
+        dictionary = jnp.pad(dictionary, (0, kpad))
+    # pad the query axis to a power of two as well (empty ranges), again to
+    # bound the number of distinct compiled shapes
+    nq = len(bounds)
+    barr = np.zeros((next_pow2(nq), 2), dtype=np.int32)
+    barr[:nq] = np.asarray(bounds, dtype=np.int32).reshape(-1, 2)
+    b = jnp.asarray(barr)
+    lo16, hi16, cnt, neg = scan_filter_agg_exact_kernel(
+        fcodes, acodes, valid.astype(jnp.int32), dictionary, b,
+        block=block, interpret=default_interpret())
+    lo64 = np.asarray(lo16).astype(np.int64).sum(axis=0)
+    hi64 = np.asarray(hi16).astype(np.int64).sum(axis=0)
+    counts = np.asarray(cnt).astype(np.int64).sum(axis=0)
+    negs = np.asarray(neg).astype(np.int64).sum(axis=0)
+    # reassemble: sum(u32(v)) - 2^32 * #negatives == exact signed sum
+    sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
+    return [(int(s), int(c)) for s, c in zip(sums[:nq], counts[:nq])]

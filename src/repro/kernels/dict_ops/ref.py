@@ -1,9 +1,22 @@
-"""Pure-jnp oracle for the fused scan-filter-aggregate."""
+"""Pure oracles for the fused scan-filter-aggregate."""
 
 import jax.numpy as jnp
+import numpy as np
 
 
 def scan_filter_agg_ref(fcodes, acodes, valid, dictionary, code_lo, code_hi):
     mask = (fcodes >= code_lo) & (fcodes < code_hi) & (valid != 0)
     vals = dictionary[acodes].astype(jnp.float32)
     return jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask.astype(jnp.int32))
+
+
+def scan_filter_agg_batch_ref(fcodes, acodes, valid, dictionary, bounds):
+    """Exact int64 oracle for the multi-query fused scan (numpy)."""
+    fcodes = np.asarray(fcodes)
+    valid = np.asarray(valid) != 0
+    vals = np.asarray(dictionary, dtype=np.int64)[np.asarray(acodes)]
+    out = []
+    for code_lo, code_hi in bounds:
+        mask = (fcodes >= code_lo) & (fcodes < code_hi) & valid
+        out.append((int(vals[mask].sum()), int(mask.sum())))
+    return out

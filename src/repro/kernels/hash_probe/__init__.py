@@ -1,1 +1,2 @@
+from repro.kernels.hash_probe.hash_probe import EMPTY as EMPTY_KEY
 from repro.kernels.hash_probe.ops import build_table, probe, HashTable

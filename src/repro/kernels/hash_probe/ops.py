@@ -38,13 +38,13 @@ def build_table(keys: np.ndarray, values: np.ndarray,
     slots = int(np.ceil(slots / 4) * 4)
     tk = np.full((n_buckets, slots), int(EMPTY), dtype=np.int32)
     tv = np.zeros((n_buckets, slots), dtype=np.int32)
-    rank = np.zeros(n_buckets, dtype=np.int64)
+    # vectorized slot assignment: rank within bucket = position - bucket start
     order = np.argsort(bucket, kind="stable")
-    for i in order:  # vectorizable; small tables (dictionaries) in practice
-        b = bucket[i]
-        tk[b, rank[b]] = keys[i]
-        tv[b, rank[b]] = values[i]
-        rank[b] += 1
+    sorted_bucket = bucket[order]
+    starts = np.searchsorted(sorted_bucket, np.arange(n_buckets))
+    rank = np.arange(len(keys), dtype=np.int64) - starts[sorted_bucket]
+    tk[sorted_bucket, rank] = keys[order]
+    tv[sorted_bucket, rank] = values[order]
     return HashTable(jnp.asarray(tk), jnp.asarray(tv))
 
 

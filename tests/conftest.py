@@ -1,7 +1,29 @@
 import numpy as np
 import pytest
 
+# Small default workload sizes keep the tier-1 suite fast (<~60 s);
+# heavyweight end-to-end sweeps carry @pytest.mark.slow and run via
+# `pytest -m slow`.
+SMALL_ROWS = 4000
+SMALL_COLS = 4
+SMALL_TXNS = 8000
+SMALL_QUERIES = 12
+
 
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_workload():
+    """(table, stream, queries) HTAP microbenchmark at small default sizes."""
+    from repro.core import engine, schema
+
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", SMALL_COLS, 32)
+    table = schema.gen_table(rng, sch, SMALL_ROWS)
+    stream = schema.gen_update_stream(rng, sch, SMALL_ROWS, SMALL_TXNS,
+                                      write_ratio=0.5)
+    queries = engine.gen_queries(rng, SMALL_QUERIES, SMALL_COLS)
+    return table, stream, queries

@@ -1,0 +1,308 @@
+"""Execution-backend layer (core/backend.py): registry semantics,
+cross-backend bit-identical equivalence for all six systems, kernel
+dispatch verification, and per-operator wrapper-vs-reference checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import backend as backend_mod
+from repro.core import engine, htap
+from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.backend import (NumpyBackend, PallasBackend,
+                                default_backend_name, get_backend,
+                                set_default_backend)
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import DSMReplica, decode_column, encode_column
+from repro.core.nsm import make_entries
+from repro.core.shipping import ship_updates
+
+KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch", "probe",
+                       "build_table", "merge_sorted_runs", "sort_1024",
+                       "sort_rows", "snapshot_copy")
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_get_backend_resolution():
+    assert get_backend() is get_backend(default_backend_name())
+    assert isinstance(get_backend("numpy"), NumpyBackend)
+    assert isinstance(get_backend("pallas"), PallasBackend)
+    be = NumpyBackend()
+    assert get_backend(be) is be
+    with pytest.raises(KeyError, match="unknown backend"):
+        get_backend("cuda")
+
+
+def test_set_default_backend_roundtrip():
+    old = default_backend_name()
+    try:
+        set_default_backend("pallas")
+        assert isinstance(get_backend(None), PallasBackend)
+    finally:
+        set_default_backend(old)
+    with pytest.raises(KeyError):
+        set_default_backend("not-a-backend")
+
+
+# ---------------------------------------------------------------------------
+# cross-backend equivalence: all six systems, bit-identical answers
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def workload(small_workload):
+    return small_workload
+
+
+@pytest.fixture(scope="module")
+def runs(workload):
+    table, stream, queries = workload
+    return {name: {be: fn(table, stream, queries, n_rounds=4, backend=be)
+                   for be in ("numpy", "pallas")}
+            for name, fn in htap.ALL_SYSTEMS.items()}
+
+
+@pytest.mark.parametrize("system", list(htap.ALL_SYSTEMS))
+def test_cross_backend_identical_answers(runs, system):
+    a, b = runs[system]["numpy"], runs[system]["pallas"]
+    assert a.results == b.results
+    assert a.stats == b.stats
+    assert (a.n_txn, a.n_ana) == (b.n_txn, b.n_ana)
+
+
+def test_numpy_backend_matches_default(workload):
+    """backend=None must be the numpy reference unless reconfigured."""
+    table, stream, queries = workload
+    a = htap.run_polynesia(table, stream, queries, n_rounds=4)
+    b = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                           backend="numpy")
+    assert a.results == b.results and a.stats == b.stats
+
+
+# ---------------------------------------------------------------------------
+# kernel dispatch: the PallasBackend must actually run the kernels
+# ---------------------------------------------------------------------------
+
+def _count_kernel_calls(monkeypatch):
+    counts = {}
+
+    def wrap(name, real):
+        def inner(*args, **kwargs):
+            counts[name] = counts.get(name, 0) + 1
+            return real(*args, **kwargs)
+        return inner
+
+    for name in KERNEL_ENTRY_POINTS:
+        monkeypatch.setattr(backend_mod, name,
+                            wrap(name, getattr(backend_mod, name)))
+    return counts
+
+
+def test_pallas_backend_invokes_kernels(workload, monkeypatch):
+    counts = _count_kernel_calls(monkeypatch)
+    table, stream, queries = workload
+    htap.run_polynesia(table, stream, queries, n_rounds=4, backend="pallas")
+    scans = counts.get("scan_filter_agg", 0) + counts.get(
+        "scan_filter_agg_batch", 0)
+    assert scans > 0, counts                       # fused analytical scans
+    assert counts.get("probe", 0) > 0, counts      # hash unit
+    assert counts.get("merge_sorted_runs", 0) > 0, counts   # merge unit
+    assert counts.get("snapshot_copy", 0) > 0, counts       # copy unit
+    sorts = counts.get("sort_1024", 0) + counts.get("sort_rows", 0)
+    assert sorts > 0, counts                       # sort unit
+
+
+def test_pallas_backend_fuses_query_groups(workload, monkeypatch):
+    """Same-column-set queries must share one multi-query kernel launch."""
+    counts = _count_kernel_calls(monkeypatch)
+    table, _, _ = workload
+    rng = np.random.default_rng(3)
+    queries = engine.gen_queries(rng, 8, 4, join_fraction=0.0,
+                                 same_column=True)   # one column set
+    replica = DSMReplica.from_table(table)
+    view = replica.columns
+    got = engine.run_query_group_dsm(view, queries, backend="pallas")
+    exp = [engine.run_query_dsm(view, q, backend="numpy") for q in queries]
+    assert got == exp
+    assert counts.get("scan_filter_agg_batch", 0) == 1
+    assert counts.get("scan_filter_agg", 0) == 0
+
+
+def test_pallas_backend_uses_kernel_for_join_queries(workload, monkeypatch):
+    """Join queries go through filter_agg_mask — that path must still run
+    the fused scan kernel, not inherit the numpy scan (MRO regression)."""
+    counts = _count_kernel_calls(monkeypatch)
+    table, _, _ = workload
+    rng = np.random.default_rng(7)
+    queries = engine.gen_queries(rng, 4, 4, join_fraction=1.0)
+    replica = DSMReplica.from_table(table)
+    got = engine.run_query_group_dsm(replica.columns, queries[:1],
+                                     backend="pallas")
+    exp = [engine.run_query_dsm(replica.columns, queries[0],
+                                backend="numpy")]
+    assert got == exp
+    assert counts.get("scan_filter_agg", 0) > 0, counts
+    assert counts.get("probe", 0) > 0, counts
+
+
+def test_numpy_backend_never_touches_kernels(workload, monkeypatch):
+    counts = _count_kernel_calls(monkeypatch)
+    table, stream, queries = workload
+    htap.run_polynesia(table, stream, queries, n_rounds=4, backend="numpy")
+    assert counts == {}
+
+
+# ---------------------------------------------------------------------------
+# per-operator wrapper-vs-reference checks (deterministic property sweeps)
+# ---------------------------------------------------------------------------
+
+def _encoded(rng, n, k, invalid_frac=0.1):
+    col = encode_column(rng.choice(np.arange(0, 1 << 24, dtype=np.int32),
+                                   size=k, replace=False)[
+                            rng.integers(0, k, size=n)])
+    if invalid_frac:
+        import jax.numpy as jnp
+        valid = rng.random(n) >= invalid_frac
+        col = type(col)(codes=col.codes, dictionary=col.dictionary,
+                        valid=jnp.asarray(valid), version=col.version)
+    return col
+
+
+@pytest.mark.parametrize("n,k", [(4096, 31), (5000, 997)])
+def test_filter_agg_operators_match(rng, n, k):
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    fcol = _encoded(rng, n, k)
+    acol = _encoded(rng, n, min(k, 257))
+    d = np.asarray(fcol.dictionary)
+    bounds = [(int(d[k // 4]), int(d[3 * k // 4])), (0, 1 << 24), (5, 4)]
+    for lo, hi in bounds:
+        assert pl_be.filter_agg(fcol, acol, lo, hi) == \
+            np_be.filter_agg(fcol, acol, lo, hi)
+        np.testing.assert_array_equal(pl_be.filter_mask(fcol, lo, hi),
+                                      np_be.filter_mask(fcol, lo, hi))
+    assert pl_be.filter_agg_batch(fcol, acol, bounds) == \
+        np_be.filter_agg_batch(fcol, acol, bounds)
+
+
+def test_hash_join_operator_matches(rng):
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    left = _encoded(rng, 3000, 101)
+    right = _encoded(rng, 2000, 211)
+    mask = rng.random(3000) < 0.4
+    assert pl_be.hash_join_count(left, right) == \
+        np_be.hash_join_count(left, right)
+    assert pl_be.hash_join_count(left, right, left_mask=mask) == \
+        np_be.hash_join_count(left, right, left_mask=mask)
+    assert pl_be.hash_join_count(left, left, left_mask=mask) == \
+        np_be.hash_join_count(left, left, left_mask=mask)
+
+
+def test_merge_update_logs_matches(rng):
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    ids = np.arange(700, dtype=np.int64)
+    rng.shuffle(ids)
+    logs = []
+    for t in range(4):
+        mine = np.sort(ids[t::4])
+        logs.append(make_entries(mine, np.ones(len(mine), np.int8),
+                                 rng.integers(0, 1000, len(mine)).astype(np.int32),
+                                 rng.integers(0, 50, len(mine)).astype(np.int64),
+                                 rng.integers(0, 4, len(mine)).astype(np.int32)))
+    a = np_be.merge_update_logs(logs)
+    b = pl_be.merge_update_logs(logs)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a["commit_id"], np.arange(700))
+
+
+def test_sort_merge_encode_operators_match(rng):
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    vals = rng.integers(0, 1 << 20, size=700).astype(np.int32)
+    np.testing.assert_array_equal(pl_be.sort_unique(vals),
+                                  np_be.sort_unique(vals))
+    old_d = np.unique(rng.integers(0, 1 << 20, size=300).astype(np.int32))
+    upd_d = np.unique(rng.integers(0, 1 << 20, size=90).astype(np.int32))
+    merged_np = np_be.merge_dictionaries(old_d, upd_d)
+    merged_pl = pl_be.merge_dictionaries(old_d, upd_d)
+    np.testing.assert_array_equal(merged_np, merged_pl)
+    # encoder: exact on values present in the dictionary
+    sample = merged_np[rng.integers(0, len(merged_np), size=256)]
+    np.testing.assert_array_equal(pl_be.make_encoder(merged_np)(sample),
+                                  np_be.make_encoder(merged_np)(sample))
+
+
+def test_snapshot_column_operator(rng):
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    col = _encoded(rng, 20_000, 63, invalid_frac=0.0)
+    for be in (np_be, pl_be):
+        snap = be.snapshot_column(col)
+        np.testing.assert_array_equal(np.asarray(snap.codes),
+                                      np.asarray(col.codes))
+        assert snap.version == col.version
+    # carrying clean chunks from a previous snapshot must still equal src
+    prev = pl_be.snapshot_column(col)
+    snap = pl_be.snapshot_column(col, prev=prev)
+    np.testing.assert_array_equal(np.asarray(snap.codes),
+                                  np.asarray(col.codes))
+
+
+def test_ship_updates_equivalent_buffers(rng):
+    stream_len = 600
+    logs = []
+    ids = np.arange(stream_len, dtype=np.int64)
+    rng.shuffle(ids)
+    for t in range(4):
+        mine = np.sort(ids[t::4])
+        logs.append(make_entries(mine, np.ones(len(mine), np.int8),
+                                 rng.integers(0, 1000, len(mine)).astype(np.int32),
+                                 rng.integers(0, 50, len(mine)).astype(np.int64),
+                                 rng.integers(0, 6, len(mine)).astype(np.int32)))
+    a = ship_updates([l.copy() for l in logs], 6, backend="numpy")
+    b = ship_updates([l.copy() for l in logs], 6, backend="pallas")
+    assert set(a) == set(b)
+    for c in a:
+        np.testing.assert_array_equal(a[c], b[c])
+
+
+def test_apply_updates_backends_agree_and_match_naive(rng):
+    """Deterministic stand-in for the hypothesis oracle test (test_update_
+    application.py skips when hypothesis is unavailable)."""
+    base = rng.integers(0, 500, size=300).astype(np.int32)
+    col = encode_column(base)
+    m = 64
+    ups = make_entries(np.arange(m, dtype=np.int64),
+                       np.ones(m, dtype=np.int8),
+                       rng.integers(0, 500, m).astype(np.int32),
+                       rng.integers(0, 300, m).astype(np.int64),
+                       np.zeros(m, dtype=np.int32))
+    oracle = apply_updates_naive(col, ups)
+    got = {be: apply_updates(col, ups, backend=be)
+           for be in ("numpy", "pallas")}
+    for be, g in got.items():
+        # decoded contents must match the naive oracle (the dictionary may
+        # be a superset: the optimized path keeps overwritten update values)
+        np.testing.assert_array_equal(np.asarray(decode_column(g)),
+                                      np.asarray(decode_column(oracle)), be)
+    np.testing.assert_array_equal(np.asarray(got["numpy"].dictionary),
+                                  np.asarray(got["pallas"].dictionary))
+    np.testing.assert_array_equal(np.asarray(got["numpy"].codes),
+                                  np.asarray(got["pallas"].codes))
+
+
+def test_consistency_manager_pallas_snapshots(rng):
+    table = rng.integers(0, 50, size=(9000, 3)).astype(np.int32)
+    rep = DSMReplica.from_table(table)
+    cons = ConsistencyManager(rep, backend="pallas")
+    h = cons.begin_query([0, 1])
+    before = np.asarray(decode_column(cons.read(h, 0))).copy()
+    ups = make_entries(np.array([0], np.int64), np.array([1], np.int8),
+                       np.array([999_999], np.int32), np.array([5], np.int64),
+                       np.array([0], np.int32))
+    cons.on_update(0, apply_updates(rep.columns[0], ups, backend="pallas"))
+    # pinned snapshot is frozen; a fresh query sees the update
+    np.testing.assert_array_equal(
+        np.asarray(decode_column(cons.read(h, 0))), before)
+    cons.end_query(h)
+    h2 = cons.begin_query([0])
+    assert int(np.asarray(decode_column(cons.read(h2, 0)))[5]) == 999_999
+    cons.end_query(h2)

@@ -9,6 +9,9 @@ import textwrap
 import jax
 import pytest
 
+# multi-minute 8-host-device subprocess runs: opt-in via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_NAMES, get_config
 from repro.launch.steps import abstract_params, pad_for_mesh
 from repro.models.config import ModelConfig

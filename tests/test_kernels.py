@@ -121,6 +121,7 @@ def test_decode_attention_sweep(rng, H, Hkv, S, L, cap):
                                rtol=2e-5, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_flash_attention_matches_sdpa(rng):
     from repro.nn.attention import _sdpa, causal_mask
     from repro.nn.flash import flash_attention

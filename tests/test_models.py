@@ -5,6 +5,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# ~90 s of interpret-mode model sweeps: opt-in via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 from repro.configs import ARCH_NAMES, get_config, get_smoke_config
 from repro.models import (encdec_apply, init_encdec, init_encdec_cache,
                           init_lm, init_lm_cache, lm_apply, lm_decode_step)

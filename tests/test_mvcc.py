@@ -1,6 +1,10 @@
 """§3.1 MVCC baseline: snapshot reads against a brute-force oracle."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.mvcc import MVCCStore

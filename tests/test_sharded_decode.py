@@ -5,6 +5,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
+# multi-minute 8-host-device subprocess run: opt-in via `pytest -m slow`
+pytestmark = pytest.mark.slow
+
 _PROG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

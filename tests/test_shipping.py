@@ -1,6 +1,10 @@
 """§5.1 update shipping: merge order, per-column buffers, capacity trigger."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nsm import RowStore, make_entries

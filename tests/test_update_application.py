@@ -1,6 +1,10 @@
 """§5.2: the optimized two-stage algorithm must match the naive oracle."""
 
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (pip install .[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.application import apply_updates, apply_updates_naive

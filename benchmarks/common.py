@@ -29,6 +29,20 @@ def workload(rng, n_rows=20_000, n_cols=8, n_txn=40_000, n_queries=32,
     return table, stream, queries
 
 
+def ci_workload():
+    """The CI bench gate's small fixed workload (deterministic seed).
+
+    Kept deliberately tiny: the gate compares *modeled* throughput (exact
+    arithmetic over the cost log), so workload size only affects CI wall
+    time, not gate sensitivity. Must stay in sync with
+    benchmarks/baseline.json — regenerate it via
+    ``python -m benchmarks.run ci --json=benchmarks/baseline.json``
+    whenever the workload or the cost model intentionally changes.
+    """
+    return workload(np.random.default_rng(0), n_rows=4000, n_cols=4,
+                    n_txn=8000, n_queries=12)
+
+
 def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)

@@ -1,8 +1,14 @@
-"""Fig. 10 — multi-stack scaling (left) and total system energy (right).
+"""Fig. 10 — multi-stack scaling (left) and total system energy (right),
+plus the analytical-island (shard) scale-out sweep.
 
 Paper: Polynesia outperforms MI by up to 3.0X as stacks grow 1->4 and
 scales well (txn drops only 8.8% at 4 stacks vs 54.4% for MI); energy is
-48% lower than MI+SW (the prior lowest-energy system).
+48% lower than MI+SW (the prior lowest-energy system). §4/Fig. 5 scale the
+analytical side out by replicating the analytical island; here that is the
+ShardedBackend (`--shards`), and modeled analytical throughput must grow
+monotonically with island count while answers stay bit-identical.
+
+Standalone: python -m benchmarks.fig10_scaling_energy [--shards 1,2,4,8]
 """
 
 import dataclasses
@@ -13,13 +19,15 @@ from benchmarks.common import ClaimTable, timed, workload
 from repro.core import htap
 from repro.core.hwmodel import HMC_PARAMS
 
+DEFAULT_SHARDS = (1, 2, 4, 8)
+
 
 def _scaled(stacks: int):
     return dataclasses.replace(HMC_PARAMS, name=f"hmc_x{stacks}",
                                n_stacks=stacks)
 
 
-def run():
+def run(shards=DEFAULT_SHARDS):
     rng = np.random.default_rng(0)
     claims = ClaimTable("fig10")
     rows = []
@@ -45,6 +53,33 @@ def run():
     claims.add("Polynesia vs MI analytical @4 stacks (up to)", 3.0,
                ratios[4])
 
+    # analytical-island scale-out (§4/Fig. 5): same workload, same answers,
+    # N row-sharded islands -> modeled analytical throughput must be
+    # monotone in N (each island brings its own PIM cores + stack bandwidth)
+    table, stream, queries = workload(np.random.default_rng(1),
+                                      n_rows=20_000, n_cols=8,
+                                      n_txn=40_000, n_queries=32)
+    ana = {}
+    answers = None
+    for s in shards:
+        res, us = timed(htap.run_polynesia, table, stream, queries,
+                        n_shards=s)
+        ana[s] = res.ana_throughput
+        if answers is None:
+            answers = res.results
+        else:
+            assert answers == res.results, \
+                f"sharded answers diverged at {s} islands"
+        rows.append((f"fig10_shards{s}", us,
+                     f"ana={res.ana_throughput:.3e};"
+                     f"txn={res.txn_throughput:.3e}"))
+    order = sorted(ana)
+    assert all(ana[a] <= ana[b] for a, b in zip(order, order[1:])), \
+        f"analytical throughput not monotone in island count: {ana}"
+    claims.add(f"analytical islands scale-out {order[0]}->{order[-1]} "
+               "(linear would be)", float(order[-1] / order[0]),
+               ana[order[-1]] / ana[order[0]])
+
     # energy at 1 stack (paper Fig. 10-right)
     table, stream, queries = workload(np.random.default_rng(0),
                                       n_rows=20_000, n_cols=8,
@@ -61,3 +96,16 @@ def run():
     assert ratios[4] >= ratios[1] * 0.9  # scaling holds up
     claims.show()
     return rows + claims.csv_rows()
+
+
+if __name__ == "__main__":
+    import argparse
+
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--shards", default="1,2,4,8",
+                        help="comma-separated island counts to sweep")
+    ns = parser.parse_args()
+    sweep = tuple(int(s) for s in ns.shards.split(","))
+    print("name,us_per_call,derived")
+    for name, us, derived in run(shards=sweep):
+        print(f"{name},{us:.1f},{derived}")

@@ -3,14 +3,73 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus paper-claim check tables
 on stderr-style stdout lines prefixed with spaces).
 
-Usage: python -m benchmarks.run [fig6] [--backend=numpy|pallas]
+Usage: python -m benchmarks.run [figN|ci] [--backend=numpy|pallas]
+                                [--shards=N] [--json=PATH]
 
 --backend selects the execution backend (core/backend.py) for every system
-driver; the REPRO_BACKEND environment variable does the same.
+driver; the REPRO_BACKEND environment variable does the same. --shards
+fans analytics out over N analytical islands (ShardedBackend; REPRO_SHARDS
+works too). The ``ci`` tag runs the small fixed CI workload over
+numpy/pallas x shards {1, 4} and writes the throughput gate file
+(--json, default BENCH_ci.json) compared by tools/check_bench.py.
 """
 
+import json
 import sys
 import time
+
+USAGE = ("usage: python -m benchmarks.run [figN|ci] [--backend=NAME] "
+         "[--shards=N] [--json=PATH]")
+
+CI_MATRIX = [("numpy", 1), ("numpy", 4), ("pallas", 1), ("pallas", 4)]
+
+
+def ci_bench(json_path: str) -> None:
+    """Small fixed workload -> modeled throughput gate file.
+
+    Runs Polynesia over the backend x shard matrix; every combo must
+    produce the same (bit-identical) query answers, and each combo's
+    modeled txn/ana throughput lands in the JSON that CI compares against
+    benchmarks/baseline.json. Modeled throughputs are deterministic
+    (analytic cost model over a seeded workload), so a regression gate on
+    them is machine-independent.
+    """
+    import numpy as np
+
+    from benchmarks.common import ci_workload
+    from repro.core import htap
+
+    metrics = {}
+    answers = None
+    wall_us = {}
+    for be, shards in CI_MATRIX:
+        table, stream, queries = ci_workload()
+        t0 = time.perf_counter()
+        res = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                                 backend=be, n_shards=shards)
+        wall_us[f"{be}@{shards}"] = (time.perf_counter() - t0) * 1e6
+        if answers is None:
+            answers = res.results
+        elif answers != res.results:
+            sys.exit(f"CI bench: {be}@{shards} answers diverged from "
+                     "the first combo — exactness contract broken")
+        metrics[f"{be}@{shards}"] = {
+            "txn_tps": res.txn_throughput,
+            "ana_qps": res.ana_throughput,
+        }
+    payload = {
+        "workload": "ci_workload (seed 0): 4000 rows x 4 cols, 8000 txn, "
+                    "12 queries, n_rounds=4, Polynesia",
+        "answers_checksum": int(np.int64(sum(a % (1 << 31) for a in answers))),
+        "metrics": metrics,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {json_path}")
+    for combo, m in sorted(metrics.items()):
+        print(f"ci_{combo},{wall_us[combo]:.1f},"
+              f"txn_tps={m['txn_tps']:.6e};ana_qps={m['ana_qps']:.6e}")
 
 
 def main() -> None:
@@ -32,19 +91,29 @@ def main() -> None:
         ("lm_step", lm_step),
     ]
     args = sys.argv[1:]
+    json_path = "BENCH_ci.json"
     for a in [a for a in args if a.startswith("--")]:
         if a.startswith("--backend="):
             from repro.core.backend import set_default_backend
             try:
                 set_default_backend(a.split("=", 1)[1])
-            except KeyError as e:
-                sys.exit(f"{e.args[0]}; usage: "
-                         "python -m benchmarks.run [figN] [--backend=NAME]")
-            args.remove(a)
+            except (KeyError, ValueError) as e:
+                sys.exit(f"{e.args[0]}; {USAGE}")
+        elif a.startswith("--shards="):
+            from repro.core.backend import set_default_n_shards
+            try:
+                set_default_n_shards(int(a.split("=", 1)[1]))
+            except ValueError as e:
+                sys.exit(f"{e}; {USAGE}")
+        elif a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
         else:
-            sys.exit(f"unknown option {a!r}; usage: "
-                     "python -m benchmarks.run [figN] [--backend=NAME]")
+            sys.exit(f"unknown option {a!r}; {USAGE}")
+        args.remove(a)
     only = args[0] if args else None
+    if only == "ci":
+        ci_bench(json_path)
+        return
     all_rows = []
     print("name,us_per_call,derived")
     for tag, mod in modules:

@@ -28,8 +28,8 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.backend import get_backend
-from repro.core.dsm import EncodedColumn
+from repro.core.backend import ShardedBackend, get_backend
+from repro.core.dsm import EncodedColumn, shard_bounds
 from repro.core.hwmodel import CostLog
 from repro.core.schema import VALUE_BYTES
 
@@ -81,6 +81,68 @@ def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
     return codes, valid
 
 
+def _merge_dictionary_stages(be, old_dict: np.ndarray, write_vals: np.ndarray):
+    """Stages 1-2 of the optimized application, shared by the unsharded and
+    sharded paths (their bit-identity contract depends on this being ONE
+    code path): sort+dedupe the pending update values (1024-value sorter),
+    linear-merge the sorted dictionaries (merge unit), and build the
+    old->new hash index (hash unit).
+
+    Returns (update_dict, new_dict, encode, old_to_new).
+    """
+    update_dict = (be.sort_unique(write_vals) if len(write_vals)
+                   else np.empty(0, np.int32))
+    new_dict = be.merge_dictionaries(old_dict, update_dict)
+    encode = be.make_encoder(new_dict)
+    old_to_new = encode(old_dict)  # the "hash index"
+    return update_dict, new_dict, encode, old_to_new
+
+
+def route_updates(updates: np.ndarray, bounds: list[int]) -> np.ndarray:
+    """Owning-shard id for each update, routed by row id.
+
+    `bounds` are contiguous shard boundaries (dsm.shard_bounds over the
+    post-insert row count); rows at or past the last boundary (fresh
+    inserts) belong to the last shard.
+    """
+    shard = np.searchsorted(np.asarray(bounds), updates["row"],
+                            side="right") - 1
+    return np.clip(shard, 0, len(bounds) - 2)
+
+
+def _optimized_apply_cost(cost: CostLog, on_pim: bool, m: int, n: int,
+                          k_old: int, k_new: int, n_update_dict: int,
+                          bit_width: int) -> None:
+    """Cost events for the optimized two-stage application (shared by the
+    unsharded and sharded paths). The sharded path emits the same events:
+    the dictionary stages (sorter/merge/hash) are replicated per island so
+    their modeled latency is island-independent, while the stage-3
+    re-encode bytes are row-partitioned and ride the island-scaled copy/
+    bandwidth rates (see hwmodel.phase_time)."""
+    # soft partitioning: updates touch at most m partitions
+    n_eff = min(n, max(1, min(m, n // PARTITION_ROWS + 1)) * PARTITION_ROWS)
+    enc_eff = n_eff * bit_width / 8.0
+    if on_pim:
+        cost.add(phase="apply", island="ana", resource="sorter", items=m)
+        cost.add(phase="apply", island="ana", resource="merge",
+                 items=k_old + n_update_dict,
+                 bytes_local=(k_old + k_new) * VALUE_BYTES)
+        # index-based re-encode: one sequential pass (index fits in VMEM/SRAM)
+        cost.add(phase="apply", island="ana", resource="copy",
+                 bytes_local=2 * enc_eff)
+        cost.add(phase="apply", island="ana", resource="hash",
+                 items=m, bytes_local=m * 16)
+    else:
+        cost.add(
+            phase="apply", island="txn", resource="cpu",
+            cycles=m * np.log2(max(m, 2)) * CPU_CYCLES_PER_CMP        # sort updates
+            + (k_old + k_new) * CPU_CYCLES_PER_SCAN_ITEM              # dict merge
+            + n_eff * 8.0                                             # unpack+reindex+pack
+            + m * CPU_CYCLES_PER_LOOKUP,                              # encode updates
+            bytes_offchip=2 * enc_eff + (k_old + k_new) * VALUE_BYTES + m * 16,
+        )
+
+
 def apply_updates(
     col: EncodedColumn,
     updates: np.ndarray,
@@ -94,8 +156,14 @@ def apply_updates(
     dispatches the sort to kernels/bitonic_sort, the dictionary merge to
     kernels/merge_runs and the value->code encodes to kernels/hash_probe;
     the NumpyBackend keeps the original unique/union1d/searchsorted path.
+    A ShardedBackend routes row ops to their owning islands (see
+    `apply_updates_shards`) — the result is bit-identical either way.
     """
     be = get_backend(backend)
+    if isinstance(be, ShardedBackend) and be.n_shards > 1:
+        from repro.core.dsm import concat_columns
+        return concat_columns(apply_updates_shards(col, updates, cost,
+                                                   on_pim, be))
     old_codes = np.asarray(col.codes)
     old_dict = np.asarray(col.dictionary)
     valid = np.array(col.valid, copy=True)
@@ -104,15 +172,10 @@ def apply_updates(
     write_vals = np.concatenate([mods["value"], ins["value"]])
     m = len(updates)
 
-    # Stage 1: sort+dedupe the pending update values -> update dictionary.
-    # (hardware: 1024-value bitonic sorter; kernels/bitonic_sort)
-    update_dict = be.sort_unique(write_vals) if len(write_vals) else np.empty(0, np.int32)
-
-    # Stage 2: linear merge of two sorted dictionaries + old->new hash index.
-    # (hardware: merge unit + hash unit)
-    new_dict = be.merge_dictionaries(old_dict, update_dict)
-    encode = be.make_encoder(new_dict)
-    old_to_new = encode(old_dict)  # the "hash index"
+    # Stages 1-2: update-dictionary sort + dictionary merge + hash index.
+    # (hardware: 1024-value bitonic sorter, merge unit, hash unit)
+    update_dict, new_dict, encode, old_to_new = _merge_dictionary_stages(
+        be, old_dict, write_vals)
 
     # Stage 3: sequential re-encode through the index + scatter update codes.
     new_codes = old_to_new[old_codes].astype(np.int32)
@@ -120,29 +183,8 @@ def apply_updates(
                                       dels, encode=encode)
 
     if cost is not None and m:
-        k_new = len(new_dict)
-        # soft partitioning: updates touch at most m partitions
-        n_eff = min(n, max(1, min(m, n // PARTITION_ROWS + 1)) * PARTITION_ROWS)
-        enc_eff = n_eff * col.bit_width / 8.0
-        if on_pim:
-            cost.add(phase="apply", island="ana", resource="sorter", items=m)
-            cost.add(phase="apply", island="ana", resource="merge",
-                     items=k_old + len(update_dict),
-                     bytes_local=(k_old + k_new) * VALUE_BYTES)
-            # index-based re-encode: one sequential pass (index fits in VMEM/SRAM)
-            cost.add(phase="apply", island="ana", resource="copy",
-                     bytes_local=2 * enc_eff)
-            cost.add(phase="apply", island="ana", resource="hash",
-                     items=m, bytes_local=m * 16)
-        else:
-            cost.add(
-                phase="apply", island="txn", resource="cpu",
-                cycles=m * np.log2(max(m, 2)) * CPU_CYCLES_PER_CMP        # sort updates
-                + (k_old + k_new) * CPU_CYCLES_PER_SCAN_ITEM              # dict merge
-                + n_eff * 8.0                                             # unpack+reindex+pack
-                + m * CPU_CYCLES_PER_LOOKUP,                              # encode updates
-                bytes_offchip=2 * enc_eff + (k_old + k_new) * VALUE_BYTES + m * 16,
-            )
+        _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
+                              len(update_dict), col.bit_width)
 
     import jax.numpy as jnp
     return EncodedColumn(
@@ -151,6 +193,83 @@ def apply_updates(
         valid=jnp.asarray(valid),
         version=col.version + 1,
     )
+
+
+def apply_updates_shards(
+    col: EncodedColumn,
+    updates: np.ndarray,
+    cost: CostLog | None = None,
+    on_pim: bool = True,
+    backend=None,
+) -> list[EncodedColumn]:
+    """Update application across N analytical islands (row-wise shards).
+
+    The dictionary is replicated across islands, so stages 1-2 (update-
+    dictionary sort, dictionary merge, old->new index) run once on the
+    inner backend. Stage 3 is island-local: each update is routed to its
+    owning shard by row id (`route_updates`), each island re-encodes its
+    shard through the shared index and scatters only its own row ops.
+
+    Returns the per-island shard columns, one per island in row order —
+    the units the Phase-2 swap installs all-or-none
+    (`ConsistencyManager.on_update_shards`). Because the shards partition
+    the rows and every island uses the same merged dictionary, their
+    concatenation is bit-identical to the unsharded `apply_updates` — that
+    equivalence is asserted in tests/test_sharded_backend.py.
+    """
+    be = get_backend(backend)
+    if not isinstance(be, ShardedBackend):
+        raise ValueError("apply_updates_shards needs a ShardedBackend "
+                         f"(got {getattr(be, 'name', be)!r}); use "
+                         "apply_updates for single-replica application")
+    inner = be.inner
+    old_codes = np.asarray(col.codes)
+    old_dict = np.asarray(col.dictionary)
+    old_valid = np.asarray(col.valid)
+    n, k_old = old_codes.shape[0], old_dict.shape[0]
+    mods, ins, dels = _split_ops(updates)
+    write_vals = np.concatenate([mods["value"], ins["value"]])
+    m = len(updates)
+
+    # Stages 1-2 once on the shared (replicated) dictionary — the same
+    # code path as the unsharded apply, so the maps cannot drift apart.
+    update_dict, new_dict, encode, old_to_new = _merge_dictionary_stages(
+        inner, old_dict, write_vals)
+
+    # Stage 3 per island: route row ops to owning shards over the
+    # post-insert row span (inserts extend the last shard).
+    n_new = max(n, int(ins["row"].max()) + 1) if len(ins) else n
+    bounds = shard_bounds(n_new, be.n_shards)
+    owner = route_updates(updates, bounds)
+    codes_parts, valid_parts = [], []
+    for s in range(be.n_shards):
+        lo, hi = bounds[s], bounds[s + 1]
+        src_lo, src_hi = min(lo, n), min(hi, n)
+        codes_s = old_to_new[old_codes[src_lo:src_hi]].astype(np.int32)
+        valid_s = np.array(old_valid[src_lo:src_hi], copy=True)
+        pad = (hi - lo) - (src_hi - src_lo)
+        if pad:  # rows this island gains from inserts
+            codes_s = np.concatenate([codes_s, np.zeros(pad, np.int32)])
+            valid_s = np.concatenate([valid_s, np.zeros(pad, bool)])
+        ups_s = updates[owner == s]
+        ups_s["row"] = ups_s["row"] - lo  # island-local row ids
+        m_s, i_s, d_s = _split_ops(ups_s)
+        codes_s, valid_s = _apply_row_ops(codes_s, valid_s, new_dict,
+                                          m_s, i_s, d_s, encode=encode)
+        codes_parts.append(codes_s)
+        valid_parts.append(valid_s)
+
+    if cost is not None and m:
+        _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
+                              len(update_dict), col.bit_width)
+
+    import jax.numpy as jnp
+    shared_dict = jnp.asarray(new_dict)  # one replicated dictionary object
+    return [
+        EncodedColumn(codes=jnp.asarray(codes_s), dictionary=shared_dict,
+                      valid=jnp.asarray(valid_s), version=col.version + 1)
+        for codes_s, valid_s in zip(codes_parts, valid_parts)
+    ]
 
 
 def apply_updates_naive(

@@ -8,7 +8,11 @@ surface below, so the same drivers can run either on
 * ``NumpyBackend`` — the original pure-numpy code paths, extracted here as
   the functional reference, or
 * ``PallasBackend`` — dispatching each operator to its hardware-analog
-  kernel (interpret mode off-TPU):
+  kernel (interpret mode off-TPU), or
+* ``ShardedBackend`` — N analytical islands, each owning a row-wise DSM
+  shard, fanning scans out over any inner backend and reducing the exact
+  partial aggregates (spec ``"pallas@4"``, ``n_shards=`` on the drivers,
+  or the ``REPRO_SHARDS`` environment variable):
 
     ==========================  =================================
     operator                    kernel
@@ -37,7 +41,8 @@ from typing import Callable, Iterable, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsm import EncodedColumn
+from repro.core.dsm import (EncodedColumn, concat_columns, shard_bounds,
+                            shard_column)
 from repro.core.nsm import UPDATE_DTYPE
 from repro.kernels.bitonic_sort import sort_1024, sort_rows
 from repro.kernels.dict_ops import scan_filter_agg, scan_filter_agg_batch
@@ -121,19 +126,22 @@ class ExecutionBackend(abc.ABC):
         clean chunks may be carried instead of re-read."""
 
 
+def _side_counts(col: EncodedColumn, mask: np.ndarray | None
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """One join side's per-dictionary-value occurrence counts."""
+    values = np.asarray(col.dictionary)
+    keep = np.asarray(col.valid)
+    if mask is not None:
+        keep = np.asarray(mask) & keep
+    codes = np.asarray(col.codes)[keep]
+    return values, np.bincount(codes, minlength=len(values)).astype(np.int64)
+
+
 def _join_counts(left: EncodedColumn, right: EncodedColumn,
                  left_mask: np.ndarray | None):
     """Shared join prep: per-dictionary-value occurrence counts."""
-    lv = np.asarray(left.dictionary)
-    rv = np.asarray(right.dictionary)
-    lcodes = np.asarray(left.codes)
-    if left_mask is not None:
-        lcodes = lcodes[left_mask & np.asarray(left.valid)]
-    else:
-        lcodes = lcodes[np.asarray(left.valid)]
-    rcodes = np.asarray(right.codes)[np.asarray(right.valid)]
-    lcount = np.bincount(lcodes, minlength=len(lv)).astype(np.int64)
-    rcount = np.bincount(rcodes, minlength=len(rv)).astype(np.int64)
+    lv, lcount = _side_counts(left, left_mask)
+    rv, rcount = _side_counts(right, None)
     return lv, rv, lcount, rcount
 
 
@@ -186,10 +194,13 @@ class NumpyBackend(ExecutionBackend):
             out.append((int(counts @ adict), int(mask.sum())))
         return out
 
-    def hash_join_count(self, left, right, left_mask=None):
-        lv, rv, lcount, rcount = _join_counts(left, right, left_mask)
+    def _join_match(self, lv, rv, lcount, rcount):
+        """Match pre-grouped dictionary counts (the join's build+probe)."""
         common, li, ri = np.intersect1d(lv, rv, return_indices=True)
         return int((lcount[li] * rcount[ri]).sum())
+
+    def hash_join_count(self, left, right, left_mask=None):
+        return self._join_match(*_join_counts(left, right, left_mask))
 
     def merge_update_logs(self, logs):
         logs = [l for l in logs if len(l)]
@@ -222,8 +233,10 @@ class PallasBackend(NumpyBackend):
     Inherits numpy glue (bincounts, grouping) — the paper's fixed-function
     units do the data-plane work while small control-plane steps stay on the
     host. Falls back to the numpy path only where a kernel precondition
-    can't hold (e.g. commit ids beyond int32, EMPTY_KEY colliding with a
-    dictionary value); every fallback keeps results identical.
+    can't hold (e.g. sort/probe values beyond int32, EMPTY_KEY colliding
+    with a dictionary value, a commit id equal to the int64 merge
+    sentinel); every fallback keeps results identical. Full int64 commit
+    ids are first-class in the merge unit ((hi, lo) int32 lanes).
     """
 
     name = "pallas"
@@ -250,13 +263,11 @@ class PallasBackend(NumpyBackend):
         return scan_filter_agg_batch(fcol.codes, acol.codes, fcol.valid,
                                      acol.dictionary, code_bounds)
 
-    def hash_join_count(self, left, right, left_mask=None):
-        lv, rv, lcount, rcount = _join_counts(left, right, left_mask)
+    def _join_match(self, lv, rv, lcount, rcount):
         if (len(rv) == 0 or len(lv) == 0
                 or (rv == int(EMPTY_KEY)).any()       # can't build the table
                 or (lv == int(EMPTY_KEY)).any()):     # probe matches empties
-            common, li, ri = np.intersect1d(lv, rv, return_indices=True)
-            return int((lcount[li] * rcount[ri]).sum())
+            return super()._join_match(lv, rv, lcount, rcount)
         # hash unit: probe each left dictionary value against the right
         # dictionary's table; hits multiply pre-grouped occurrence counts.
         table = build_table(rv, np.arange(len(rv), dtype=np.int32))
@@ -272,11 +283,9 @@ class PallasBackend(NumpyBackend):
         cat = np.concatenate(logs)
         if len(logs) == 1:
             return cat
-        keys = cat["commit_id"]
-        if len(keys) and (keys.min() < 0 or keys.max() >= np.iinfo(np.int32).max):
-            return super().merge_update_logs(logs)  # int32 comparator tree
-        runs = [jnp.asarray(l["commit_id"].astype(np.int32)) for l in logs]
-        _, src = merge_sorted_runs(runs)
+        # full-width int64 commit ids: the comparator tree merges (hi, lo)
+        # int32 lanes, so ids beyond 2^31 need no fallback path
+        _, src = merge_sorted_runs([l["commit_id"] for l in logs])
         idx = np.asarray(src)
         return cat[idx[idx >= 0]]
 
@@ -294,8 +303,7 @@ class PallasBackend(NumpyBackend):
     def merge_dictionaries(self, old_dict, update_dict):
         if len(old_dict) == 0 or len(update_dict) == 0:
             return super().merge_dictionaries(old_dict, update_dict)
-        _, src = merge_sorted_runs([jnp.asarray(old_dict),
-                                    jnp.asarray(update_dict)])
+        _, src = merge_sorted_runs([old_dict, update_dict])
         idx = np.asarray(src)
         cat = np.concatenate([np.asarray(old_dict), np.asarray(update_dict)])
         merged = cat[idx[idx >= 0]]
@@ -350,6 +358,130 @@ class PallasBackend(NumpyBackend):
 
 
 # ---------------------------------------------------------------------------
+# Sharded multi-replica analytical islands (§4, Fig. 5)
+# ---------------------------------------------------------------------------
+
+def reduce_partials(kind: str, parts: Sequence[int | None]) -> int | None:
+    """Exact cross-shard reduction of split-accumulator partials.
+
+    Partial aggregates arrive from each island as exact python ints (the
+    kernels' split accumulators are reassembled per shard); the cross-shard
+    reduce stays in plain arbitrary-precision int arithmetic so the final
+    answer is bit-identical to the unsharded scan. ``None`` marks a partial
+    from a shard with no qualifying rows (identity element for min/max).
+    """
+    live = [int(p) for p in parts if p is not None]
+    if kind in ("sum", "count"):
+        return sum(live)
+    if kind == "min":
+        return min(live) if live else None
+    if kind == "max":
+        return max(live) if live else None
+    raise ValueError(f"unknown aggregate kind {kind!r}")
+
+
+class ShardedBackend(ExecutionBackend):
+    """Multiple analytical islands: N row-wise DSM shards over one inner backend.
+
+    Polynesia scales analytics out by replicating the analytical island —
+    each island owns a DSM shard plus a replicated dictionary (§4, Fig. 5).
+    This wrapper partitions every column row-wise into ``n_shards``
+    contiguous shards (`dsm.shard_column`; at most two distinct shard
+    shapes, so the per-shard kernel calls batch/vmap cleanly), fans the
+    scan operators out shard-by-shard on the inner backend, and reduces
+    the exact partial (sum, count) pairs with `reduce_partials`.
+
+    Update-propagation operators (log merge, update-dictionary sort,
+    dictionary merge, value encode) delegate to the inner backend: the
+    dictionary is replicated, so those stages run once and every island
+    re-encodes its shard through the same old->new map (see
+    application.apply_updates, which routes row ops to owning shards).
+    Snapshots run per shard through the inner copy unit.
+    """
+
+    def __init__(self, inner: str | ExecutionBackend, n_shards: int):
+        if isinstance(inner, ShardedBackend):
+            raise ValueError("cannot nest ShardedBackend inside ShardedBackend")
+        inner = get_backend(inner, n_shards=1)
+        if n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+        self.inner = inner
+        self.n_shards = int(n_shards)
+        self.name = f"{inner.name}@{self.n_shards}"
+
+    def _shards(self, *cols):
+        """Consistently partition columns; yields per-island column tuples."""
+        return zip(*(shard_column(c, self.n_shards) for c in cols))
+
+    # -- analytical engine -------------------------------------------------
+    def filter_mask(self, col, lo, hi):
+        return np.concatenate([self.inner.filter_mask(s, lo, hi)
+                               for s in shard_column(col, self.n_shards)])
+
+    def filter_agg(self, fcol, acol, lo, hi):
+        parts = [self.inner.filter_agg(fs, as_, lo, hi)
+                 for fs, as_ in self._shards(fcol, acol)]
+        return (reduce_partials("sum", [s for s, _ in parts]),
+                reduce_partials("count", [c for _, c in parts]))
+
+    def filter_agg_mask(self, fcol, acol, lo, hi):
+        total_s, total_c, masks = 0, 0, []
+        for fs, as_ in self._shards(fcol, acol):
+            s, c, m = self.inner.filter_agg_mask(fs, as_, lo, hi)
+            total_s += int(s)
+            total_c += int(c)
+            masks.append(m)
+        return total_s, total_c, np.concatenate(masks)
+
+    def filter_agg_batch(self, fcol, acol, bounds):
+        per_shard = [self.inner.filter_agg_batch(fs, as_, bounds)
+                     for fs, as_ in self._shards(fcol, acol)]
+        return [(reduce_partials("sum", [p[q][0] for p in per_shard]),
+                 reduce_partials("count", [p[q][1] for p in per_shard]))
+                for q in range(len(bounds))]
+
+    def hash_join_count(self, left, right, left_mask=None):
+        # Each island histograms only its own probe-side shard; the partial
+        # histograms reduce exactly in int arithmetic. The build side (the
+        # replicated right dictionary's counts) is computed once — it is
+        # identical on every island — and the match runs once on the inner
+        # backend (hash unit on PallasBackend).
+        bounds = shard_bounds(left.n_rows, self.n_shards)
+        lv = np.asarray(left.dictionary)
+        lcount = np.zeros(len(lv), dtype=np.int64)
+        for s, ls in enumerate(shard_column(left, self.n_shards)):
+            m = (None if left_mask is None
+                 else np.asarray(left_mask)[bounds[s]:bounds[s + 1]])
+            lcount += _side_counts(ls, m)[1]
+        rv, rcount = _side_counts(right, None)
+        return self.inner._join_match(lv, rv, lcount, rcount)
+
+    # -- update propagation: dictionary stages run once (replicated dict) --
+    def merge_update_logs(self, logs):
+        return self.inner.merge_update_logs(logs)
+
+    def sort_unique(self, values):
+        return self.inner.sort_unique(values)
+
+    def merge_dictionaries(self, old_dict, update_dict):
+        return self.inner.merge_dictionaries(old_dict, update_dict)
+
+    def make_encoder(self, dictionary):
+        return self.inner.make_encoder(dictionary)
+
+    # -- consistency: one copy unit per island snapshots its shard ---------
+    def snapshot_column(self, col, prev=None):
+        if prev is not None and prev.n_rows != col.n_rows:
+            prev = None  # shard bounds moved (inserts); full re-copy
+        prev_shards = (shard_column(prev, self.n_shards) if prev is not None
+                       else [None] * self.n_shards)
+        snaps = [self.inner.snapshot_column(s, prev=p)
+                 for s, p in zip(shard_column(col, self.n_shards),
+                                 prev_shards)]
+        return concat_columns(snaps)
+
+
+# ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
 
@@ -361,16 +493,34 @@ BACKENDS: dict[str, ExecutionBackend] = {
 _default_backend = os.environ.get("REPRO_BACKEND", "numpy")
 
 
+def _shards_from_env() -> int:
+    raw = os.environ.get("REPRO_SHARDS", "1")
+    try:
+        n = int(raw)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_SHARDS must be an integer >= 1, got {raw!r}") from None
+    if n < 1:
+        raise ValueError(f"REPRO_SHARDS must be an integer >= 1, got {raw!r}")
+    return n
+
+
+# Resolved lazily (like REPRO_BACKEND) so a bad REPRO_SHARDS value errors at
+# first backend resolution, not at import, and --shards/set_default_n_shards
+# can override it before it is ever read.
+_default_n_shards: int | None = None
+
+
 def register_backend(name: str, backend: ExecutionBackend) -> None:
     BACKENDS[name] = backend
 
 
 def set_default_backend(name: str) -> None:
     """Set the backend used when callers pass backend=None (see also the
-    REPRO_BACKEND environment variable)."""
+    REPRO_BACKEND environment variable). Accepts counted specs like
+    ``"pallas@4"`` — the same forms get_backend resolves."""
     global _default_backend
-    if name not in BACKENDS:
-        raise KeyError(f"unknown backend {name!r}; have {sorted(BACKENDS)}")
+    get_backend(name, n_shards=None)  # validates the name and any @N count
     _default_backend = name
 
 
@@ -378,14 +528,76 @@ def default_backend_name() -> str:
     return _default_backend
 
 
-def get_backend(spec: str | ExecutionBackend | None = None) -> ExecutionBackend:
-    """Resolve a backend argument: None -> session default, str -> registry."""
-    if spec is None:
-        spec = _default_backend
+def set_default_n_shards(n: int) -> None:
+    """Set the analytical-island (shard) count applied when callers resolve
+    a backend by name/None without an explicit n_shards (see also the
+    REPRO_SHARDS environment variable)."""
+    global _default_n_shards
+    if int(n) < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n}")
+    _default_n_shards = int(n)
+
+
+def default_n_shards() -> int:
+    global _default_n_shards
+    if _default_n_shards is None:
+        _default_n_shards = _shards_from_env()
+    return _default_n_shards
+
+
+def get_backend(spec: str | ExecutionBackend | None = None,
+                n_shards: int | None = None) -> ExecutionBackend:
+    """Resolve a backend argument: None -> session default, str -> registry.
+
+    ``n_shards`` > 1 wraps the resolved backend in a `ShardedBackend`
+    (None defers to the session default, normally 1). Spec strings may
+    carry an explicit shard count as ``"name@N"`` (e.g. ``"pallas@4"``);
+    passing both a counted spec and a contradicting ``n_shards`` raises.
+    Already-constructed backend instances
+    pass through untouched — they are never re-wrapped, and an explicit
+    ``n_shards`` that contradicts the instance's island count raises
+    rather than being silently dropped.
+    """
     if isinstance(spec, ExecutionBackend):
+        have = getattr(spec, "n_shards", 1)
+        if n_shards is not None and int(n_shards) != have:
+            raise ValueError(
+                f"backend instance {getattr(spec, 'name', spec)!r} has "
+                f"{have} shard(s) but n_shards={n_shards} was requested; "
+                "pass the spec by name (e.g. 'pallas') to let n_shards "
+                "wrap it")
         return spec
+    from_default = spec is None
+    if from_default:
+        spec = _default_backend
+    if "@" in spec:
+        spec, _, shard_str = spec.partition("@")
+        try:
+            spec_shards = int(shard_str)
+        except ValueError:
+            raise KeyError(f"bad shard count in backend spec "
+                           f"{spec!r}@{shard_str!r}") from None
+        if n_shards is None:
+            n_shards = spec_shards
+        elif not from_default and int(n_shards) != spec_shards:
+            # a conflict is only meaningful when the caller passed the
+            # counted spec itself; an explicit n_shards always overrides
+            # the session default (e.g. fig10 sweeping shard counts while
+            # REPRO_BACKEND=pallas@4 is set)
+            raise ValueError(
+                f"backend spec {spec!r}@{spec_shards} contradicts "
+                f"n_shards={n_shards}")
     try:
-        return BACKENDS[spec]
+        inner = BACKENDS[spec]
     except KeyError:
         raise KeyError(
             f"unknown backend {spec!r}; have {sorted(BACKENDS)}") from None
+    if n_shards is None:
+        n_shards = default_n_shards()
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards} "
+                         f"(backend spec/argument for {spec!r})")
+    if n_shards > 1:
+        return ShardedBackend(inner, n_shards)
+    return inner

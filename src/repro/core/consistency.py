@@ -24,7 +24,7 @@ import dataclasses
 import itertools
 
 from repro.core.backend import get_backend
-from repro.core.dsm import DSMReplica, EncodedColumn
+from repro.core.dsm import DSMReplica, EncodedColumn, concat_columns
 from repro.core.hwmodel import CostLog
 from repro.core.schema import VALUE_BYTES
 
@@ -83,6 +83,26 @@ class ConsistencyManager:
         """Phase-2 pointer swap: install the new column, mark dirty."""
         self.replica.columns[col_id] = new_col
         self.chains[col_id].dirty = True
+
+    def on_update_shards(self, col_id: int,
+                         shard_cols: list[EncodedColumn]) -> None:
+        """Phase-2 pointer swap for a sharded replica, all-or-none.
+
+        A round's update application produces one new column per analytical
+        island; queries must never observe a replica where some islands show
+        the new round and others the old. The swap therefore validates the
+        *complete* shard set (count matches the backend's island count,
+        shards share one dictionary and version — `concat_columns` rejects
+        mixed rounds) before a single atomic pointer install. On any
+        validation failure the replica is left untouched.
+        """
+        expected = getattr(self.backend, "n_shards", 1)
+        if len(shard_cols) != expected:
+            raise ValueError(
+                f"partial shard set for column {col_id}: got "
+                f"{len(shard_cols)} shards, backend has {expected} islands")
+        new_col = concat_columns(shard_cols)  # rejects mixed-round shards
+        self.on_update(col_id, new_col)
 
     # -- analytical side ---------------------------------------------------
     def _snapshot(self, col_id: int) -> _Version:

@@ -102,6 +102,67 @@ def value_range_to_code_range(col: EncodedColumn, lo: int, hi: int):
     return code_lo, code_hi
 
 
+# ---------------------------------------------------------------------------
+# Row-wise sharding (§4's multiple analytical islands, one DSM shard each)
+# ---------------------------------------------------------------------------
+
+def shard_bounds(n_rows: int, n_shards: int) -> list[int]:
+    """Contiguous row partition boundaries: shard s owns [b[s], b[s+1]).
+
+    The split produces at most two distinct shard sizes, so per-shard kernel
+    calls reuse at most two compiled shapes (the property that makes the
+    fan-out `jax.vmap`-able when sizes coincide).
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    return [n_rows * s // n_shards for s in range(n_shards + 1)]
+
+
+def shard_column(col: EncodedColumn, n_shards: int) -> list[EncodedColumn]:
+    """Partition a column row-wise into `n_shards` island-local shards.
+
+    Dictionary encoding is preserved: every shard shares the (replicated)
+    dictionary object, so codes remain comparable across shards and
+    `concat_columns` is an exact inverse. `valid` masks are sliced with the
+    rows; a shard may be empty when n_shards > n_rows.
+    """
+    bounds = shard_bounds(col.n_rows, n_shards)
+    return [
+        EncodedColumn(codes=col.codes[lo:hi], dictionary=col.dictionary,
+                      valid=col.valid[lo:hi], version=col.version)
+        for lo, hi in zip(bounds, bounds[1:])
+    ]
+
+
+def concat_columns(shards: list[EncodedColumn]) -> EncodedColumn:
+    """Reassemble shard columns (inverse of `shard_column`).
+
+    All shards must carry the same dictionary and version — mixing shards
+    from different update rounds would silently decode rows through the
+    wrong dictionary, so that is rejected here rather than at query time.
+    """
+    if not shards:
+        raise ValueError("concat_columns needs at least one shard")
+    head = shards[0]
+    for s in shards[1:]:
+        if s.version != head.version:
+            raise ValueError(
+                f"shard version mismatch: {s.version} != {head.version}")
+        if s.dictionary is not head.dictionary and not (
+                s.dictionary.shape == head.dictionary.shape
+                and bool(jnp.array_equal(s.dictionary, head.dictionary))):
+            raise ValueError("shard dictionary mismatch (different rounds?)")
+    if len(shards) == 1:
+        return EncodedColumn(codes=head.codes, dictionary=head.dictionary,
+                             valid=head.valid, version=head.version)
+    return EncodedColumn(
+        codes=jnp.concatenate([s.codes for s in shards]),
+        dictionary=head.dictionary,
+        valid=jnp.concatenate([s.valid for s in shards]),
+        version=head.version,
+    )
+
+
 @dataclasses.dataclass
 class DSMReplica:
     """The analytical island's replica: one EncodedColumn per table column."""

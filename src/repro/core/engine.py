@@ -127,9 +127,16 @@ def run_query_dsm(
     placement: Placement | None = None,
     on_pim: bool = True,
     backend=None,
+    n_shards: int | None = None,
 ) -> int:
-    """Execute one query against (a snapshot view of) the DSM replica."""
-    be = get_backend(backend)
+    """Execute one query against (a snapshot view of) the DSM replica.
+
+    ``n_shards`` > 1 fans the scan out over that many analytical islands
+    (row-wise DSM shards) with exact cross-shard reduction; when `backend`
+    is an already-constructed instance it must match the instance's island
+    count (get_backend raises on conflict).
+    """
+    be = get_backend(backend, n_shards=n_shards)
     fcol, acol = view[q.filter_col], view[q.agg_col]
     jcol = None
     if q.join_col is None:
@@ -162,17 +169,21 @@ def run_query_group_dsm(
     placement: Placement | None = None,
     on_pim: bool = True,
     backend=None,
+    n_shards: int | None = None,
 ) -> list[int]:
     """Execute a same-column-set query group as one fused multi-query scan.
 
     The backend answers all code-range predicates in a single pass over the
     encoded columns (PallasBackend: one kernel launch for the whole group),
-    which is what lets the accelerator path amortize launches. Cost events
-    stay per-query, so modeled throughput matches unbatched execution.
+    which is what lets the accelerator path amortize launches. With
+    ``n_shards`` > 1 (or a ShardedBackend) each island runs the fused scan
+    over its own DSM shard and the partial aggregates reduce exactly. Cost
+    events stay per-query, so modeled throughput matches unbatched
+    execution.
     """
     if not queries:
         return []
-    be = get_backend(backend)
+    be = get_backend(backend, n_shards=n_shards)
     q0 = queries[0]
     fcol, acol = view[q0.filter_col], view[q0.agg_col]
     # join-free queries fuse into one multi-predicate scan; join queries run

@@ -24,7 +24,8 @@ import dataclasses
 import numpy as np
 
 from repro.core import engine
-from repro.core.application import apply_updates, apply_updates_naive
+from repro.core.application import (apply_updates, apply_updates_naive,
+                                    apply_updates_shards)
 from repro.core.backend import get_backend
 from repro.core.consistency import ConsistencyManager
 from repro.core.dsm import DSMReplica
@@ -79,14 +80,30 @@ def _split_queries(queries, n_rounds):
     return [queries[bounds[r]:bounds[r + 1]] for r in range(n_rounds)]
 
 
+def _resolve_islands(backend, n_shards, hw: HardwareParams):
+    """Resolve the execution backend (wrapping in ShardedBackend when
+    n_shards/REPRO_SHARDS asks for islands) and scale the hardware model to
+    the island count — each analytical island brings its own stack of
+    in-memory hardware (§4), so `hw.n_ana_islands` follows the shard count
+    unless the caller already set it."""
+    be = get_backend(backend, n_shards=n_shards)
+    islands = getattr(be, "n_shards", 1)
+    if islands > 1 and hw.n_ana_islands == 1:
+        hw = dataclasses.replace(hw, n_ana_islands=islands)
+    return be, hw
+
+
 # ---------------------------------------------------------------------------
 # Normalization baselines
 # ---------------------------------------------------------------------------
 
 def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
-                  backend=None) -> RunResult:
-    """Transactions alone: no analytics, zero-cost propagation/consistency."""
-    get_backend(backend)  # no analytical work; validate selection only
+                  backend=None, n_shards: int | None = None) -> RunResult:
+    """Transactions alone: no analytics, zero-cost propagation/consistency.
+
+    `n_shards` is accepted for driver-API uniformity; with no analytical
+    work there are no islands to shard."""
+    get_backend(backend, n_shards=n_shards)  # validate selection only
     cost = CostLog()
     store = RowStore(table)
     store.execute(stream, cost)
@@ -97,12 +114,13 @@ def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
 
 
 def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
-                 backend=None) -> RunResult:
+                 backend=None, n_shards: int | None = None) -> RunResult:
     """Analytics alone on the multicore CPU over a DSM replica."""
+    be, hw = _resolve_islands(backend, n_shards, hw)
     cost = CostLog()
     replica = DSMReplica.from_table(table)
     results = [engine.run_query_dsm(replica.columns, q, cost, on_pim=False,
-                                    backend=backend)
+                                    backend=be)
                for q in queries]
     model = HardwareModel(hw)
     t = model.time(cost, concurrent_islands=False)
@@ -116,12 +134,16 @@ def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
 
 def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
               n_rounds: int = 8, zero_cost_snapshot: bool = False,
-              backend=None) -> RunResult:
+              backend=None, n_shards: int | None = None) -> RunResult:
     """Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
 
     zero_cost_snapshot: the paper's normalization baseline — identical run,
     snapshot creation costs nothing (Fig. 1-right / Fig. 8-right).
+
+    `n_shards` is accepted for driver-API uniformity; a single instance has
+    no analytical islands to shard (that's the point of the baseline).
     """
+    get_backend(backend, n_shards=n_shards)  # validate selection only
     cost = CostLog()
     store = RowStore(table)
     snap = SnapshotStore(table)
@@ -147,17 +169,18 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
 
 def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
                 n_rounds: int = 8, zero_cost_mvcc: bool = False,
-                backend=None) -> RunResult:
+                backend=None, n_shards: int | None = None) -> RunResult:
     """Single-Instance-MVCC: version chains; analytics traverse chains.
 
     zero_cost_mvcc: identical run, chain traversal costs nothing (the
     paper's Fig. 1-left normalization baseline).
 
-    `backend` is accepted for driver-API uniformity; MVCC chain reads are
-    pointer-chasing over host versions, which the PIM-analog kernels do not
-    model — the numpy path always executes.
+    `backend`/`n_shards` are accepted for driver-API uniformity; MVCC chain
+    reads are pointer-chasing over host versions, which neither the
+    PIM-analog kernels nor the island sharding model — the numpy path
+    always executes on the single instance.
     """
-    get_backend(backend)
+    get_backend(backend, n_shards=n_shards)
     cost = CostLog()
     store = MVCCStore(table)
     results = []
@@ -207,6 +230,7 @@ def run_multi_instance(
     shipping_only: bool = False,   # zero-cost application (Fig. 2 ablation)
     zero_cost_propagation: bool = False,  # Fig. 2/7 "Ideal" baseline
     backend=None,
+    n_shards: int | None = None,
 ) -> RunResult:
     """Shared driver for MI+SW / MI+SW+HB / PIM-Only / Polynesia.
 
@@ -219,8 +243,12 @@ def run_multi_instance(
     `backend` selects the execution backend for the whole hot path (update
     shipping/application, snapshots, analytical scans); answers are
     bit-identical across backends, only what executes the operators changes.
+    `n_shards` > 1 scales analytics out over that many analytical islands:
+    the DSM is row-sharded (ShardedBackend), updates route to owning
+    islands, partial aggregates reduce exactly, and the hardware model gets
+    island-scaled ana-side rates — answers stay bit-identical to n_shards=1.
     """
-    be = get_backend(backend)
+    be, hw = _resolve_islands(backend, n_shards, hw)
     cost = CostLog()
     store = RowStore(table)
     replica = DSMReplica.from_table(table)
@@ -248,16 +276,27 @@ def run_multi_instance(
             ship_cost = None if zero_cost_propagation else cost
             buffers = ship_updates(logs, store.n_cols, ship_cost,
                                    on_pim=propagation_on_pim, backend=be)
+            islands = getattr(be, "n_shards", 1)
             for col_id, entries in buffers.items():
                 old = replica.columns[col_id]
                 app_cost = (None if (shipping_only or zero_cost_propagation)
                             else cost)
-                if optimized_application:
-                    new = apply_updates(old, entries, app_cost,
-                                        on_pim=propagation_on_pim, backend=be)
+                if optimized_application and islands > 1:
+                    # each island applies its own row range; the round
+                    # becomes visible only as a complete shard set
+                    # (all-or-none Phase-2 swap)
+                    shards = apply_updates_shards(
+                        old, entries, app_cost, on_pim=propagation_on_pim,
+                        backend=be)
+                    cons.on_update_shards(col_id, shards)
+                elif optimized_application:
+                    cons.on_update(col_id, apply_updates(
+                        old, entries, app_cost, on_pim=propagation_on_pim,
+                        backend=be))
                 else:
-                    new = apply_updates_naive(old, entries, app_cost)
-                cons.on_update(col_id, new)
+                    # the naive software baseline rebuilds one whole column
+                    cons.on_update(col_id,
+                                   apply_updates_naive(old, entries, app_cost))
                 applications += 1
 
         # -- analytical island (§6 consistency + §7 engine) -----------------
@@ -284,7 +323,8 @@ def run_multi_instance(
                      model.energy(cost), results,
                      stats={"applications": applications,
                             "snapshots": cons.snapshots_created,
-                            "shared": cons.snapshots_shared})
+                            "shared": cons.snapshots_shared,
+                            "islands": getattr(be, "n_shards", 1)})
 
 
 def run_mi_sw(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:

@@ -39,6 +39,15 @@ class HardwareParams:
     vault_bw: float            # one vault's slice of internal bandwidth
     n_vaults: int              # per stack
     n_stacks: int = 1
+    # Analytical islands (§4, Fig. 5): Polynesia scales analytics out by
+    # replicating the analytical island — each gets its own memory stack,
+    # PIM cores and fixed-function units, and owns one DSM shard (the
+    # ShardedBackend). Island-count scales the ana-side PIM-core rate,
+    # copy engines and internal bandwidth (row-partitioned work); the
+    # dictionary-stage units (sorter/merge/hash) perform *replicated* work
+    # on the shared dictionary, and the shared off-chip channel does NOT
+    # multiply — neither gets faster with more islands.
+    n_ana_islands: int = 1
     vault_group: int = 4       # Strategy-3 group size (paper §7.1)
     remote_vault_bw_frac: float = 0.5   # vault-to-vault interconnect efficiency
     # --- compute ---
@@ -161,7 +170,7 @@ class HardwareModel:
             "sorter": p.sorter_rate * nv,
             "merge": p.merge_rate * nv,
             "hash": p.hash_rate * nv,
-            "copy": p.copy_bw_frac * p.internal_bw,  # bytes/s, handled below
+            "copy": p.copy_bw_frac * p.internal_bw,  # bytes/s (copy-unit engines)
         }[resource]
 
     def phase_time(self, events: list[CostEvent], offchip_share: float = 1.0,
@@ -173,27 +182,53 @@ class HardwareModel:
         """
         p = self.p
         by_res = defaultdict(float)
-        bytes_off = bytes_local = bytes_remote = 0.0
+        bytes_off = 0.0
+        # Analytical islands replicate the in-memory hardware: ana-island
+        # phases see island-scaled PIM-core/copy rates and internal
+        # bandwidth for row-PARTITIONED traffic (each island touches only
+        # its DSM shard). Dictionary-stage traffic (sorter/merge/hash
+        # events) is REPLICATED — every island moves the same shared
+        # dictionary locally — so those bytes do not shrink per island.
+        # The CPU and the shared off-chip channel never multiply.
+        local_part = local_repl = remote_part = remote_repl = 0.0
         items_copy = 0.0
         phase = events[0].phase if events else "?"
+        island = events[0].island if events else "?"
+        islands = p.n_ana_islands if island == "ana" else 1
         for e in events:
             bytes_off += e.bytes_offchip
-            bytes_local += e.bytes_local
-            bytes_remote += e.bytes_remote
-            if e.resource == "copy":
-                items_copy += e.bytes_local + e.bytes_remote
-            elif e.resource in ("sorter", "merge", "hash"):
+            if e.resource in ("sorter", "merge", "hash"):
+                local_repl += e.bytes_local
+                remote_repl += e.bytes_remote
                 by_res[e.resource] += e.items
             else:
-                by_res[e.resource] += e.cycles
+                local_part += e.bytes_local
+                remote_part += e.bytes_remote
+                if e.resource == "copy":
+                    items_copy += e.bytes_local + e.bytes_remote
+                else:
+                    by_res[e.resource] += e.cycles
         terms = {
             "offchip": bytes_off / (p.offchip_bw * offchip_share),
-            "local": bytes_local / p.internal_bw,
-            "remote": bytes_remote / (p.internal_bw * p.remote_vault_bw_frac),
+            "local": (local_part / islands + local_repl) / p.internal_bw,
+            "remote": (remote_part / islands + remote_repl)
+            / (p.internal_bw * p.remote_vault_bw_frac),
         }
+        if items_copy:
+            # copy-unit engines run at copy_bw_frac of vault bandwidth; at
+            # frac=1.0 the generic local/remote terms dominate, below 1.0
+            # the unit itself becomes the snapshot/ship bound
+            terms["copy"] = items_copy / (self._resource_rate("copy")
+                                          * islands)
         for res, amount in by_res.items():
             share = cpu_share if res == "cpu" else 1.0
-            terms[res] = amount / (self._resource_rate(res) * share)
+            # Only the PIM query cores partition their work across island
+            # shards. The dictionary-stage units (sorter/merge/hash) do
+            # *replicated* work — every island sorts/merges the same
+            # replicated dictionary, and the final-log merge runs once —
+            # so more islands do not shorten those terms.
+            scale = islands if res == "pim" else 1.0
+            terms[res] = amount / (self._resource_rate(res) * share * scale)
         bound = max(terms, key=terms.get)
         return PhaseTime(phase=phase, seconds=max(terms.values()), bound=bound)
 

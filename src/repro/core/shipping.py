@@ -21,7 +21,6 @@ import numpy as np
 
 from repro.core.backend import get_backend
 from repro.core.hwmodel import CostLog
-from repro.core.nsm import UPDATE_DTYPE
 from repro.core.schema import LOG_ENTRY_BYTES
 
 # §5.1/§5.2: shipping triggers when pending updates reach the final-log
@@ -40,16 +39,13 @@ def merge_logs(logs: list[np.ndarray]) -> np.ndarray:
     """Stage 1: k-way merge of commit-ordered per-thread logs.
 
     Each input log is already sorted by commit_id (a thread's commits are
-    monotone); the merge produces the global total order. Functional
-    reference is a stable sort of the concatenation; the hardware unit (and
-    the Pallas kernel) exploit sortedness with a comparator tree.
+    monotone); the merge produces the global total order. The functional
+    reference lives in the numpy backend operator (a stable sort of the
+    concatenation) — delegated here so there is exactly one reference
+    implementation; the hardware unit (and the Pallas kernel) exploit
+    sortedness with a comparator tree.
     """
-    logs = [l for l in logs if len(l)]
-    if not logs:
-        return np.empty(0, dtype=UPDATE_DTYPE)
-    cat = np.concatenate(logs)
-    order = np.argsort(cat["commit_id"], kind="stable")
-    return cat[order]
+    return get_backend("numpy").merge_update_logs(logs)
 
 
 def locate_columns(final_log: np.ndarray, n_cols: int) -> np.ndarray:

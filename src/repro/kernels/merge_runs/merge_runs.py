@@ -9,10 +9,12 @@ log^2 sort) sorts it. So an 8-way merge becomes 3 rounds of pairwise
 bitonic merges — the same comparator-tree depth as the hardware unit, with
 every stage a vector-wide reshape+min/max in VMEM.
 
-Payload handling: entries are merged by key (commit_id); payloads move with
-their key. We pack (key, payload-index) into one int64-like pair of int32
-lanes: the kernel sorts a (rows, 2*width) tile where lane 0 holds keys and
-lane 1 original indices; ops.py gathers payloads afterwards.
+Keys are 64-bit commit ids carried as two int32 lanes — `hi` holds the
+arithmetic high word and `lo` the bias-corrected low word (see ops._split64)
+— so the comparator network orders full int64 keys lexicographically on
+(hi, lo) without requiring jax_enable_x64. Payloads move with their key:
+a third int32 lane carries the original index, and ops.py gathers payloads
+through it afterwards.
 """
 
 from __future__ import annotations
@@ -25,52 +27,66 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _merge_stage(keys, idxs, k_total, j):
-    """Compare-exchange with stride 2^j, ascending (merge network stage)."""
-    rows, width = keys.shape
+def _merge_stage(hi, lo, idx, j):
+    """Compare-exchange with stride 2^j, ascending (merge network stage).
+
+    Ordering is lexicographic on (hi, lo): exactly int64 key order when the
+    lanes come from ops._split64.
+    """
+    rows, width = hi.shape
     stride = 1 << j
-    kr = keys.reshape(rows, width // (2 * stride), 2, stride)
-    ir = idxs.reshape(rows, width // (2 * stride), 2, stride)
-    a, b = kr[:, :, 0, :], kr[:, :, 1, :]
-    ia, ib = ir[:, :, 0, :], ir[:, :, 1, :]
-    swap = a > b
-    lo = jnp.where(swap, b, a)
-    hi = jnp.where(swap, a, b)
-    ilo = jnp.where(swap, ib, ia)
-    ihi = jnp.where(swap, ia, ib)
-    keys = jnp.stack([lo, hi], axis=2).reshape(rows, width)
-    idxs = jnp.stack([ilo, ihi], axis=2).reshape(rows, width)
-    return keys, idxs
+
+    def halves(x):
+        xr = x.reshape(rows, width // (2 * stride), 2, stride)
+        return xr[:, :, 0, :], xr[:, :, 1, :]
+
+    ah, bh = halves(hi)
+    al, bl = halves(lo)
+    ai, bi = halves(idx)
+    swap = (ah > bh) | ((ah == bh) & (al > bl))
+
+    def exchange(a, b):
+        keep = jnp.where(swap, b, a)
+        move = jnp.where(swap, a, b)
+        return jnp.stack([keep, move], axis=2).reshape(rows, width)
+
+    return exchange(ah, bh), exchange(al, bl), exchange(ai, bi)
 
 
-def _merge_kernel(a_ref, b_ref, ai_ref, bi_ref, ok_ref, oi_ref):
+def _merge_kernel(ah_ref, al_ref, ai_ref, bh_ref, bl_ref, bi_ref,
+                  oh_ref, ol_ref, oi_ref):
     """Merge two ascending runs (rows, width) -> (rows, 2*width)."""
-    a, b = a_ref[...], b_ref[...]
-    ai, bi = ai_ref[...], bi_ref[...]
-    keys = jnp.concatenate([a, b[:, ::-1]], axis=-1)        # bitonic
-    idxs = jnp.concatenate([ai, bi[:, ::-1]], axis=-1)
-    width = keys.shape[-1]
+    hi = jnp.concatenate([ah_ref[...], bh_ref[...][:, ::-1]], axis=-1)
+    lo = jnp.concatenate([al_ref[...], bl_ref[...][:, ::-1]], axis=-1)
+    idx = jnp.concatenate([ai_ref[...], bi_ref[...][:, ::-1]], axis=-1)
+    width = hi.shape[-1]
     for j in range(int(math.log2(width)) - 1, -1, -1):
-        keys, idxs = _merge_stage(keys, idxs, width, j)
-    ok_ref[...] = keys
-    oi_ref[...] = idxs
+        hi, lo, idx = _merge_stage(hi, lo, idx, j)
+    oh_ref[...] = hi
+    ol_ref[...] = lo
+    oi_ref[...] = idx
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def bitonic_merge_pair(a, b, ai, bi, block_rows: int = 8,
+def bitonic_merge_pair(ah, al, ai, bh, bl, bi, block_rows: int = 8,
                        interpret: bool = True):
-    """Row-wise merge of two ascending runs; widths equal powers of two."""
-    rows, width = a.shape
-    assert b.shape == a.shape and rows % block_rows == 0
+    """Row-wise merge of two ascending 64-bit-keyed runs.
+
+    Each run is (rows, width) split into int32 (hi, lo) key lanes plus an
+    int32 index lane; widths are equal powers of two. Returns the merged
+    (hi, lo, idx) lanes of shape (rows, 2*width).
+    """
+    rows, width = ah.shape
+    assert bh.shape == ah.shape and rows % block_rows == 0
     grid = (rows // block_rows,)
     spec = pl.BlockSpec((block_rows, width), lambda i: (i, 0))
     out_spec = pl.BlockSpec((block_rows, 2 * width), lambda i: (i, 0))
+    out = jax.ShapeDtypeStruct((rows, 2 * width), jnp.int32)
     return pl.pallas_call(
         _merge_kernel,
         grid=grid,
-        in_specs=[spec, spec, spec, spec],
-        out_specs=(out_spec, out_spec),
-        out_shape=(jax.ShapeDtypeStruct((rows, 2 * width), a.dtype),
-                   jax.ShapeDtypeStruct((rows, 2 * width), ai.dtype)),
+        in_specs=[spec] * 6,
+        out_specs=(out_spec, out_spec, out_spec),
+        out_shape=(out, out, out),
         interpret=interpret,
-    )(a, b, ai, bi)
+    )(ah, al, ai, bh, bl, bi)

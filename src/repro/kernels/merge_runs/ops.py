@@ -1,6 +1,17 @@
-"""Public wrappers for the merge unit (k-way merge as a comparator tree)."""
+"""Public wrappers for the merge unit (k-way merge as a comparator tree).
+
+Keys are full-width int64 commit ids. Because the TPU comparator network
+works on int32 lanes (and the host JAX session runs without x64), each key
+is split into an arithmetic high word and a bias-corrected low word whose
+lexicographic (hi, lo) order equals int64 order; the kernel merges the
+lanes and the results are recombined here. This removes the old int32-only
+restriction (and its numpy fallback): commit ids beyond 2^31 merge on the
+kernel path like any others.
+"""
 
 from __future__ import annotations
+
+import numpy as np
 
 import jax.numpy as jnp
 
@@ -8,60 +19,122 @@ from repro.kernels.common import default_interpret, next_pow2
 from repro.kernels.merge_runs.merge_runs import bitonic_merge_pair
 from repro.kernels.merge_runs.ref import merge_pair_ref, merge_runs_ref
 
+_BIAS = np.int64(1) << np.int64(31)
+_LO_MASK = (np.int64(1) << np.int64(32)) - np.int64(1)
+# The padding sentinel (int32.max, int32.max) recombines to int64.max, so a
+# *real* int64.max key would tie with padding and could be trimmed away.
+# Runs containing it take the exact reference merge instead (the one key
+# value the comparator network cannot distinguish from padding).
+_SENTINEL_KEY = np.iinfo(np.int64).max
 
-def _pad_run(keys, idxs, width):
-    sentinel = jnp.iinfo(keys.dtype).max
-    pad = width - keys.shape[-1]
+
+def _split64(keys: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """int64 keys -> (hi, lo) int32 lanes with (hi, lo) lex order == key order.
+
+    hi is the arithmetic high word (sign-preserving shift); lo is the low
+    word re-biased from [0, 2^32) into signed int32 range so its signed
+    comparison matches the unsigned low-word order.
+    """
+    v = np.asarray(keys, dtype=np.int64)
+    hi = (v >> np.int64(32)).astype(np.int32)
+    lo = ((v & _LO_MASK) - _BIAS).astype(np.int32)
+    return hi, lo
+
+
+def _join64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
+    """Inverse of _split64."""
+    lo_u = (lo.astype(np.int64) + _BIAS) & _LO_MASK
+    return (hi.astype(np.int64) << np.int64(32)) | lo_u
+
+
+def _pad_lane(lane, width, value):
+    pad = width - lane.shape[-1]
     if pad:
-        keys = jnp.pad(keys, ((0, 0), (0, pad)), constant_values=sentinel)
-        idxs = jnp.pad(idxs, ((0, 0), (0, pad)), constant_values=-1)
-    return keys, idxs
+        lane = jnp.pad(lane, ((0, 0), (0, pad)), constant_values=value)
+    return lane
+
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def _merge_lane_pair(ah, al, ai, bh, bl, bi):
+    """Merge two ascending (rows, w) lane triples -> trimmed (rows, wa+wb).
+
+    Pads runs to a shared power-of-two width (and rows to a multiple of 8)
+    with (hi, lo) = int32-max sentinels that sort after every real key
+    except a literal int64.max (callers route runs containing it to the
+    reference merge); sentinel entries carry index -1 and are trimmed off
+    the tail.
+    """
+    rows, wa = ah.shape
+    wb = bh.shape[-1]
+    width = next_pow2(max(wa, wb, 128))
+    ah, al = _pad_lane(ah, width, _I32_MAX), _pad_lane(al, width, _I32_MAX)
+    bh, bl = _pad_lane(bh, width, _I32_MAX), _pad_lane(bl, width, _I32_MAX)
+    ai, bi = _pad_lane(ai, width, -1), _pad_lane(bi, width, -1)
+    pad_rows = (-rows) % 8
+    if pad_rows:
+        rpad = ((0, pad_rows), (0, 0))
+        ah = jnp.pad(ah, rpad, constant_values=_I32_MAX)
+        al = jnp.pad(al, rpad, constant_values=_I32_MAX)
+        bh = jnp.pad(bh, rpad, constant_values=_I32_MAX)
+        bl = jnp.pad(bl, rpad, constant_values=_I32_MAX)
+        ai = jnp.pad(ai, rpad, constant_values=-1)
+        bi = jnp.pad(bi, rpad, constant_values=-1)
+    oh, ol, oi = bitonic_merge_pair(ah, al, ai, bh, bl, bi,
+                                    interpret=default_interpret())
+    # valid entries sort before the sentinels; trim to true length
+    return oh[:rows, : wa + wb], ol[:rows, : wa + wb], oi[:rows, : wa + wb]
 
 
 def merge_sorted_pair(a, b, ai, bi, use_pallas: bool = True):
-    """Merge two ascending (rows, w) runs -> (rows, 2w) with carried indices."""
-    if not use_pallas:
-        return merge_pair_ref(a, b, ai, bi)
-    rows, w = a.shape
-    width = next_pow2(max(w, b.shape[-1], 128))
-    a, ai = _pad_run(a, ai, width)
-    b, bi = _pad_run(b, bi, width)
-    pad_rows = (-rows) % 8
-    if pad_rows:
-        a = jnp.pad(a, ((0, pad_rows), (0, 0)), constant_values=jnp.iinfo(a.dtype).max)
-        b = jnp.pad(b, ((0, pad_rows), (0, 0)), constant_values=jnp.iinfo(b.dtype).max)
-        ai = jnp.pad(ai, ((0, pad_rows), (0, 0)), constant_values=-1)
-        bi = jnp.pad(bi, ((0, pad_rows), (0, 0)), constant_values=-1)
-    keys, idxs = bitonic_merge_pair(a, b, ai, bi, interpret=default_interpret())
-    keys, idxs = keys[:rows], idxs[:rows]
-    # valid entries sort before int-max sentinels; trim to true length
-    return keys[:, : w + b.shape[-1]], idxs[:, : w + b.shape[-1]]
+    """Merge two ascending (rows, w) key runs -> (rows, 2w) with indices.
+
+    Keys may be any integer dtype up to int64; the output keys come back as
+    int64 (exact — recombined from the merged lanes).
+    """
+    a64 = np.asarray(a, dtype=np.int64)
+    b64 = np.asarray(b, dtype=np.int64)
+    ai = np.asarray(ai, dtype=np.int32)
+    bi = np.asarray(bi, dtype=np.int32)
+    if not use_pallas or (a64.size and a64.max() == _SENTINEL_KEY) \
+            or (b64.size and b64.max() == _SENTINEL_KEY):
+        return merge_pair_ref(a64, b64, ai, bi)
+    ah, al = _split64(a64)
+    bh, bl = _split64(b64)
+    oh, ol, oi = _merge_lane_pair(jnp.asarray(ah), jnp.asarray(al),
+                                  jnp.asarray(ai), jnp.asarray(bh),
+                                  jnp.asarray(bl), jnp.asarray(bi))
+    return _join64(np.asarray(oh), np.asarray(ol)), np.asarray(oi)
 
 
 def merge_sorted_runs(runs: list, use_pallas: bool = True):
     """K-way merge (the 8-queue comparator tree): pairwise tournament.
 
-    runs: list of 1-D ascending int32 key arrays (per-thread update logs).
-    Returns (merged_keys, merged_source_index) where source index is the
-    position in the concatenated input — ops callers gather payloads with it.
+    runs: list of 1-D ascending integer key arrays (per-thread update logs;
+    int64 commit ids are first-class). Returns (merged_keys int64,
+    merged_source_index int32) where source index is the position in the
+    concatenated input — ops callers gather payloads with it.
     """
-    offsets = []
-    total = 0
-    for r in runs:
-        offsets.append(total)
-        total += r.shape[-1]
-    keyed = [(r[None, :], (jnp.arange(r.shape[-1], dtype=jnp.int32) + off)[None, :])
-             for r, off in zip(runs, offsets)]
-    if not use_pallas:
-        k, i = merge_runs_ref([k for k, _ in keyed], [i for _, i in keyed])
-        return k[0], i[0]
+    runs64 = [np.asarray(r, dtype=np.int64).reshape(-1) for r in runs]
+    offsets = np.cumsum([0] + [r.shape[0] for r in runs64[:-1]])
+    if not use_pallas or any(r.size and r[-1] == _SENTINEL_KEY
+                             for r in runs64):  # runs are ascending
+        return merge_runs_ref(runs64)
+    keyed = []
+    for r, off in zip(runs64, offsets):
+        hi, lo = _split64(r)
+        idx = (np.arange(r.shape[0], dtype=np.int32) + np.int32(off))
+        keyed.append((jnp.asarray(hi[None, :]), jnp.asarray(lo[None, :]),
+                      jnp.asarray(idx[None, :])))
     while len(keyed) > 1:
         nxt = []
         for p in range(0, len(keyed) - 1, 2):
-            (ak, ai), (bk, bi) = keyed[p], keyed[p + 1]
-            nxt.append(merge_sorted_pair(ak, bk, ai, bi))
+            (ah, al, ai), (bh, bl, bi) = keyed[p], keyed[p + 1]
+            nxt.append(_merge_lane_pair(ah, al, ai, bh, bl, bi))
         if len(keyed) % 2:
             nxt.append(keyed[-1])
         keyed = nxt
-    keys, idxs = keyed[0]
-    return keys[0], idxs[0]
+    hi, lo, idx = keyed[0]
+    return (_join64(np.asarray(hi)[0], np.asarray(lo)[0]),
+            np.asarray(idx)[0])

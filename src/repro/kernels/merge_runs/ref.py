@@ -1,17 +1,20 @@
-"""Pure-jnp oracle for the merge unit."""
+"""Pure-numpy oracle for the merge unit (full int64 keys)."""
 
-import jax.numpy as jnp
+import numpy as np
 
 
 def merge_pair_ref(a, b, ai, bi):
-    keys = jnp.concatenate([a, b], axis=-1)
-    idxs = jnp.concatenate([ai, bi], axis=-1)
-    order = jnp.argsort(keys, axis=-1, stable=True)
-    return jnp.take_along_axis(keys, order, -1), jnp.take_along_axis(idxs, order, -1)
+    keys = np.concatenate([np.asarray(a, np.int64), np.asarray(b, np.int64)],
+                          axis=-1)
+    idxs = np.concatenate([np.asarray(ai, np.int32), np.asarray(bi, np.int32)],
+                          axis=-1)
+    order = np.argsort(keys, axis=-1, kind="stable")
+    return (np.take_along_axis(keys, order, -1),
+            np.take_along_axis(idxs, order, -1))
 
 
-def merge_runs_ref(runs, idxs):
-    keys = jnp.concatenate(runs, axis=-1)
-    ids = jnp.concatenate(idxs, axis=-1)
-    order = jnp.argsort(keys, axis=-1, stable=True)
-    return jnp.take_along_axis(keys, order, -1), jnp.take_along_axis(ids, order, -1)
+def merge_runs_ref(runs):
+    cat = (np.concatenate([np.asarray(r, np.int64).reshape(-1) for r in runs])
+           if runs else np.empty(0, np.int64))
+    order = np.argsort(cat, kind="stable")
+    return cat[order], order.astype(np.int32)

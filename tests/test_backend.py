@@ -215,6 +215,30 @@ def test_merge_update_logs_matches(rng):
     np.testing.assert_array_equal(a["commit_id"], np.arange(700))
 
 
+def test_merge_update_logs_int64_commit_ids(rng, monkeypatch):
+    """Commit ids beyond 2^31 merge on the kernel path — the old int32
+    numpy fallback is gone (the comparator tree now runs on (hi, lo)
+    int32 lanes of the full int64 key)."""
+    counts = _count_kernel_calls(monkeypatch)
+    np_be, pl_be = get_backend("numpy"), get_backend("pallas")
+    base = np.int64(2) ** 31  # first id already overflows int32
+    ids = base + rng.choice(np.int64(10) ** 9, 600, replace=False)
+    ids[:60] -= base  # mix in small ids so both words exercise the compare
+    rng.shuffle(ids)
+    logs = []
+    for t in range(4):
+        mine = np.sort(ids[t::4])
+        logs.append(make_entries(mine, np.ones(len(mine), np.int8),
+                                 rng.integers(0, 1000, len(mine)).astype(np.int32),
+                                 rng.integers(0, 50, len(mine)).astype(np.int64),
+                                 rng.integers(0, 4, len(mine)).astype(np.int32)))
+    a = np_be.merge_update_logs(logs)
+    b = pl_be.merge_update_logs(logs)
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(b["commit_id"], np.sort(ids))
+    assert counts.get("merge_sorted_runs", 0) > 0, counts  # no fallback
+
+
 def test_sort_merge_encode_operators_match(rng):
     np_be, pl_be = get_backend("numpy"), get_backend("pallas")
     vals = rng.integers(0, 1 << 20, size=700).astype(np.int32)

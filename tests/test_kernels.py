@@ -47,6 +47,34 @@ def test_merge_runs_sweep(rng, k, length):
     np.testing.assert_array_equal(cat[np.asarray(mi)[valid]], got)
 
 
+@pytest.mark.parametrize("span", [(0, 1 << 20),                  # int32 range
+                                  (1 << 31, 1 << 40),            # > 2^31
+                                  (-(1 << 40), 1 << 40)])        # negative too
+def test_merge_runs_int64_keys(rng, span):
+    """The comparator tree merges full int64 keys ((hi, lo) int32 lanes)."""
+    lo, hi = span
+    keys = np.unique(rng.integers(lo, hi, size=512, dtype=np.int64))
+    rng.shuffle(keys)
+    runs = [np.sort(keys[t::3]) for t in range(3)]
+    mk, mi = merge_sorted_runs(runs)
+    cat = np.concatenate(runs)
+    valid = np.asarray(mi) >= 0
+    got = np.asarray(mk)[valid]
+    np.testing.assert_array_equal(got, np.sort(keys))
+    np.testing.assert_array_equal(cat[np.asarray(mi)[valid]], got)
+
+
+def test_merge_runs_int64_max_key_not_dropped():
+    """A real int64.max key ties with the padding sentinel — such runs must
+    route to the exact reference merge instead of losing the entry."""
+    top = np.iinfo(np.int64).max
+    a = np.array([5, top], dtype=np.int64)
+    b = np.array([7], dtype=np.int64)
+    mk, mi = merge_sorted_runs([a, b])
+    valid = np.asarray(mi) >= 0
+    np.testing.assert_array_equal(np.asarray(mk)[valid], [5, 7, top])
+
+
 @pytest.mark.parametrize("n_keys,n_queries", [(10, 64), (500, 1000),
                                               (2000, 4096)])
 def test_hash_probe_sweep(rng, n_keys, n_queries):

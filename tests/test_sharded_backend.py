@@ -1,0 +1,471 @@
+"""ShardedBackend: multi-replica analytical islands.
+
+Covers the shard/concat round trip (dictionary encoding + valid masks
+preserved), exact cross-shard reduction (bit-identical to the unsharded
+inner backend for every driver), update routing by row id, the per-shard
+all-or-none Phase-2 swap, monotone modeled analytical-throughput scaling,
+and a hypothesis property sweep over random tables/shard counts including
+shards emptied by deletes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, htap
+from repro.core.application import (apply_updates, apply_updates_shards,
+                                    route_updates)
+from repro.core.backend import (ShardedBackend, default_n_shards,
+                                get_backend, reduce_partials,
+                                set_default_n_shards)
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import (DSMReplica, EncodedColumn, concat_columns,
+                            decode_column, encode_column, shard_bounds,
+                            shard_column)
+from repro.core.nsm import make_entries
+
+
+def _col(rng, n, domain=500, invalid_frac=0.15):
+    col = encode_column(rng.integers(0, domain, size=n).astype(np.int32))
+    if invalid_frac and n:
+        valid = rng.random(n) >= invalid_frac
+        col = EncodedColumn(codes=col.codes, dictionary=col.dictionary,
+                            valid=jnp.asarray(valid), version=col.version)
+    return col
+
+
+# ---------------------------------------------------------------------------
+# shard_column / concat_columns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(0, 1), (1, 1), (7, 3), (100, 7),
+                                 (5, 8), (4096, 4)])
+def test_shard_bounds_partition(n, k):
+    b = shard_bounds(n, k)
+    assert b[0] == 0 and b[-1] == n and len(b) == k + 1
+    assert all(lo <= hi for lo, hi in zip(b, b[1:]))
+    assert len({hi - lo for lo, hi in zip(b, b[1:])}) <= 2  # <=2 shapes
+    with pytest.raises(ValueError):
+        shard_bounds(n, 0)
+
+
+@pytest.mark.parametrize("n,k", [(1000, 1), (1000, 3), (5, 8), (0, 2)])
+def test_shard_concat_roundtrip(rng, n, k):
+    col = _col(rng, n)
+    shards = shard_column(col, k)
+    assert len(shards) == k
+    # dictionary encoding preserved: every island shares the replicated dict
+    for s in shards:
+        assert s.dictionary is col.dictionary
+        assert s.version == col.version
+    back = concat_columns(shards)
+    np.testing.assert_array_equal(np.asarray(back.codes),
+                                  np.asarray(col.codes))
+    np.testing.assert_array_equal(np.asarray(back.valid),
+                                  np.asarray(col.valid))
+    assert back.version == col.version
+    if n:
+        np.testing.assert_array_equal(np.asarray(decode_column(back)),
+                                      np.asarray(decode_column(col)))
+
+
+def test_concat_rejects_mixed_rounds(rng):
+    a, b = _col(rng, 50, domain=40), _col(rng, 50, domain=60)
+    with pytest.raises(ValueError, match="dictionary mismatch"):
+        concat_columns([a, b])
+    stale = EncodedColumn(codes=a.codes, dictionary=a.dictionary,
+                          valid=a.valid, version=a.version + 1)
+    with pytest.raises(ValueError, match="version mismatch"):
+        concat_columns([a, stale])
+    with pytest.raises(ValueError):
+        concat_columns([])
+
+
+# ---------------------------------------------------------------------------
+# exact cross-shard reduction
+# ---------------------------------------------------------------------------
+
+def test_reduce_partials_exact_beyond_float():
+    big = (1 << 53) + 1  # not representable in float64
+    assert reduce_partials("sum", [big, 1, big]) == 2 * big + 1
+    assert reduce_partials("count", [0, 7]) == 7
+    # empty-shard partials are the identity for every kind
+    assert reduce_partials("sum", [None, 5, None]) == 5
+    assert reduce_partials("min", [None, 9, 3]) == 3
+    assert reduce_partials("max", [None, 9, 3]) == 9
+    assert reduce_partials("min", [None, None]) is None
+    with pytest.raises(ValueError, match="unknown aggregate"):
+        reduce_partials("avg", [1])
+
+
+@pytest.mark.parametrize("inner", ["numpy", "pallas"])
+@pytest.mark.parametrize("k", [2, 3, 8])
+def test_sharded_operators_bit_identical(rng, inner, k):
+    base = get_backend(inner)
+    be = ShardedBackend(base, k)
+    fcol = _col(rng, 2000, domain=1 << 16)
+    acol = _col(rng, 2000, domain=300)
+    d = np.asarray(fcol.dictionary)
+    bounds = [(int(d[len(d) // 4]), int(d[3 * len(d) // 4])),
+              (0, 1 << 24), (5, 4)]
+    for lo, hi in bounds:
+        assert be.filter_agg(fcol, acol, lo, hi) == \
+            base.filter_agg(fcol, acol, lo, hi)
+        np.testing.assert_array_equal(be.filter_mask(fcol, lo, hi),
+                                      base.filter_mask(fcol, lo, hi))
+        s, c, m = be.filter_agg_mask(fcol, acol, lo, hi)
+        s0, c0, m0 = base.filter_agg_mask(fcol, acol, lo, hi)
+        assert (s, c) == (s0, c0)
+        np.testing.assert_array_equal(m, m0)
+    assert be.filter_agg_batch(fcol, acol, bounds) == \
+        base.filter_agg_batch(fcol, acol, bounds)
+    mask = rng.random(2000) < 0.4
+    jcol = _col(rng, 2000, domain=97)
+    assert be.hash_join_count(jcol, jcol, left_mask=mask) == \
+        base.hash_join_count(jcol, jcol, left_mask=mask)
+
+
+def test_more_shards_than_rows(rng):
+    """Islands that own zero rows contribute the identity, not garbage."""
+    base = get_backend("numpy")
+    be = ShardedBackend(base, 16)
+    fcol = _col(rng, 5, invalid_frac=0.0)
+    acol = _col(rng, 5, invalid_frac=0.0)
+    assert be.filter_agg(fcol, acol, 0, 1 << 24) == \
+        base.filter_agg(fcol, acol, 0, 1 << 24)
+
+
+# ---------------------------------------------------------------------------
+# update routing + sharded apply
+# ---------------------------------------------------------------------------
+
+def test_route_updates_by_row_id():
+    bounds = [0, 5, 5, 10]  # middle shard is empty
+    ups = make_entries(np.arange(5, dtype=np.int64),
+                       np.ones(5, np.int8),
+                       np.zeros(5, np.int32),
+                       np.array([0, 4, 5, 9, 12], np.int64),
+                       np.zeros(5, np.int32))
+    owner = route_updates(ups, bounds)
+    # rows 0,4 -> shard 0; rows 5,9 -> shard 2; row 12 (insert) -> last
+    np.testing.assert_array_equal(owner, [0, 0, 2, 2, 2])
+
+
+@pytest.mark.parametrize("inner,k", [("numpy", 4), ("numpy", 7),
+                                     ("pallas", 3)])
+def test_sharded_apply_updates_bit_identical(rng, inner, k):
+    base = rng.integers(0, 500, size=300).astype(np.int32)
+    col = encode_column(base)
+    m = 96
+    ops = rng.choice([1, 2, 3], size=m, p=[0.6, 0.2, 0.2]).astype(np.int8)
+    rows = rng.integers(0, 300, m).astype(np.int64)
+    rows[ops == 2] = 300 + rng.integers(0, 40, int((ops == 2).sum()))
+    ups = make_entries(np.arange(m, dtype=np.int64), ops,
+                       rng.integers(0, 500, m).astype(np.int32), rows,
+                       np.zeros(m, dtype=np.int32))
+    ref = apply_updates(col, ups, backend=inner)
+    got = apply_updates(col, ups, backend=f"{inner}@{k}")
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(ref.codes))
+    np.testing.assert_array_equal(np.asarray(got.dictionary),
+                                  np.asarray(ref.dictionary))
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(ref.valid))
+    assert got.version == ref.version
+
+
+def test_apply_updates_shards_are_the_swap_units(rng):
+    """The sharded apply returns real per-island columns: row partition
+    follows shard_bounds, the dictionary object is shared (replicated),
+    and their concatenation is exactly the unsharded result."""
+    col = encode_column(rng.integers(0, 200, size=250).astype(np.int32))
+    m = 40
+    ups = make_entries(np.arange(m, dtype=np.int64),
+                       np.ones(m, np.int8),
+                       rng.integers(0, 400, m).astype(np.int32),
+                       rng.integers(0, 250, m).astype(np.int64),
+                       np.zeros(m, np.int32))
+    with pytest.raises(ValueError, match="ShardedBackend"):
+        apply_updates_shards(col, ups, backend="numpy")
+    shards = apply_updates_shards(col, ups, backend="numpy@5")
+    assert len(shards) == 5
+    assert all(s.dictionary is shards[0].dictionary for s in shards)
+    bounds = shard_bounds(250, 5)
+    assert [s.n_rows for s in shards] == \
+        [hi - lo for lo, hi in zip(bounds, bounds[1:])]
+    ref = apply_updates(col, ups, backend="numpy")
+    got = concat_columns(shards)
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(ref.codes))
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(ref.valid))
+    np.testing.assert_array_equal(np.asarray(got.dictionary),
+                                  np.asarray(ref.dictionary))
+    assert got.version == ref.version
+
+
+def test_shard_emptied_by_deletes_still_exact(rng):
+    """A shard whose rows are all deleted contributes zero, exactly."""
+    n, k = 400, 4
+    col = encode_column(rng.integers(0, 99, size=n).astype(np.int32))
+    bounds = shard_bounds(n, k)
+    doomed = np.arange(bounds[1], bounds[2], dtype=np.int64)  # all of shard 1
+    ups = make_entries(np.arange(len(doomed), dtype=np.int64),
+                       np.full(len(doomed), 3, np.int8),
+                       np.zeros(len(doomed), np.int32), doomed,
+                       np.zeros(len(doomed), np.int32))
+    ref = apply_updates(col, ups, backend="numpy")
+    got = apply_updates(col, ups, backend=f"numpy@{k}")
+    np.testing.assert_array_equal(np.asarray(got.valid), np.asarray(ref.valid))
+    np.testing.assert_array_equal(np.asarray(got.codes), np.asarray(ref.codes))
+    be = ShardedBackend("numpy", k)
+    assert be.filter_agg(got, got, 0, 1 << 24) == \
+        get_backend("numpy").filter_agg(ref, ref, 0, 1 << 24)
+
+
+# ---------------------------------------------------------------------------
+# consistency: per-shard Phase-2 swap, all-or-none
+# ---------------------------------------------------------------------------
+
+def test_per_shard_swap_all_or_none(rng):
+    table = rng.integers(0, 50, size=(900, 2)).astype(np.int32)
+    rep = DSMReplica.from_table(table)
+    cons = ConsistencyManager(rep, backend=ShardedBackend("numpy", 3))
+    old = rep.columns[0]
+    new = apply_updates(old, make_entries(
+        np.array([0], np.int64), np.array([1], np.int8),
+        np.array([77777], np.int32), np.array([5], np.int64),
+        np.array([0], np.int32)), backend="numpy@3")
+    shards = shard_column(new, 3)
+    # partial set: rejected, replica untouched (all-or-none visibility)
+    with pytest.raises(ValueError, match="partial shard set"):
+        cons.on_update_shards(0, shards[:2])
+    assert rep.columns[0] is old
+    # mixed rounds: rejected too
+    with pytest.raises(ValueError):
+        cons.on_update_shards(0, shards[:2] + [shard_column(old, 3)[2]])
+    assert rep.columns[0] is old
+    # complete set: one atomic install + dirty mark
+    cons.chains[0].dirty = False
+    cons.on_update_shards(0, shards)
+    assert cons.chains[0].dirty
+    np.testing.assert_array_equal(np.asarray(rep.columns[0].codes),
+                                  np.asarray(new.codes))
+    h = cons.begin_query([0])
+    assert int(np.asarray(decode_column(cons.read(h, 0)))[5]) == 77777
+    cons.end_query(h)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: all six drivers, sharded == unsharded
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def unsharded_runs(small_workload):
+    table, stream, queries = small_workload
+    return {name: fn(table, stream, queries, n_rounds=4, backend="numpy")
+            for name, fn in htap.ALL_SYSTEMS.items()}
+
+
+@pytest.mark.parametrize("system", list(htap.ALL_SYSTEMS))
+def test_all_drivers_sharded_bit_identical(small_workload, unsharded_runs,
+                                           system):
+    table, stream, queries = small_workload
+    sharded = htap.ALL_SYSTEMS[system](table, stream, queries, n_rounds=4,
+                                       backend="numpy", n_shards=4)
+    base = unsharded_runs[system]
+    assert sharded.results == base.results
+    assert (sharded.n_txn, sharded.n_ana) == (base.n_txn, base.n_ana)
+
+
+def test_polynesia_pallas_sharded_matches_numpy(small_workload,
+                                                unsharded_runs):
+    """The kernel path under sharding still lands on the reference answers."""
+    table, stream, queries = small_workload
+    sharded = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                                 backend="pallas", n_shards=2)
+    assert sharded.results == unsharded_runs["Polynesia"].results
+
+
+def test_modeled_ana_throughput_monotone_in_islands(small_workload):
+    table, stream, queries = small_workload
+    tp = {}
+    for s in (1, 2, 4):
+        r = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                               backend="numpy", n_shards=s)
+        tp[s] = r.ana_throughput
+        assert r.stats["islands"] == s
+    assert tp[1] <= tp[2] <= tp[4], tp
+    assert tp[4] > tp[1]  # islands must actually buy modeled throughput
+
+
+# ---------------------------------------------------------------------------
+# registry / spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_backend_spec_parsing():
+    be = get_backend("pallas@4")
+    assert isinstance(be, ShardedBackend)
+    assert be.n_shards == 4 and be.inner is get_backend("pallas")
+    assert be.name == "pallas@4"
+    # n_shards=1 resolves to the bare singleton, instances pass through
+    assert get_backend("numpy", n_shards=1) is get_backend("numpy")
+    assert get_backend(be) is be
+    assert get_backend(be, n_shards=4) is be  # matching count is fine
+    # a contradicting explicit n_shards must raise, not silently drop
+    with pytest.raises(ValueError, match="was requested"):
+        get_backend(be, n_shards=2)
+    with pytest.raises(ValueError, match="was requested"):
+        get_backend(get_backend("numpy"), n_shards=3)
+    with pytest.raises(ValueError, match="nest"):
+        ShardedBackend(be, 2)
+    with pytest.raises(KeyError):
+        get_backend("numpy@one")
+    with pytest.raises(KeyError):
+        get_backend("cuda@4")
+    with pytest.raises(ValueError):
+        ShardedBackend("numpy", 0)
+    # non-positive shard specs must not silently resolve to unsharded
+    with pytest.raises(ValueError, match="n_shards"):
+        get_backend("pallas@0")
+    with pytest.raises(ValueError, match="n_shards"):
+        get_backend("numpy@-2")
+    with pytest.raises(ValueError, match="n_shards"):
+        get_backend("numpy", n_shards=0)
+
+
+def test_spec_shard_count_conflicts_with_argument():
+    assert get_backend("pallas@4", n_shards=4).n_shards == 4  # agreement ok
+    with pytest.raises(ValueError, match="contradicts"):
+        get_backend("pallas@4", n_shards=2)
+
+
+def test_shards_env_parsing(monkeypatch):
+    from repro.core.backend import _shards_from_env
+    monkeypatch.setenv("REPRO_SHARDS", "4")
+    assert _shards_from_env() == 4
+    monkeypatch.delenv("REPRO_SHARDS")
+    assert _shards_from_env() == 1
+    for bad in ("two", "0", "-3"):
+        monkeypatch.setenv("REPRO_SHARDS", bad)
+        with pytest.raises(ValueError, match="REPRO_SHARDS"):
+            _shards_from_env()
+
+
+def test_default_backend_accepts_counted_spec():
+    from repro.core.backend import default_backend_name, set_default_backend
+    old = default_backend_name()
+    try:
+        set_default_backend("pallas@4")
+        be = get_backend(None)
+        assert isinstance(be, ShardedBackend) and be.n_shards == 4
+        # an explicit n_shards overrides a default-derived spec count
+        # (a conflict error would abort e.g. fig10's shard sweep)
+        assert get_backend(None, n_shards=1) is get_backend("pallas",
+                                                            n_shards=1)
+        assert get_backend(None, n_shards=2).n_shards == 2
+    finally:
+        set_default_backend(old)
+    with pytest.raises(KeyError):
+        set_default_backend("cuda@4")
+    with pytest.raises(ValueError):
+        set_default_backend("pallas@0")
+
+
+def test_islands_scale_partitioned_not_replicated_work():
+    """PIM scan cycles partition across islands; the dictionary-stage
+    units (sorter/merge/hash) do replicated work and must not speed up."""
+    import dataclasses
+
+    from repro.core.hwmodel import CostLog, HardwareModel, HMC_PARAMS
+
+    hw4 = dataclasses.replace(HMC_PARAMS, n_ana_islands=4)
+    scan = CostLog()
+    scan.add(phase="ana", island="ana", resource="pim", cycles=1e9)
+    assert HardwareModel(hw4).phase_time(scan.events).seconds == \
+        pytest.approx(HardwareModel(HMC_PARAMS).phase_time(scan.events)
+                      .seconds / 4)
+    for unit in ("sorter", "merge", "hash"):
+        ev = CostLog()
+        ev.add(phase="apply", island="ana", resource=unit, items=1e6)
+        assert HardwareModel(hw4).phase_time(ev.events).seconds == \
+            pytest.approx(HardwareModel(HMC_PARAMS).phase_time(ev.events)
+                          .seconds)
+    # replicated dictionary-stage *bytes* don't shrink per island either,
+    # while partitioned copy bytes do
+    repl = CostLog()
+    repl.add(phase="apply", island="ana", resource="merge", bytes_local=1e9)
+    assert HardwareModel(hw4).phase_time(repl.events).seconds == \
+        pytest.approx(HardwareModel(HMC_PARAMS).phase_time(repl.events)
+                      .seconds)
+    part = CostLog()
+    part.add(phase="apply", island="ana", resource="copy", bytes_local=1e9)
+    assert HardwareModel(hw4).phase_time(part.events).seconds == \
+        pytest.approx(HardwareModel(HMC_PARAMS).phase_time(part.events)
+                      .seconds / 4)
+
+
+def test_copy_unit_rate_is_functional():
+    """copy_bw_frac < 1 must slow copy-bound phases (snapshot/ship)."""
+    import dataclasses
+
+    from repro.core.hwmodel import CostLog, HardwareModel, HMC_PARAMS
+
+    log = CostLog()
+    log.add(phase="snapshot", island="ana", resource="copy",
+            bytes_local=1e9)
+    fast = HardwareModel(HMC_PARAMS).phase_time(log.events)
+    slow_hw = dataclasses.replace(HMC_PARAMS, copy_bw_frac=0.25)
+    slow = HardwareModel(slow_hw).phase_time(log.events)
+    assert slow.seconds == pytest.approx(4 * fast.seconds)
+    assert slow.bound == "copy"
+
+
+def test_default_n_shards_roundtrip():
+    old = default_n_shards()
+    try:
+        set_default_n_shards(3)
+        be = get_backend("numpy")
+        assert isinstance(be, ShardedBackend) and be.n_shards == 3
+    finally:
+        set_default_n_shards(old)
+    with pytest.raises(ValueError):
+        set_default_n_shards(0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sweep
+# ---------------------------------------------------------------------------
+
+def test_property_sharded_matches_inner():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(n=st.integers(1, 300), k=st.integers(1, 12),
+           seed=st.integers(0, 1 << 16), delete_shard=st.booleans())
+    def prop(n, k, seed, delete_shard):
+        rng = np.random.default_rng(seed)
+        fcol = _col(rng, n, domain=1 + int(rng.integers(1, 1 << 12)))
+        acol = _col(rng, n, domain=200)
+        if delete_shard and k > 1:
+            # empty one island's rows entirely (deletes -> valid=False)
+            b = shard_bounds(n, k)
+            s = int(rng.integers(0, k))
+            valid = np.asarray(fcol.valid).copy()
+            valid[b[s]:b[s + 1]] = False
+            fcol = EncodedColumn(codes=fcol.codes,
+                                 dictionary=fcol.dictionary,
+                                 valid=jnp.asarray(valid),
+                                 version=fcol.version)
+        base = get_backend("numpy")
+        be = ShardedBackend(base, k)
+        d = np.asarray(fcol.dictionary)
+        lo = int(d[int(rng.integers(0, len(d)))])
+        hi = int(d[int(rng.integers(0, len(d)))])
+        assert be.filter_agg(fcol, acol, lo, hi) == \
+            base.filter_agg(fcol, acol, lo, hi)
+        assert be.filter_agg_batch(fcol, acol, [(lo, hi), (0, 1 << 24)]) == \
+            base.filter_agg_batch(fcol, acol, [(lo, hi), (0, 1 << 24)])
+        assert be.hash_join_count(acol, acol) == \
+            base.hash_join_count(acol, acol)
+
+    prop()

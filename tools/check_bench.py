@@ -1,0 +1,93 @@
+#!/usr/bin/env python
+"""Benchmark-regression gate: compare a CI bench run against the baseline.
+
+Usage: python tools/check_bench.py BENCH_ci.json benchmarks/baseline.json \
+           [--tolerance 0.15]
+
+Both files are written by ``python -m benchmarks.run ci --json=...``. The
+gate fails (exit 1) when any tracked throughput metric (txn_tps, ana_qps)
+of any baseline combo regresses by more than ``tolerance`` relative to the
+checked-in baseline, or when a baseline combo is missing from the current
+run. Throughputs come from the analytic hardware model over a fixed seeded
+workload, so they are deterministic and machine-independent — the
+tolerance only absorbs intentional-but-small cost-model drift; anything
+larger must ship with a regenerated baseline
+(``python -m benchmarks.run ci --json=benchmarks/baseline.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+METRICS = ("txn_tps", "ana_qps")
+
+
+def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
+    """Return a list of failure strings (empty == gate passes)."""
+    failures = []
+    # answers are exact: any checksum drift is a correctness regression in
+    # the shared engine (all combos shift together, so the cross-combo
+    # equality inside ci_bench cannot catch it) — no tolerance here
+    b_sum = baseline.get("answers_checksum")
+    c_sum = current.get("answers_checksum")
+    if b_sum is not None:
+        status = "ok" if c_sum == b_sum else "FAIL"
+        print(f"  answers_checksum baseline={b_sum} current={c_sum} {status}")
+        if c_sum != b_sum:
+            failures.append(
+                f"answers_checksum: {c_sum} != baseline {b_sum} "
+                "(query answers changed — correctness, not throughput)")
+    cur = current.get("metrics", {})
+    base = baseline.get("metrics", {})
+    for combo in sorted(base):
+        if combo not in cur:
+            failures.append(f"{combo}: missing from current run")
+            continue
+        for metric in METRICS:
+            b = base[combo].get(metric)
+            c = cur[combo].get(metric)
+            if b is None:
+                continue
+            if c is None:
+                failures.append(f"{combo}.{metric}: missing from current run")
+                continue
+            floor = b * (1.0 - tolerance)
+            status = "FAIL" if c < floor else "ok"
+            print(f"  {combo:12s} {metric:8s} baseline={b:.6e} "
+                  f"current={c:.6e} ({(c / b - 1.0) * 100:+.2f}%) {status}")
+            if c < floor:
+                failures.append(
+                    f"{combo}.{metric}: {c:.6e} < {floor:.6e} "
+                    f"(baseline {b:.6e}, tolerance {tolerance:.0%})")
+    for combo in sorted(set(cur) - set(base)):
+        print(f"  {combo:12s} (new combo, not in baseline — not gated)")
+    return failures
+
+
+def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("current", help="BENCH_ci.json from this run")
+    parser.add_argument("baseline", help="checked-in benchmarks/baseline.json")
+    parser.add_argument("--tolerance", type=float, default=0.15,
+                        help="allowed fractional regression (default 0.15)")
+    args = parser.parse_args()
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    print(f"bench gate: {args.current} vs {args.baseline} "
+          f"(tolerance {args.tolerance:.0%})")
+    failures = compare(current, baseline, args.tolerance)
+    if failures:
+        print("bench gate FAILED:")
+        for f_ in failures:
+            print(f"  - {f_}")
+        return 1
+    print("bench gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

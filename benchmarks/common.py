@@ -6,6 +6,12 @@ model (core/hwmodel.py), scaled down from the paper's gem5 sizes (noted per
 figure). Each module returns rows of
     (name, us_per_call, derived)
 for benchmarks.run's CSV, and prints a paper-claim vs ours table.
+
+The harness flags thread three session defaults through every driver call:
+--backend/REPRO_BACKEND (execution backend), --shards/REPRO_SHARDS
+(analytical islands) and --timing/REPRO_TIMING (phase-bucket vs
+discrete-event timeline cost model, core/timeline.py) — benchmark modules
+pass None and pick the session default up automatically.
 """
 
 from __future__ import annotations
@@ -47,6 +53,17 @@ def timed(fn, *args, **kw):
     t0 = time.perf_counter()
     out = fn(*args, **kw)
     return out, (time.perf_counter() - t0) * 1e6
+
+
+def freshness_str(res) -> str:
+    """CSV-friendly rendering of a RunResult's commit-to-visibility lag
+    (timing="timeline" only; the phase model cannot measure it)."""
+    f = res.freshness_seconds
+    if not f:
+        return "freshness=n/a"
+    return (f"freshness_mean={f['mean'] * 1e6:.3f}us"
+            f";freshness_max={f['max'] * 1e6:.3f}us"
+            f";batches={f['n_batches']}")
 
 
 class ClaimTable:

@@ -4,14 +4,18 @@ Prints ``name,us_per_call,derived`` CSV rows (plus paper-claim check tables
 on stderr-style stdout lines prefixed with spaces).
 
 Usage: python -m benchmarks.run [figN|ci] [--backend=numpy|pallas]
-                                [--shards=N] [--json=PATH]
+                                [--shards=N] [--timing=phase|timeline]
+                                [--json=PATH]
 
 --backend selects the execution backend (core/backend.py) for every system
 driver; the REPRO_BACKEND environment variable does the same. --shards
 fans analytics out over N analytical islands (ShardedBackend; REPRO_SHARDS
-works too). The ``ci`` tag runs the small fixed CI workload over
-numpy/pallas x shards {1, 4} and writes the throughput gate file
-(--json, default BENCH_ci.json) compared by tools/check_bench.py.
+works too). --timing selects the cost model — whole-run phase buckets
+("phase") or the round-by-round discrete-event timeline ("timeline",
+core/timeline.py); REPRO_TIMING works too. The ``ci`` tag runs the small
+fixed CI workload over numpy/pallas x shards {1, 4} plus one async-timeline
+configuration and writes the throughput gate file (--json, default
+BENCH_ci.json) compared by tools/check_bench.py.
 """
 
 import json
@@ -19,16 +23,28 @@ import sys
 import time
 
 USAGE = ("usage: python -m benchmarks.run [figN|ci] [--backend=NAME] "
-         "[--shards=N] [--json=PATH]")
+         "[--shards=N] [--timing=phase|timeline] [--json=PATH]")
 
-CI_MATRIX = [("numpy", 1), ("numpy", 4), ("pallas", 1), ("pallas", 4)]
+# (label, driver kwargs). The timeline combo prices the very same Polynesia
+# run with the discrete-event model (async propagation): its answers must
+# match the phase combos bit-for-bit, and its modeled throughput/freshness
+# are gated like any other row.
+CI_MATRIX = [
+    ("numpy@1", dict(backend="numpy", n_shards=1)),
+    ("numpy@4", dict(backend="numpy", n_shards=4)),
+    ("pallas@1", dict(backend="pallas", n_shards=1)),
+    ("pallas@4", dict(backend="pallas", n_shards=4)),
+    ("numpy@1+timeline-async",
+     dict(backend="numpy", n_shards=1, timing="timeline",
+          async_propagation=True)),
+]
 
 
 def ci_bench(json_path: str) -> None:
     """Small fixed workload -> modeled throughput gate file.
 
-    Runs Polynesia over the backend x shard matrix; every combo must
-    produce the same (bit-identical) query answers, and each combo's
+    Runs Polynesia over the backend x shard (x timing) matrix; every combo
+    must produce the same (bit-identical) query answers, and each combo's
     modeled txn/ana throughput lands in the JSON that CI compares against
     benchmarks/baseline.json. Modeled throughputs are deterministic
     (analytic cost model over a seeded workload), so a regression gate on
@@ -42,21 +58,24 @@ def ci_bench(json_path: str) -> None:
     metrics = {}
     answers = None
     wall_us = {}
-    for be, shards in CI_MATRIX:
+    for label, kwargs in CI_MATRIX:
         table, stream, queries = ci_workload()
         t0 = time.perf_counter()
         res = htap.run_polynesia(table, stream, queries, n_rounds=4,
-                                 backend=be, n_shards=shards)
-        wall_us[f"{be}@{shards}"] = (time.perf_counter() - t0) * 1e6
+                                 **kwargs)
+        wall_us[label] = (time.perf_counter() - t0) * 1e6
         if answers is None:
             answers = res.results
         elif answers != res.results:
-            sys.exit(f"CI bench: {be}@{shards} answers diverged from "
+            sys.exit(f"CI bench: {label} answers diverged from "
                      "the first combo — exactness contract broken")
-        metrics[f"{be}@{shards}"] = {
+        metrics[label] = {
             "txn_tps": res.txn_throughput,
             "ana_qps": res.ana_throughput,
         }
+        if res.freshness_seconds:
+            metrics[label]["freshness_mean_s"] = res.freshness_seconds["mean"]
+            metrics[label]["freshness_max_s"] = res.freshness_seconds["max"]
     payload = {
         "workload": "ci_workload (seed 0): 4000 rows x 4 cols, 8000 txn, "
                     "12 queries, n_rounds=4, Polynesia",
@@ -105,6 +124,12 @@ def main() -> None:
                 set_default_n_shards(int(a.split("=", 1)[1]))
             except ValueError as e:
                 sys.exit(f"{e}; {USAGE}")
+        elif a.startswith("--timing="):
+            from repro.core.timeline import set_default_timing
+            try:
+                set_default_timing(a.split("=", 1)[1])
+            except ValueError as e:
+                sys.exit(f"{e.args[0]}; {USAGE}")
         elif a.startswith("--json="):
             json_path = a.split("=", 1)[1]
         else:

@@ -119,6 +119,8 @@ def _optimized_apply_cost(cost: CostLog, on_pim: bool, m: int, n: int,
     their modeled latency is island-independent, while the stage-3
     re-encode bytes are row-partitioned and ride the island-scaled copy/
     bandwidth rates (see hwmodel.phase_time)."""
+    # timeline metadata: applied-update count on this node's Phase-2 swap
+    cost.annotate_add(n_applied=int(m))
     # soft partitioning: updates touch at most m partitions
     n_eff = min(n, max(1, min(m, n // PARTITION_ROWS + 1)) * PARTITION_ROWS)
     enc_eff = n_eff * bit_width / 8.0
@@ -313,6 +315,7 @@ def apply_updates_naive(
     new_codes = np.searchsorted(new_dict, values).astype(np.int32)
 
     if cost is not None and m:
+        cost.annotate_add(n_applied=int(m))
         k_new = len(new_dict)
         n_tot = len(values)
         n_eff = min(n_tot,

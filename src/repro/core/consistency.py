@@ -122,6 +122,9 @@ class ConsistencyManager:
         self.snapshots_created += 1
         if self.cost is not None:
             nbytes = col.encoded_bytes + col.dict_size * VALUE_BYTES
+            # timeline metadata: snapshot volume on this node (one call per
+            # pinned dirty column, hence the accumulating annotate)
+            self.cost.annotate_add(n_snapshots=1, snapshot_bytes=2 * nbytes)
             if self.on_pim:
                 self.cost.add(phase="snapshot", island="ana", resource="copy",
                               bytes_local=2 * nbytes)

@@ -15,6 +15,17 @@ plus the two normalization baselines:
 Each run executes the workload *functionally* (every system computes real
 query answers — asserted equal across systems in tests/) while emitting
 cost events priced by the analytic hardware model (hwmodel.py).
+
+Timing models (``timing=`` on every driver, or REPRO_TIMING):
+  "phase"     whole-run phase buckets per island (hwmodel.HardwareModel.time)
+  "timeline"  round-by-round discrete-event replay (core/timeline.py): every
+              stage of a round is a tagged node in a dependency graph, so
+              propagation/snapshot units overlap the query cores and the
+              commit-to-visibility freshness metric becomes measurable.
+              ``async_propagation=True`` (timeline only) additionally stops
+              the txn island from stalling on update application.
+Answers are bit-identical across timing models, backends and shard counts —
+only the pricing changes (tests/test_timeline.py).
 """
 
 from __future__ import annotations
@@ -37,6 +48,7 @@ from repro.core.placement import hybrid
 from repro.core.schema import UpdateStream
 from repro.core.shipping import ship_updates, FINAL_LOG_CAPACITY
 from repro.core.snapshot import SnapshotStore
+from repro.core.timeline import resolve_timing, simulate_timeline
 
 # PIM-Only calibration: OLTP on in-order PIM cores pays extra cycles (no OoO
 # ILP for pointer-heavy txn code) even though more threads are available.
@@ -53,6 +65,9 @@ class RunResult:
     energy_joules: float
     results: list[int]            # analytical query answers (for equality tests)
     stats: dict = dataclasses.field(default_factory=dict)
+    # Commit-to-visibility lag {"mean": s, "max": s, "n_batches": k}; only
+    # measurable under timing="timeline" (None under the phase model).
+    freshness_seconds: dict | None = None
 
     @property
     def txn_throughput(self) -> float:
@@ -93,39 +108,93 @@ def _resolve_islands(backend, n_shards, hw: HardwareParams):
     return be, hw
 
 
+def _cid_span(chunk: UpdateStream) -> tuple[int, int]:
+    """(first, last) commit id of a round's chunk (-1, -1 when empty)."""
+    if not len(chunk):
+        return -1, -1
+    return int(chunk.commit_id[0]), int(chunk.commit_id[-1])
+
+
+def _price(name: str, cost: CostLog, hw: HardwareParams, timing: str,
+           n_txn: int, n_ana: int, results: list, stats: dict | None = None,
+           async_propagation: bool = False,
+           concurrent_islands: bool = True) -> RunResult:
+    """Price the cost log under the selected timing model -> RunResult.
+
+    "phase": per-island phase-bucket sums (the original model). "timeline":
+    discrete-event replay. Timeline txn seconds are the txn lane's
+    *completion time* (finish of its last node) — round-boundary stalls
+    are exactly the throughput loss async propagation removes. Timeline
+    ana seconds stay *busy-based* like the phase model (waiting for a
+    snapshot is not query work); the end-to-end picture lives in
+    ``stats["timeline"]`` (makespan, per-lane finish/busy/utilization),
+    and freshness is reported on the result.
+    """
+    model = HardwareModel(hw)
+    stats = dict(stats or {})
+    if timing == "timeline":
+        tl = simulate_timeline(cost, model,
+                               async_propagation=async_propagation,
+                               concurrent_islands=concurrent_islands)
+        stats["timeline"] = {
+            "makespan": tl.makespan,
+            "utilization": tl.utilization,
+            "lane_busy": tl.lane_busy,
+            "lane_finish": tl.lane_finish,
+            "async": async_propagation,
+        }
+        return RunResult(name, n_txn, n_ana,
+                         tl.lane_finish.get("txn", 0.0),
+                         tl.lane_busy.get("ana", 0.0),
+                         model.energy(cost), results, stats=stats,
+                         freshness_seconds=tl.freshness)
+    t = model.time(cost, concurrent_islands=concurrent_islands)
+    # the concurrent fixed-function bucket (ship/apply/snapshot on the
+    # analytical island) — exposed so the timeline's makespan can be
+    # compared against the full serial phase sum (txn + ana + accel)
+    stats["accel_seconds"] = t["accel"]
+    return RunResult(name, n_txn, n_ana, t["txn"], t["ana"],
+                     model.energy(cost), results, stats=stats)
+
+
 # ---------------------------------------------------------------------------
 # Normalization baselines
 # ---------------------------------------------------------------------------
 
 def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
-                  backend=None, n_shards: int | None = None) -> RunResult:
+                  backend=None, n_shards: int | None = None,
+                  timing: str | None = None) -> RunResult:
     """Transactions alone: no analytics, zero-cost propagation/consistency.
 
     `n_shards` is accepted for driver-API uniformity; with no analytical
     work there are no islands to shard."""
     get_backend(backend, n_shards=n_shards)  # validate selection only
+    timing = resolve_timing(timing)
     cost = CostLog()
     store = RowStore(table)
-    store.execute(stream, cost)
-    model = HardwareModel(hw)
-    t = model.time(cost, concurrent_islands=False)
-    return RunResult("Ideal-Txn", len(stream), 0, t["txn"], 0.0,
-                     model.energy(cost), [])
+    lo, hi = _cid_span(stream)
+    with cost.tagged("r0:txn", "txn", round=0, n=len(stream),
+                     cid_lo=lo, cid_hi=hi):
+        store.execute(stream, cost)
+    return _price("Ideal-Txn", cost, hw, timing, len(stream), 0, [],
+                  concurrent_islands=False)
 
 
 def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
-                 backend=None, n_shards: int | None = None) -> RunResult:
+                 backend=None, n_shards: int | None = None,
+                 timing: str | None = None) -> RunResult:
     """Analytics alone on the multicore CPU over a DSM replica."""
     be, hw = _resolve_islands(backend, n_shards, hw)
+    timing = resolve_timing(timing)
     cost = CostLog()
     replica = DSMReplica.from_table(table)
-    results = [engine.run_query_dsm(replica.columns, q, cost, on_pim=False,
-                                    backend=be)
-               for q in queries]
-    model = HardwareModel(hw)
-    t = model.time(cost, concurrent_islands=False)
-    return RunResult("Ana-Only", 0, len(queries), 0.0, t["ana"],
-                     model.energy(cost), results)
+    results = []
+    for i, q in enumerate(queries):
+        with cost.tagged(f"q{i}:ana", "ana", round=0):
+            results.append(engine.run_query_dsm(replica.columns, q, cost,
+                                                on_pim=False, backend=be))
+    return _price("Ana-Only", cost, hw, timing, 0, len(queries), results,
+                  concurrent_islands=False)
 
 
 # ---------------------------------------------------------------------------
@@ -134,7 +203,8 @@ def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
 
 def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
               n_rounds: int = 8, zero_cost_snapshot: bool = False,
-              backend=None, n_shards: int | None = None) -> RunResult:
+              backend=None, n_shards: int | None = None,
+              timing: str | None = None) -> RunResult:
     """Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
 
     zero_cost_snapshot: the paper's normalization baseline — identical run,
@@ -144,32 +214,46 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     no analytical islands to shard (that's the point of the baseline).
     """
     get_backend(backend, n_shards=n_shards)  # validate selection only
+    timing = resolve_timing(timing)
     cost = CostLog()
     store = RowStore(table)
     snap = SnapshotStore(table)
     results = []
-    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
-                                  _split_queries(queries, n_rounds)):
-        store.execute(txn_chunk, cost)
+    prev_txn = None
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(_split_stream(stream, n_rounds),
+                _split_queries(queries, n_rounds))):
+        txn_node = f"r{r}:txn"
+        lo, hi = _cid_span(txn_chunk)
+        with cost.tagged(txn_node, "txn", round=r,
+                         deps=(prev_txn,) if prev_txn else (),
+                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
+            store.execute(txn_chunk, cost)
+        prev_txn = txn_node
         snap.data = store.data            # single instance: same storage
         if txn_chunk.writes_mask().any():
             snap.mark_dirty()
         if q_chunk:
-            view = snap.take_snapshot_if_needed(
-                None if zero_cost_snapshot else cost)
-            for q in q_chunk:
-                results.append(engine.run_query_nsm(view, q, cost,
-                                                    backend=backend))
-    model = HardwareModel(hw)
-    t = model.time(cost)
-    return RunResult("SI-SS", len(stream), len(queries), t["txn"], t["ana"],
-                     model.energy(cost), results,
-                     stats={"snapshots": snap.snapshots_taken})
+            # the memcpy burns txn-island CPU -> the snapshot node lands in
+            # the txn lane, which is exactly the Fig. 1-right stall
+            snap_node = f"r{r}:snap"
+            with cost.tagged(snap_node, "snapshot", round=r,
+                             deps=(txn_node,)):
+                view = snap.take_snapshot_if_needed(
+                    None if zero_cost_snapshot else cost)
+            for i, q in enumerate(q_chunk):
+                with cost.tagged(f"r{r}:ana{i}", "ana", round=r,
+                                 deps=(snap_node,)):
+                    results.append(engine.run_query_nsm(view, q, cost,
+                                                        backend=backend))
+    return _price("SI-SS", cost, hw, timing, len(stream), len(queries),
+                  results, stats={"snapshots": snap.snapshots_taken})
 
 
 def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
                 n_rounds: int = 8, zero_cost_mvcc: bool = False,
-                backend=None, n_shards: int | None = None) -> RunResult:
+                backend=None, n_shards: int | None = None,
+                timing: str | None = None) -> RunResult:
     """Single-Instance-MVCC: version chains; analytics traverse chains.
 
     zero_cost_mvcc: identical run, chain traversal costs nothing (the
@@ -181,37 +265,51 @@ def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     always executes on the single instance.
     """
     get_backend(backend, n_shards=n_shards)
+    timing = resolve_timing(timing)
     cost = CostLog()
     store = MVCCStore(table)
     results = []
-    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
-                                  _split_queries(queries, n_rounds)):
+    prev_txn = None
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(_split_stream(stream, n_rounds),
+                _split_queries(queries, n_rounds))):
         # analytics run CONCURRENTLY with this round's transactions: their
         # snapshot timestamp is the round start, so every version committed
-        # during the round is "newer" and must be hopped over (§3.1).
+        # during the round is "newer" and must be hopped over (§3.1). On
+        # the timeline the query nodes therefore depend only on the
+        # *previous* round's txn node.
         ts = int(txn_chunk.commit_id[0]) - 1 if len(txn_chunk) else 0
-        store.execute(txn_chunk, cost)
+        txn_node = f"r{r}:txn"
+        lo, hi = _cid_span(txn_chunk)
+        with cost.tagged(txn_node, "txn", round=r,
+                         deps=(prev_txn,) if prev_txn else (),
+                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
+            store.execute(txn_chunk, cost)
         hops = not zero_cost_mvcc
-        for q in q_chunk:
-            fvals = store.read_column_at(q.filter_col, ts, cost, hops)
-            avals = store.read_column_at(q.agg_col, ts, cost, hops)
-            mask = (fvals >= q.lo) & (fvals <= q.hi)
-            res = int(avals[mask].astype(np.int64).sum())
-            if q.join_col is not None:
-                jv = store.read_column_at(q.join_col, ts, cost, hops)
-                uv, counts = np.unique(jv, return_counts=True)
-                lv, lcounts = np.unique(jv[mask], return_counts=True)
-                common, li, ri = np.intersect1d(lv, uv, return_indices=True)
-                res += int((lcounts[li].astype(np.int64) * counts[ri]).sum())
-            results.append(res)
-            # scan cycles beyond chain traversal (already priced in read_column_at)
-            cost.add(phase="ana", island="ana", resource="cpu",
-                     cycles=store.base.shape[0] * engine.CPU_CYCLES_PER_ROW)
-    model = HardwareModel(hw)
-    t = model.time(cost)
-    return RunResult("SI-MVCC", len(stream), len(queries), t["txn"], t["ana"],
-                     model.energy(cost), results,
-                     stats={"versions": store.n_versions})
+        for i, q in enumerate(q_chunk):
+            with cost.tagged(f"r{r}:ana{i}", "ana", round=r,
+                             deps=(prev_txn,) if r else ()):
+                fvals = store.read_column_at(q.filter_col, ts, cost, hops)
+                avals = store.read_column_at(q.agg_col, ts, cost, hops)
+                mask = (fvals >= q.lo) & (fvals <= q.hi)
+                res = int(avals[mask].astype(np.int64).sum())
+                if q.join_col is not None:
+                    jv = store.read_column_at(q.join_col, ts, cost, hops)
+                    uv, counts = np.unique(jv, return_counts=True)
+                    lv, lcounts = np.unique(jv[mask], return_counts=True)
+                    common, li, ri = np.intersect1d(lv, uv,
+                                                    return_indices=True)
+                    res += int((lcounts[li].astype(np.int64)
+                                * counts[ri]).sum())
+                results.append(res)
+                # scan cycles beyond chain traversal (already priced in
+                # read_column_at)
+                cost.add(phase="ana", island="ana", resource="cpu",
+                         cycles=store.base.shape[0]
+                         * engine.CPU_CYCLES_PER_ROW)
+        prev_txn = txn_node
+    return _price("SI-MVCC", cost, hw, timing, len(stream), len(queries),
+                  results, stats={"versions": store.n_versions})
 
 
 # ---------------------------------------------------------------------------
@@ -231,6 +329,8 @@ def run_multi_instance(
     zero_cost_propagation: bool = False,  # Fig. 2/7 "Ideal" baseline
     backend=None,
     n_shards: int | None = None,
+    timing: str | None = None,
+    async_propagation: bool = False,
 ) -> RunResult:
     """Shared driver for MI+SW / MI+SW+HB / PIM-Only / Polynesia.
 
@@ -247,8 +347,19 @@ def run_multi_instance(
     the DSM is row-sharded (ShardedBackend), updates route to owning
     islands, partial aggregates reduce exactly, and the hardware model gets
     island-scaled ana-side rates — answers stay bit-identical to n_shards=1.
+
+    `timing` selects the pricing model (see module docstring).
+    `async_propagation=True` (timeline only) removes the round-boundary
+    stall: the txn island never waits for update application, ship batches
+    are released as their updates commit, and freshness (commit-to-
+    visibility lag) absorbs the difference — exactly §5/§6's contract.
     """
     be, hw = _resolve_islands(backend, n_shards, hw)
+    timing = resolve_timing(timing)
+    if async_propagation and timing != "timeline":
+        raise ValueError(
+            "async_propagation requires timing='timeline' (the phase-bucket "
+            "model has no round boundaries to overlap)")
     cost = CostLog()
     store = RowStore(table)
     replica = DSMReplica.from_table(table)
@@ -257,74 +368,114 @@ def run_multi_instance(
     placement = hybrid(hw.n_vaults * hw.n_stacks)
     results = []
     applications = 0
-    for txn_chunk, q_chunk in zip(_split_stream(stream, n_rounds),
-                                  _split_queries(queries, n_rounds)):
+    prev_txn = None
+    prev_round_prop: tuple[str, ...] = ()
+    vis_node: dict[int, str] = {}   # col -> apply node of its last Phase-2 swap
+    ship_i = 0
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(_split_stream(stream, n_rounds),
+                _split_queries(queries, n_rounds))):
         # -- transactional island -----------------------------------------
-        if txn_on_pim:
-            store.execute(txn_chunk)  # functional only; price on PIM cores:
-            n = len(txn_chunk)
-            cost.add(phase="txn", island="txn", resource="pim_txn",
-                     cycles=n * RowStore.CYCLES_PER_TXN * PIM_TXN_CYCLE_FACTOR,
-                     bytes_local=n * store.n_cols * 4 * RowStore.MISS_FRACTION)
-        else:
-            store.execute(txn_chunk, cost)
+        txn_node = f"r{r}:txn"
+        lo, hi = _cid_span(txn_chunk)
+        with cost.tagged(txn_node, "txn", round=r,
+                         deps=(prev_txn,) if prev_txn else (),
+                         sync_deps=prev_round_prop,
+                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
+            if txn_on_pim:
+                store.execute(txn_chunk)  # functional only; price on PIM:
+                n = len(txn_chunk)
+                cost.add(phase="txn", island="txn", resource="pim_txn",
+                         cycles=n * RowStore.CYCLES_PER_TXN
+                         * PIM_TXN_CYCLE_FACTOR,
+                         bytes_local=n * store.n_cols * 4
+                         * RowStore.MISS_FRACTION)
+            else:
+                store.execute(txn_chunk, cost)
+        prev_txn = txn_node
+        round_prop: list[str] = []
 
         # -- update propagation (§5): ship when final log capacity reached --
         while store.pending_updates >= FINAL_LOG_CAPACITY or (
                 store.pending_updates and q_chunk):
-            logs = store.drain_logs()
+            # The final log is a hardware buffer (§5.1's merge unit): when
+            # propagation runs on the in-memory units, each ship batch is
+            # at most one final log's worth — larger capacity -> fewer,
+            # larger batches -> staler visible data. The software baseline
+            # has no such structure and ships its whole backlog at once.
+            logs = store.drain_logs(
+                limit=FINAL_LOG_CAPACITY if propagation_on_pim else None)
+            ship_node = f"r{r}:ship{ship_i}"
             ship_cost = None if zero_cost_propagation else cost
-            buffers = ship_updates(logs, store.n_cols, ship_cost,
-                                   on_pim=propagation_on_pim, backend=be)
+            # in sync timing the batch waits for the whole round's txn
+            # execution; async releases it at its last update's commit time
+            with cost.tagged(ship_node, "ship", round=r,
+                             sync_deps=(txn_node,)):
+                buffers = ship_updates(logs, store.n_cols, ship_cost,
+                                       on_pim=propagation_on_pim, backend=be)
             islands = getattr(be, "n_shards", 1)
             for col_id, entries in buffers.items():
                 old = replica.columns[col_id]
                 app_cost = (None if (shipping_only or zero_cost_propagation)
                             else cost)
-                if optimized_application and islands > 1:
-                    # each island applies its own row range; the round
-                    # becomes visible only as a complete shard set
-                    # (all-or-none Phase-2 swap)
-                    shards = apply_updates_shards(
-                        old, entries, app_cost, on_pim=propagation_on_pim,
-                        backend=be)
-                    cons.on_update_shards(col_id, shards)
-                elif optimized_application:
-                    cons.on_update(col_id, apply_updates(
-                        old, entries, app_cost, on_pim=propagation_on_pim,
-                        backend=be))
-                else:
-                    # the naive software baseline rebuilds one whole column
-                    cons.on_update(col_id,
-                                   apply_updates_naive(old, entries, app_cost))
+                apply_node = f"{ship_node}:c{col_id}"
+                with cost.tagged(apply_node, "apply", round=r,
+                                 deps=(ship_node,), col=col_id):
+                    if optimized_application and islands > 1:
+                        # each island applies its own row range; the round
+                        # becomes visible only as a complete shard set
+                        # (all-or-none Phase-2 swap)
+                        shards = apply_updates_shards(
+                            old, entries, app_cost,
+                            on_pim=propagation_on_pim, backend=be)
+                        cons.on_update_shards(col_id, shards)
+                    elif optimized_application:
+                        cons.on_update(col_id, apply_updates(
+                            old, entries, app_cost,
+                            on_pim=propagation_on_pim, backend=be))
+                    else:
+                        # the naive software baseline rebuilds a whole column
+                        cons.on_update(col_id, apply_updates_naive(
+                            old, entries, app_cost))
+                vis_node[col_id] = apply_node
+                round_prop.append(apply_node)
                 applications += 1
+            ship_i += 1
 
         # -- analytical island (§6 consistency + §7 engine) -----------------
         # Queries over the same column set run as one fused multi-query scan
         # (one kernel launch per group on the accelerator backend). Every
         # query still pins its own snapshot handle, and no update lands
         # mid-round, so the group shares a single consistent view; answers
-        # are emitted in the original query order.
+        # are emitted in the original query order. On the timeline a group
+        # depends only on its pinned snapshot's creation node — round r+1's
+        # propagation overlaps analytics over round r.
         round_results: dict[int, int] = {}
-        for group in engine.group_queries(q_chunk):
-            handles = [cons.begin_query(q.columns) for q in group]
-            view = {c: cons.read(handles[0], c) for c in group[0].columns}
-            answers = engine.run_query_group_dsm(
-                view, group, cost, placement, on_pim=analytics_on_pim,
-                backend=be)
+        for g, group in enumerate(engine.group_queries(q_chunk)):
+            cols = group[0].columns
+            snap_node = f"r{r}:snap{g}"
+            snap_deps = tuple(dict.fromkeys(
+                vis_node[c] for c in cols if c in vis_node))
+            with cost.tagged(snap_node, "snapshot", round=r, deps=snap_deps):
+                handles = [cons.begin_query(q.columns) for q in group]
+                view = {c: cons.read(handles[0], c) for c in cols}
+            with cost.tagged(f"r{r}:ana{g}", "ana", round=r,
+                             deps=(snap_node,)):
+                answers = engine.run_query_group_dsm(
+                    view, group, cost, placement, on_pim=analytics_on_pim,
+                    backend=be)
             for q, a in zip(group, answers):
                 round_results[id(q)] = a
             for h in handles:
                 cons.end_query(h)
         results.extend(round_results[id(q)] for q in q_chunk)
-    model = HardwareModel(hw)
-    t = model.time(cost)
-    return RunResult(name, len(stream), len(queries), t["txn"], t["ana"],
-                     model.energy(cost), results,
-                     stats={"applications": applications,
-                            "snapshots": cons.snapshots_created,
-                            "shared": cons.snapshots_shared,
-                            "islands": getattr(be, "n_shards", 1)})
+        prev_round_prop = tuple(round_prop)
+    return _price(name, cost, hw, timing, len(stream), len(queries), results,
+                  stats={"applications": applications,
+                         "snapshots": cons.snapshots_created,
+                         "shared": cons.snapshots_shared,
+                         "islands": getattr(be, "n_shards", 1)},
+                  async_propagation=async_propagation)
 
 
 def run_mi_sw(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:

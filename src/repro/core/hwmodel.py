@@ -25,7 +25,9 @@ only *relative* energy is reported.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import itertools
 from collections import defaultdict
 
 GB = 1e9
@@ -121,19 +123,92 @@ class CostEvent:
     bytes_remote: float = 0.0   # vault-to-vault traffic
     cycles: float = 0.0         # compute cycles on `resource`
     items: float = 0.0          # accelerator work items (values/entries/lookups)
+    node: str = ""              # timeline node (TimelineTag) this event belongs to
+
+
+@dataclasses.dataclass
+class TimelineTag:
+    """One node of the round-by-round event graph (core/timeline.py).
+
+    Drivers open a tag around each stage of a round (txn execution, a ship
+    batch, a per-column apply, a snapshot, a query group); every CostEvent
+    emitted while the tag is active carries its node id. ``deps`` are hard
+    dependencies (data cannot exist earlier); ``sync_deps`` are honored only
+    when the txn island stalls on update application (synchronous
+    propagation) and are dropped by the async timeline. ``meta`` carries
+    emission-site annotations (update counts, commit-id spans) used for the
+    commit-to-visibility freshness metric.
+    """
+
+    node: str
+    kind: str                     # "txn" | "ship" | "apply" | "snapshot" | "ana"
+    round: int = -1
+    seq: int = -1                 # emission order (assigned by the CostLog)
+    deps: tuple[str, ...] = ()
+    sync_deps: tuple[str, ...] = ()
+    meta: dict = dataclasses.field(default_factory=dict)
 
 
 class CostLog:
-    """Accumulates cost events; merged per (phase, island, resource)."""
+    """Accumulates cost events; merged per (phase, island, resource).
+
+    Also records the dependency-ordered timeline tags (`tagged`) that let
+    core/timeline.py replay the log as a discrete-event schedule instead of
+    whole-run phase buckets. Tagging is always on and purely additive: the
+    phase-bucket pricing (`HardwareModel.time`) ignores it entirely.
+    """
 
     def __init__(self):
         self.events: list[CostEvent] = []
+        self.tags: dict[str, TimelineTag] = {}
+        self._active_tag: TimelineTag | None = None
+        self._seq = itertools.count()
+
+    @contextlib.contextmanager
+    def tagged(self, node: str, kind: str, round: int = -1,
+               deps: tuple[str, ...] = (), sync_deps: tuple[str, ...] = (),
+               **meta):
+        """Open a timeline node: events added inside belong to it."""
+        if node in self.tags:
+            raise ValueError(f"duplicate timeline node {node!r}")
+        tag = TimelineTag(node=node, kind=kind, round=round,
+                          seq=next(self._seq), deps=tuple(deps),
+                          sync_deps=tuple(sync_deps), meta=dict(meta))
+        self.tags[node] = tag
+        prev, self._active_tag = self._active_tag, tag
+        try:
+            yield tag
+        finally:
+            self._active_tag = prev
+
+    def annotate(self, **meta) -> None:
+        """Attach metadata to the active timeline node (no-op untagged) —
+        how emission sites (shipping, application, consistency) report
+        update counts and commit-id spans without knowing about rounds."""
+        if self._active_tag is not None:
+            self._active_tag.meta.update(meta)
+
+    def annotate_add(self, **meta) -> None:
+        """Accumulate numeric metadata on the active timeline node (for
+        emission sites that fire several times per node, e.g. one snapshot
+        per pinned column)."""
+        if self._active_tag is not None:
+            m = self._active_tag.meta
+            for k, v in meta.items():
+                m[k] = m.get(k, 0) + v
 
     def add(self, **kw) -> None:
-        self.events.append(CostEvent(**kw))
+        ev = CostEvent(**kw)
+        if self._active_tag is not None and not ev.node:
+            ev.node = self._active_tag.node
+        self.events.append(ev)
 
     def extend(self, other: "CostLog") -> None:
         self.events.extend(other.events)
+        for node, tag in other.tags.items():
+            if node in self.tags:
+                raise ValueError(f"duplicate timeline node {node!r} in merge")
+            self.tags[node] = dataclasses.replace(tag, seq=next(self._seq))
 
     def totals(self) -> dict:
         t = defaultdict(float)
@@ -232,29 +307,26 @@ class HardwareModel:
         bound = max(terms, key=terms.get)
         return PhaseTime(phase=phase, seconds=max(terms.values()), bound=bound)
 
-    def time(self, log: CostLog, concurrent_islands: bool = True) -> dict:
-        """Total modeled time with cross-island contention.
+    def offchip_shares(self, log: CostLog,
+                       concurrent_islands: bool = True) -> dict:
+        """Proportional off-chip channel share per island under contention.
 
-        Returns {"txn": s, "ana": s, "phases": [...], "contention": f}.
-        Contention: both islands' off-chip demands share the channel
-        proportionally; single-instance systems also share CPU cores.
+        If the islands' combined demand rate (uncontended bytes/s) exceeds
+        the channel, each island receives its proportional share. Shared by
+        the phase-bucket pricing (`time`) and the timeline simulator
+        (core/timeline.py), so both price an event against the same
+        contended channel.
         """
         p = self.p
         phases = defaultdict(list)
         for e in log.events:
             phases[(e.phase, e.island)].append(e)
-
-        # First pass: uncontended per-island times & off-chip byte demand.
         island_bytes = defaultdict(float)
         island_time0 = defaultdict(float)
         for (ph, isl), evs in phases.items():
             t = self.phase_time(evs)
             island_time0[isl] += t.seconds
             island_bytes[isl] += sum(e.bytes_offchip for e in evs)
-
-        # Contention factor: if combined off-chip demand rate exceeds the
-        # channel, each island's memory phases slow by its proportional
-        # share. Demand rate uses the uncontended times.
         shares = {"txn": 1.0, "ana": 1.0}
         if concurrent_islands:
             demand = {
@@ -265,6 +337,32 @@ class HardwareModel:
             if total > p.offchip_bw:
                 for isl in demand:
                     shares[isl] = max(demand[isl] / total, 1e-6)
+        return shares
+
+    def node_seconds(self, events: list[CostEvent], shares: dict) -> float:
+        """Roofline time of one timeline node's events.
+
+        A node may mix islands (e.g. a ship batch's in-memory units plus the
+        txn island exposing its logs once over the channel); the island
+        groups run concurrently, so the node takes the slowest group.
+        """
+        by_island = defaultdict(list)
+        for e in events:
+            by_island[e.island].append(e)
+        return max((self.phase_time(evs, offchip_share=shares.get(isl, 1.0))
+                    .seconds for isl, evs in by_island.items()), default=0.0)
+
+    def time(self, log: CostLog, concurrent_islands: bool = True) -> dict:
+        """Total modeled time with cross-island contention.
+
+        Returns {"txn": s, "ana": s, "phases": [...], "contention": f}.
+        Contention: both islands' off-chip demands share the channel
+        proportionally; single-instance systems also share CPU cores.
+        """
+        phases = defaultdict(list)
+        for e in log.events:
+            phases[(e.phase, e.island)].append(e)
+        shares = self.offchip_shares(log, concurrent_islands)
 
         out_phases: list[PhaseTime] = []
         island_time = defaultdict(float)

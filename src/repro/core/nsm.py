@@ -54,6 +54,14 @@ class UpdateLog:
         self.entries.clear()
         return out
 
+    def drain_until(self, cutoff_commit_id: int) -> np.ndarray:
+        """Drain entries with commit_id <= cutoff (a prefix: the log is
+        commit-ordered); the remainder stays pending."""
+        batch = self.drain()
+        keep = batch["commit_id"] <= cutoff_commit_id
+        self.append(batch[~keep])
+        return batch[keep]
+
     @property
     def pending(self) -> int:
         return sum(len(e) for e in self.entries)
@@ -123,6 +131,20 @@ class RowStore:
                 + int(w.sum()) * LOG_ENTRY_BYTES,
             )
 
-    def drain_logs(self) -> list[np.ndarray]:
-        """Hand the per-thread logs (each internally commit-ordered) to shipping."""
-        return [log.drain() for log in self.logs]
+    def drain_logs(self, limit: int | None = None) -> list[np.ndarray]:
+        """Hand the per-thread logs (each internally commit-ordered) to shipping.
+
+        ``limit`` caps the batch at the final log's capacity (§5.1): the
+        globally-oldest ``limit`` updates by commit id are drained (so the
+        merged final log never exceeds its hardware size) and the rest stay
+        pending for the next ship. Application order — global commit order —
+        is unchanged, so batching granularity never alters query answers;
+        it only moves the commit-to-visibility freshness the timeline
+        model measures.
+        """
+        if limit is None or self.pending_updates <= limit:
+            return [log.drain() for log in self.logs]
+        cids = np.concatenate([e["commit_id"] for log in self.logs
+                               for e in log.entries])
+        cutoff = int(np.partition(cids, limit - 1)[limit - 1])
+        return [log.drain_until(cutoff) for log in self.logs]

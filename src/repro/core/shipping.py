@@ -87,6 +87,13 @@ def ship_updates(
                 buffers[int(c)] = sorted_log[lo:hi]
 
     if cost is not None and n:
+        # timeline metadata (hwmodel.TimelineTag): the batch size and its
+        # commit-id span drive the commit-to-visibility freshness metric
+        # and the async release time (core/timeline.py) — `merged` is
+        # commit-ordered, so the span is its first/last entry
+        cost.annotate(n_updates=int(n),
+                      cid_lo=int(merged["commit_id"][0]),
+                      cid_hi=int(merged["commit_id"][-1]))
         log_bytes = n * LOG_ENTRY_BYTES
         if on_pim:
             # Merge unit streams entries from DRAM through FIFO queues.

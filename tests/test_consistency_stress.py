@@ -1,0 +1,140 @@
+"""Randomized ConsistencyManager stress test (§6 invariants).
+
+A seeded random walk interleaves begin_query / end_query / on_update /
+on_update_shards arbitrarily and checks, after every step, the snapshot-
+chain invariants the consistency contract rests on:
+
+* a version with readers is never GC'd (pinned versions stay reachable in
+  their chain),
+* the chain head is never dropped once a snapshot exists,
+* reader counts never go negative,
+* pinned reads stay frozen (a handle's decoded column never changes while
+  updates land), and
+* once every handle closes, `chain_lengths()` returns to exactly 1 per
+  column (the head survives, everything else is collected).
+"""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core.application import apply_updates, apply_updates_shards
+from repro.core.backend import ShardedBackend, get_backend
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import DSMReplica, decode_column
+from repro.core.nsm import make_entries
+
+N_ROWS, N_COLS = 60, 3
+
+
+def _updates(rng, cons, col, commit_ids, allow_insert=True):
+    m = int(rng.integers(1, 12))
+    n_rows = cons.replica.columns[col].n_rows
+    ops = rng.choice([1, 1, 1, 3] + ([2] if allow_insert else []), size=m)
+    rows = rng.integers(0, n_rows, size=m).astype(np.int64)
+    rows[ops == 2] = n_rows + np.arange(int((ops == 2).sum()))  # appends
+    return make_entries(
+        np.array([next(commit_ids) for _ in range(m)], dtype=np.int64),
+        ops.astype(np.int8),
+        rng.integers(0, 1 << 20, size=m).astype(np.int32),
+        rows,
+        np.full(m, col, dtype=np.int32))
+
+
+def _check_invariants(cons, handles):
+    for c, chain in cons.chains.items():
+        if chain.versions:
+            assert chain.head is not None  # head never dropped
+        for v in chain.versions:
+            assert v.readers >= 0, f"negative readers on col {c}"
+        ids = [v.version_id for v in chain.versions]
+        assert ids == sorted(ids)  # chain stays version-ordered
+    for h, pinned in handles.items():
+        for c, (version, frozen) in pinned.items():
+            # pinned versions are never GC'd out of their chain
+            assert version in cons.chains[c].versions, \
+                f"pinned version GC'd (handle {h}, col {c})"
+            assert version.readers >= 1
+
+
+def _stress(backend_spec, seed, n_steps=60):
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 500, size=(N_ROWS, N_COLS)).astype(np.int32)
+    replica = DSMReplica.from_table(table)
+    be = get_backend(backend_spec)
+    cons = ConsistencyManager(replica, on_pim=True, backend=be)
+    sharded = isinstance(be, ShardedBackend) and be.n_shards > 1
+    commit_ids = itertools.count()
+    handles = {}  # handle -> {col: (version, frozen decoded values)}
+
+    for step in range(n_steps):
+        op = rng.choice(["begin", "end", "update", "update"])
+        if op == "begin" or (op == "end" and not handles):
+            cols = sorted(rng.choice(N_COLS,
+                                     size=int(rng.integers(1, N_COLS + 1)),
+                                     replace=False).tolist())
+            h = cons.begin_query(cols)
+            handles[h] = {
+                c: (cons._handles[h][c],
+                    np.asarray(decode_column(cons.read(h, c))).copy())
+                for c in cols}
+        elif op == "end":
+            h = int(rng.choice(sorted(handles)))
+            for c, (version, frozen) in handles[h].items():
+                np.testing.assert_array_equal(
+                    np.asarray(decode_column(cons.read(h, c))), frozen,
+                    err_msg=f"pinned read changed (handle {h}, col {c})")
+            cons.end_query(h)
+            del handles[h]
+        else:
+            col = int(rng.integers(0, N_COLS))
+            ups = _updates(rng, cons, col, commit_ids)
+            old = cons.replica.columns[col]
+            if sharded and rng.random() < 0.5:
+                cons.on_update_shards(
+                    col, apply_updates_shards(old, ups, backend=be))
+            else:
+                cons.on_update(col, apply_updates(old, ups, backend=be))
+        _check_invariants(cons, handles)
+
+    for h in sorted(handles):
+        cons.end_query(h)
+    _check_invariants(cons, {})
+    # one final query pins (and lazily creates) a head for every column ...
+    h = cons.begin_query(list(range(N_COLS)))
+    cons.end_query(h)
+    # ... after which each chain must collapse back to exactly its head
+    assert cons.chain_lengths() == {c: 1 for c in range(N_COLS)}
+
+
+@pytest.mark.parametrize("backend_spec", ["numpy", "numpy@2", "numpy@4"])
+def test_consistency_stress(backend_spec):
+    _stress(backend_spec, seed=0)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend_spec", ["numpy", "numpy@2", "numpy@4"])
+@pytest.mark.parametrize("seed", [1, 2, 3, 4])
+def test_consistency_stress_long(backend_spec, seed):
+    _stress(backend_spec, seed, n_steps=400)
+
+
+def test_partial_shard_swap_rejected_mid_stress():
+    """All-or-none Phase-2: a partial shard set must not corrupt chains."""
+    rng = np.random.default_rng(7)
+    table = rng.integers(0, 500, size=(N_ROWS, N_COLS)).astype(np.int32)
+    replica = DSMReplica.from_table(table)
+    be = get_backend("numpy@2")
+    cons = ConsistencyManager(replica, backend=be)
+    h = cons.begin_query([0])
+    before = np.asarray(decode_column(cons.read(h, 0))).copy()
+    ups = _updates(rng, cons, 0, itertools.count(), allow_insert=False)
+    shards = apply_updates_shards(replica.columns[0], ups, backend=be)
+    with pytest.raises(ValueError, match="partial shard set"):
+        cons.on_update_shards(0, shards[:1])
+    # replica untouched, pinned read unchanged, invariants hold
+    np.testing.assert_array_equal(
+        np.asarray(decode_column(cons.read(h, 0))), before)
+    _check_invariants(cons, {0: {0: (cons._handles[h][0], before)}})
+    cons.end_query(h)

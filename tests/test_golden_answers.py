@@ -1,0 +1,94 @@
+"""Golden-answer fixture: committed query answers for all six drivers.
+
+The cross-backend/cross-shard equality tests compare runs against each
+other, so a *systemic* answer drift (all combos shifting together through a
+shared engine bug) would sail through them and only trip the CI bench
+gate's checksum later. This tier-1 fixture pins the actual answers of
+every driver on the standard seed workload; regenerate deliberately with
+
+    PYTHONPATH=src python tests/test_golden_answers.py
+
+whenever the workload or the query semantics intentionally change.
+"""
+
+import json
+import pathlib
+
+import pytest
+
+from repro.core import htap
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_answers.json"
+
+
+def _golden():
+    with open(GOLDEN_PATH) as f:
+        return json.load(f)
+
+
+@pytest.mark.parametrize("name", sorted(htap.ALL_SYSTEMS))
+def test_driver_matches_golden_answers(small_workload, name):
+    """Runs under the session-default backend (numpy locally; the CI matrix
+    repeats the suite with REPRO_BACKEND=pallas), so a silent answer drift
+    on either backend fails here before the bench gate sees it."""
+    table, stream, queries = small_workload
+    golden = _golden()["results"][name]
+    res = htap.ALL_SYSTEMS[name](table, stream, queries)
+    assert [int(a) for a in res.results] == golden
+
+
+def test_ana_only_matches_golden_answers(small_workload):
+    table, stream, queries = small_workload
+    golden = _golden()["results"]["Ana-Only"]
+    res = htap.run_ana_only(table, queries)
+    assert [int(a) for a in res.results] == golden
+
+
+def test_golden_fixture_shape():
+    golden = _golden()
+    assert set(golden["results"]) == set(htap.ALL_SYSTEMS) | {"Ana-Only"}
+    n = {len(v) for v in golden["results"].values()}
+    assert n == {12}, "every driver answers the 12 standard queries"
+    # the three legitimate consistency points: round-end (SI-SS + the MI
+    # family), round-start (SI-MVCC) and the initial table (Ana-Only)
+    vectors = {name: tuple(v) for name, v in golden["results"].items()}
+    assert vectors["SI-SS"] == vectors["MI+SW"] == vectors["MI+SW+HB"] \
+        == vectors["PIM-Only"] == vectors["Polynesia"]
+    assert vectors["SI-MVCC"] != vectors["SI-SS"]
+    assert len(set(vectors.values())) == 3
+
+
+def _regenerate() -> None:
+    import numpy as np
+
+    from repro.core import engine, schema
+    from tests.conftest import (SMALL_COLS, SMALL_QUERIES, SMALL_ROWS,
+                                SMALL_TXNS)
+
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", SMALL_COLS, 32)
+    table = schema.gen_table(rng, sch, SMALL_ROWS)
+    stream = schema.gen_update_stream(rng, sch, SMALL_ROWS, SMALL_TXNS,
+                                      write_ratio=0.5)
+    queries = engine.gen_queries(rng, SMALL_QUERIES, SMALL_COLS)
+    golden = {
+        "workload": "conftest small_workload (seed 0): 4000 rows x 4 cols, "
+                    "8000 txn, 12 queries, default driver args (n_rounds=8)",
+        "results": {
+            name: [int(a) for a in
+                   fn(table, stream, queries,
+                      backend="numpy", n_shards=1).results]
+            for name, fn in htap.ALL_SYSTEMS.items()
+        },
+    }
+    golden["results"]["Ana-Only"] = [
+        int(a) for a in htap.run_ana_only(table, queries,
+                                          backend="numpy").results]
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(golden, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"regenerated {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    _regenerate()

@@ -1,0 +1,150 @@
+"""Property suite for scheduler.simulate (§7.2) — previously example-only.
+
+Properties (hypothesis where installed, plus a seeded fallback sweep so the
+tier-1 container exercises them too):
+
+* work conservation — every task runs exactly once: with no steal penalty
+  ``sum(busy)`` equals the task durations exactly; with penalties it is
+  bounded by durations x the applied steal penalties,
+* makespan lower bounds — ``makespan >= max(task.seconds_local)`` and
+  ``>= sum(durations) / n_workers``,
+* stealing — with unit steal penalties a work-conserving pool can only
+  help (``pull_steal`` makespan <= ``pull``); with the default penalties
+  stealing trades locality for balance, so the guarantee weakens to the
+  remote-penalty factor (that trade-off is the point of §7.2's
+  group-first stealing order).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.hwmodel import HMC_PARAMS
+from repro.core.placement import hybrid
+from repro.core.scheduler import Task, simulate
+
+PLACEMENT = hybrid(16)
+N_WORKERS = PLACEMENT.n_vaults * HMC_PARAMS.pim_cores_per_vault
+GROUP_PENALTY = 1.15
+REMOTE_PENALTY = 2.0
+
+
+def _tasks(vaults, durations):
+    return [Task(i, 0, int(v) // PLACEMENT.vaults_per_group, int(v), float(d))
+            for i, (v, d) in enumerate(zip(vaults, durations))]
+
+
+def _check_properties(tasks):
+    total = sum(t.seconds_local for t in tasks)
+    longest = max(t.seconds_local for t in tasks)
+
+    pull = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="pull")
+    # work conservation, exact: pull never steals, so no penalties apply
+    assert np.isclose(sum(pull.busy), total, rtol=1e-9)
+    assert pull.stolen_group == pull.stolen_remote == 0
+    assert pull.makespan >= longest * (1 - 1e-12)
+    assert pull.makespan >= total / N_WORKERS * (1 - 1e-12)
+
+    steal = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="pull_steal")
+    # work conservation, bounded: each stolen task pays its steal penalty
+    assert sum(steal.busy) >= total * (1 - 1e-9)
+    assert sum(steal.busy) <= total * REMOTE_PENALTY * (1 + 1e-9)
+    n_stolen = steal.stolen_group + steal.stolen_remote
+    assert sum(steal.busy) <= (
+        total + (GROUP_PENALTY - 1.0) * steal.stolen_group * longest
+        + (REMOTE_PENALTY - 1.0) * steal.stolen_remote * longest) * (1 + 1e-9)
+    assert n_stolen <= len(tasks)
+    assert steal.makespan >= longest * (1 - 1e-12)
+    assert steal.makespan >= total / N_WORKERS * (1 - 1e-12)
+    # bounded loss vs pull under the default (lossy) steal penalties
+    assert steal.makespan <= pull.makespan * REMOTE_PENALTY * (1 + 1e-9)
+
+    # with unit penalties stealing is pure work conservation: never worse
+    free = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="pull_steal",
+                    group_steal_penalty=1.0, remote_steal_penalty=1.0)
+    assert np.isclose(sum(free.busy), total, rtol=1e-9)
+    assert free.makespan <= pull.makespan * (1 + 1e-9)
+
+    static = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="static_push")
+    # the basic heuristic also conserves work (overhead is extra time, not
+    # extra busy) and cannot beat the per-task lower bound
+    assert np.isclose(sum(static.busy), total, rtol=1e-9)
+    assert static.makespan >= longest * (1 - 1e-12)
+
+
+def test_properties_seeded_sweep():
+    """Deterministic sweep usable without hypothesis (tier-1 container)."""
+    for seed in range(40):
+        rng = np.random.default_rng(seed)
+        n = int(rng.integers(1, 120))
+        vaults = rng.integers(0, PLACEMENT.n_vaults, n)
+        durations = rng.uniform(1e-7, 1e-3, n)
+        _check_properties(_tasks(vaults, durations))
+
+
+def test_single_task_runs_alone():
+    # vault 0: its own worker pops first (heap is worker-id ordered at t=0),
+    # so the task runs locally, un-stolen, in exactly its local duration
+    res = simulate(_tasks([0], [1e-4]), PLACEMENT, HMC_PARAMS,
+                   policy="pull_steal")
+    assert np.isclose(res.makespan, 1e-4)
+    assert np.isclose(sum(res.busy), 1e-4)
+    assert res.stolen_group == res.stolen_remote == 0
+    # off-vault-0 the idle workers win the race and steal it at t=0 — the
+    # penalty is the whole makespan (eager work conservation, §7.2)
+    res3 = simulate(_tasks([3], [1e-4]), PLACEMENT, HMC_PARAMS,
+                    policy="pull_steal")
+    assert np.isclose(res3.makespan, 1e-4 * GROUP_PENALTY)
+    assert res3.stolen_group == 1
+
+
+def test_empty_task_set():
+    for policy in ("pull", "pull_steal", "static_push"):
+        res = simulate([], PLACEMENT, HMC_PARAMS, policy=policy)
+        assert res.makespan == 0.0
+        assert sum(res.busy) == 0.0
+
+
+def test_property_hypothesis():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.lists(
+        st.tuples(st.integers(0, PLACEMENT.n_vaults - 1),
+                  st.floats(1e-7, 1e-2, allow_nan=False,
+                            allow_infinity=False)),
+        min_size=1, max_size=150))
+    def prop(pairs):
+        vaults = [v for v, _ in pairs]
+        durations = [d for _, d in pairs]
+        _check_properties(_tasks(vaults, durations))
+
+    prop()
+
+
+def test_property_hypothesis_skewed_single_vault():
+    """All work in one vault — the steal-friendly §9.4 skew case: a
+    work-conserving pool with unit penalties must match the balanced
+    lower-bound regime, and stealing must actually occur."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=30, deadline=None)
+    @given(st.lists(st.floats(1e-6, 1e-3, allow_nan=False,
+                              allow_infinity=False),
+                    min_size=HMC_PARAMS.pim_cores_per_vault + 1,
+                    max_size=200))
+    def prop(durations):
+        tasks = _tasks([0] * len(durations), durations)
+        pull = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="pull")
+        steal = simulate(tasks, PLACEMENT, HMC_PARAMS, policy="pull_steal",
+                         group_steal_penalty=1.0, remote_steal_penalty=1.0)
+        assert steal.stolen_group + steal.stolen_remote > 0
+        assert steal.makespan <= pull.makespan * (1 + 1e-9)
+        _check_properties(tasks)
+
+    prop()

@@ -1,0 +1,239 @@
+"""Discrete-event timeline cost model (core/timeline.py).
+
+The timing selector is *pricing only*: every driver must produce
+bit-identical query answers under timing="timeline" (sync and async) and
+timing="phase", for every backend and shard count — only txn/ana seconds,
+utilization and the freshness metric change. Plus the async-propagation
+contract: overlap can only help, and data freshness degrades as the final
+log (ship batch) capacity grows.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import htap
+from repro.core.hwmodel import CostLog, HardwareModel, HMC_PARAMS
+from repro.core.timeline import (TIMINGS, default_timing, resolve_timing,
+                                 set_default_timing, simulate_timeline)
+
+
+def _tiny_workload(n_rows=1000, n_cols=3, n_txn=2000, n_queries=6):
+    from repro.core import engine, schema
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", n_cols, 32)
+    table = schema.gen_table(rng, sch, n_rows)
+    stream = schema.gen_update_stream(rng, sch, n_rows, n_txn,
+                                      write_ratio=0.5)
+    queries = engine.gen_queries(rng, n_queries, n_cols)
+    return table, stream, queries
+
+
+def _run(fn, table, stream, queries, **kw):
+    if fn is htap.run_ideal_txn:
+        return fn(table, stream, **kw)
+    if fn is htap.run_ana_only:
+        return fn(table, queries, **kw)
+    return fn(table, stream, queries, **kw)
+
+
+ALL_DRIVERS = dict(htap.ALL_SYSTEMS,
+                   **{"Ideal-Txn": htap.run_ideal_txn,
+                      "Ana-Only": htap.run_ana_only})
+
+
+# ---------------------------------------------------------------------------
+# bit-identical answers across timing models
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [1, 4])
+@pytest.mark.parametrize("name", sorted(ALL_DRIVERS))
+def test_timeline_answers_bit_identical(small_workload, name, n_shards):
+    """timing="timeline" (sync + async where supported) answers == phase
+    answers, on the session-default backend (the CI matrix runs this under
+    both numpy and pallas via REPRO_BACKEND) x shards {1, 4}."""
+    table, stream, queries = small_workload
+    fn = ALL_DRIVERS[name]
+    phase = _run(fn, table, stream, queries, n_shards=n_shards,
+                 timing="phase")
+    tl = _run(fn, table, stream, queries, n_shards=n_shards,
+              timing="timeline")
+    assert tl.results == phase.results
+    assert tl.n_txn == phase.n_txn and tl.n_ana == phase.n_ana
+    assert tl.energy_joules == phase.energy_joules  # energy is timing-free
+    if fn is htap.run_multi_instance or name in ("MI+SW", "MI+SW+HB",
+                                                 "PIM-Only", "Polynesia"):
+        asy = _run(fn, table, stream, queries, n_shards=n_shards,
+                   timing="timeline", async_propagation=True)
+        assert asy.results == phase.results
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("n_shards", [1, 4])
+def test_timeline_answers_all_backends_slow(small_workload, backend,
+                                            n_shards):
+    """Explicit {numpy, pallas} x shards {1, 4} sweep over all drivers
+    (the weekly job; tier-1 covers the same matrix through REPRO_BACKEND)."""
+    table, stream, queries = small_workload
+    for name, fn in ALL_DRIVERS.items():
+        phase = _run(fn, table, stream, queries, backend=backend,
+                     n_shards=n_shards, timing="phase")
+        tl = _run(fn, table, stream, queries, backend=backend,
+                  n_shards=n_shards, timing="timeline")
+        assert tl.results == phase.results, name
+
+
+# ---------------------------------------------------------------------------
+# overlap + async-propagation contract (Polynesia)
+# ---------------------------------------------------------------------------
+
+def test_timeline_total_le_phase_sum(small_workload):
+    """Round-by-round overlap can only help: the timeline makespan never
+    exceeds the fully-serial phase sum (txn + ana + accel buckets)."""
+    table, stream, queries = small_workload
+    phase = htap.run_polynesia(table, stream, queries, timing="phase")
+    tl = htap.run_polynesia(table, stream, queries, timing="timeline")
+    phase_sum = (phase.txn_seconds + phase.ana_seconds
+                 + phase.stats["accel_seconds"])
+    makespan = tl.stats["timeline"]["makespan"]
+    assert makespan <= phase_sum * (1 + 1e-9)
+    assert makespan >= max(tl.stats["timeline"]["lane_busy"].values())
+
+
+def test_async_beats_sync_txn_throughput(small_workload):
+    table, stream, queries = small_workload
+    sync = htap.run_polynesia(table, stream, queries, timing="timeline")
+    asy = htap.run_polynesia(table, stream, queries, timing="timeline",
+                             async_propagation=True)
+    assert asy.results == sync.results
+    assert asy.txn_throughput >= sync.txn_throughput
+    # async must not fabricate time: makespan stays within the sync one
+    assert (asy.stats["timeline"]["makespan"]
+            <= sync.stats["timeline"]["makespan"] * (1 + 1e-9))
+
+
+def test_async_freshness_finite_positive(small_workload):
+    table, stream, queries = small_workload
+    asy = htap.run_polynesia(table, stream, queries, timing="timeline",
+                             async_propagation=True)
+    f = asy.freshness_seconds
+    assert f is not None and f["n_batches"] > 0
+    assert np.isfinite(f["mean"]) and f["mean"] > 0.0
+    assert np.isfinite(f["max"]) and f["max"] >= f["mean"]
+
+
+def test_freshness_grows_with_final_log_capacity(small_workload,
+                                                 monkeypatch):
+    """Bigger final log -> fewer, larger ship batches -> updates wait
+    longer for their batch to fill -> staler visible data."""
+    table, stream, queries = small_workload
+    means = []
+    answers = None
+    for cap in (64, 256, 1024):
+        monkeypatch.setattr(htap, "FINAL_LOG_CAPACITY", cap)
+        r = htap.run_polynesia(table, stream, queries, timing="timeline",
+                               async_propagation=True)
+        if answers is None:
+            answers = r.results
+        # batching granularity never changes answers
+        assert r.results == answers
+        means.append(r.freshness_seconds["mean"])
+    assert means[0] < means[1] < means[2]
+
+
+def test_phase_timing_reports_no_freshness(small_workload):
+    table, stream, queries = small_workload
+    r = htap.run_polynesia(table, stream, queries, timing="phase")
+    assert r.freshness_seconds is None
+    assert "timeline" not in r.stats
+
+
+def test_utilization_reported_per_lane(small_workload):
+    table, stream, queries = small_workload
+    r = htap.run_polynesia(table, stream, queries, timing="timeline")
+    util = r.stats["timeline"]["utilization"]
+    assert set(util) >= {"txn", "ana", "accel"}
+    for lane, u in util.items():
+        assert 0.0 <= u <= 1.0 + 1e-9, lane
+
+
+# ---------------------------------------------------------------------------
+# timing selection and guard rails
+# ---------------------------------------------------------------------------
+
+def test_resolve_timing_env_and_default(monkeypatch):
+    assert resolve_timing("phase") == "phase"
+    assert resolve_timing("timeline") == "timeline"
+    monkeypatch.setenv("REPRO_TIMING", "timeline")
+    assert resolve_timing(None) == "timeline"
+    monkeypatch.setenv("REPRO_TIMING", "bogus")
+    with pytest.raises(ValueError):
+        resolve_timing(None)
+    with pytest.raises(ValueError):
+        resolve_timing("bogus")
+    monkeypatch.delenv("REPRO_TIMING")
+    set_default_timing("timeline")
+    try:
+        assert default_timing() == "timeline"
+        with pytest.raises(ValueError):
+            set_default_timing("nope")
+    finally:
+        import repro.core.timeline as tlmod
+        tlmod._default_timing = None
+    assert default_timing() in TIMINGS
+
+
+def test_async_requires_timeline(small_workload):
+    table, stream, queries = small_workload
+    with pytest.raises(ValueError, match="timeline"):
+        htap.run_polynesia(table, stream, queries, timing="phase",
+                           async_propagation=True)
+
+
+def test_partially_tagged_log_rejected():
+    cost = CostLog()
+    with cost.tagged("r0:txn", "txn", round=0):
+        cost.add(phase="txn", island="txn", resource="cpu", cycles=1e6)
+    cost.add(phase="ana", island="ana", resource="cpu", cycles=1e6)  # untagged
+    with pytest.raises(ValueError, match="untagged"):
+        simulate_timeline(cost, HardwareModel(HMC_PARAMS))
+
+
+def test_duplicate_node_rejected():
+    cost = CostLog()
+    with cost.tagged("n0", "txn"):
+        pass
+    with pytest.raises(ValueError, match="duplicate"):
+        with cost.tagged("n0", "txn"):
+            pass
+
+
+# ---------------------------------------------------------------------------
+# final-log drain limit (nsm.RowStore.drain_logs)
+# ---------------------------------------------------------------------------
+
+def test_drain_logs_limit_preserves_commit_order():
+    from repro.core import schema
+    from repro.core.nsm import RowStore
+    rng = np.random.default_rng(1)
+    sch = schema.make_schema("t", 3, 32)
+    table = schema.gen_table(rng, sch, 100)
+    stream = schema.gen_update_stream(rng, sch, 100, 500, write_ratio=1.0)
+    store = RowStore(table)
+    store.execute(stream)
+    total = store.pending_updates
+    seen = []
+    while store.pending_updates:
+        logs = store.drain_logs(limit=64)
+        batch = np.concatenate([l for l in logs if len(l)])
+        assert len(batch) <= 64
+        seen.append(batch)
+    cat = np.concatenate(seen)
+    assert len(cat) == total
+    # global commit order across batches: every batch's ids precede the next's
+    order = np.sort(cat["commit_id"])
+    np.testing.assert_array_equal(order, np.sort(stream.commit_id))
+    hi = -1
+    for b in seen:
+        assert int(b["commit_id"].min()) > hi
+        hi = int(b["commit_id"].max())

@@ -5,10 +5,11 @@ Usage: python tools/check_bench.py BENCH_ci.json benchmarks/baseline.json \
            [--tolerance 0.15]
 
 Both files are written by ``python -m benchmarks.run ci --json=...``. The
-gate fails (exit 1) when any tracked throughput metric (txn_tps, ana_qps)
-of any baseline combo regresses by more than ``tolerance`` relative to the
-checked-in baseline, or when a baseline combo is missing from the current
-run. Throughputs come from the analytic hardware model over a fixed seeded
+gate fails (exit 1) when any tracked metric of any baseline combo
+regresses by more than ``tolerance`` relative to the checked-in baseline —
+throughputs (txn_tps, ana_qps) must not drop, freshness lags
+(freshness_mean_s, freshness_max_s; lower is better) must not rise — or
+when a baseline combo is missing from the current run. Throughputs come from the analytic hardware model over a fixed seeded
 workload, so they are deterministic and machine-independent — the
 tolerance only absorbs intentional-but-small cost-model drift; anything
 larger must ship with a regenerated baseline
@@ -21,7 +22,11 @@ import argparse
 import json
 import sys
 
+# higher is better: a drop below baseline x (1 - tolerance) fails
 METRICS = ("txn_tps", "ana_qps")
+# lower is better (commit-to-visibility lag): a rise above
+# baseline x (1 + tolerance) fails
+METRICS_LOWER_BETTER = ("freshness_mean_s", "freshness_max_s")
 
 
 def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -45,7 +50,8 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
         if combo not in cur:
             failures.append(f"{combo}: missing from current run")
             continue
-        for metric in METRICS:
+        for metric in METRICS + METRICS_LOWER_BETTER:
+            lower_better = metric in METRICS_LOWER_BETTER
             b = base[combo].get(metric)
             c = cur[combo].get(metric)
             if b is None:
@@ -53,13 +59,20 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
             if c is None:
                 failures.append(f"{combo}.{metric}: missing from current run")
                 continue
-            floor = b * (1.0 - tolerance)
-            status = "FAIL" if c < floor else "ok"
-            print(f"  {combo:12s} {metric:8s} baseline={b:.6e} "
+            if lower_better:
+                ceiling = b * (1.0 + tolerance)
+                failed = c > ceiling
+                bound = f"> {ceiling:.6e}"
+            else:
+                floor = b * (1.0 - tolerance)
+                failed = c < floor
+                bound = f"< {floor:.6e}"
+            status = "FAIL" if failed else "ok"
+            print(f"  {combo:12s} {metric:16s} baseline={b:.6e} "
                   f"current={c:.6e} ({(c / b - 1.0) * 100:+.2f}%) {status}")
-            if c < floor:
+            if failed:
                 failures.append(
-                    f"{combo}.{metric}: {c:.6e} < {floor:.6e} "
+                    f"{combo}.{metric}: {c:.6e} {bound} "
                     f"(baseline {b:.6e}, tolerance {tolerance:.0%})")
     for combo in sorted(set(cur) - set(base)):
         print(f"  {combo:12s} (new combo, not in baseline — not gated)")

@@ -57,13 +57,23 @@ def ci_bench(json_path: str) -> None:
 
     metrics = {}
     answers = None
-    wall_us = {}
     for label, kwargs in CI_MATRIX:
         table, stream, queries = ci_workload()
+        # cold pass: counts kernel dispatches (and takes the jit compiles)
+        from repro.core.backend import counting_kernel_calls
+        with counting_kernel_calls() as counts:
+            res = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                                     **kwargs)
+        # warm pass: the measured wall-clock column. Compile caches are
+        # hot, so this is steady-state execution time — stable enough for
+        # the (still generous, 30%) gate in tools/check_bench.py.
         t0 = time.perf_counter()
-        res = htap.run_polynesia(table, stream, queries, n_rounds=4,
-                                 **kwargs)
-        wall_us[label] = (time.perf_counter() - t0) * 1e6
+        res2 = htap.run_polynesia(table, stream, queries, n_rounds=4,
+                                  **kwargs)
+        wall_s = time.perf_counter() - t0
+        if res2.results != res.results:
+            sys.exit(f"CI bench: {label} warm-run answers diverged — "
+                     "nondeterministic execution")
         if answers is None:
             answers = res.results
         elif answers != res.results:
@@ -72,6 +82,13 @@ def ci_bench(json_path: str) -> None:
         metrics[label] = {
             "txn_tps": res.txn_throughput,
             "ana_qps": res.ana_throughput,
+            # measured wall clock (interpret mode off-TPU): the column that
+            # shows whether the sharded snapshot plane actually pays off,
+            # next to the modeled throughputs
+            "wall_s": wall_s,
+            # total kernel-dispatch count; the gate asserts pallas@4 does
+            # not launch more than pallas@1 (one vmapped launch per group)
+            "kernel_launches": sum(counts.values()),
         }
         if res.freshness_seconds:
             metrics[label]["freshness_mean_s"] = res.freshness_seconds["mean"]
@@ -87,8 +104,9 @@ def ci_bench(json_path: str) -> None:
         f.write("\n")
     print(f"# wrote {json_path}")
     for combo, m in sorted(metrics.items()):
-        print(f"ci_{combo},{wall_us[combo]:.1f},"
-              f"txn_tps={m['txn_tps']:.6e};ana_qps={m['ana_qps']:.6e}")
+        print(f"ci_{combo},{m['wall_s'] * 1e6:.1f},"
+              f"txn_tps={m['txn_tps']:.6e};ana_qps={m['ana_qps']:.6e};"
+              f"launches={m['kernel_launches']}")
 
 
 def main() -> None:

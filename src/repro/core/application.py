@@ -51,13 +51,29 @@ def _split_ops(updates: np.ndarray):
     return mods, ins, dels
 
 
+def _sorted_write_ops(mods: np.ndarray, ins: np.ndarray) -> np.ndarray:
+    """Modify+insert entries in commit order — the scatter order of the
+    Phase-1 write set (shared by the direct and pre-encoded paths so the
+    two can never drift apart)."""
+    write_ops = np.concatenate([mods, ins]) if len(ins) else mods
+    if len(write_ops):
+        order = np.argsort(write_ops["commit_id"], kind="stable")
+        write_ops = write_ops[order]
+    return write_ops
+
+
 def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
                    mods: np.ndarray, ins: np.ndarray, dels: np.ndarray,
-                   encode=None):
+                   encode=None, write_set=None):
     """Scatter modify/insert/delete row ops in commit order (vectorized).
 
     `encode` maps update values to their codes in `new_dict` (§5.2's hash
     unit on the accelerator backend); defaults to binary search.
+    `write_set`, when given, is a ``(write_ops, write_codes)`` pair: the
+    commit-ordered write set (`_sorted_write_ops(mods, ins)`) together
+    with its pre-encoded codes — the sharded path batches all islands'
+    encodes into one probe launch and hands each island its pair here, so
+    the scatter order and the codes come from the same materialization.
     """
     if encode is None:
         encode = lambda v: np.searchsorted(new_dict, v)
@@ -69,11 +85,13 @@ def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
             pad = top - len(codes)
             codes = np.concatenate([codes, np.zeros(pad, dtype=codes.dtype)])
             valid = np.concatenate([valid, np.zeros(pad, dtype=bool)])
-    write_ops = np.concatenate([mods, ins]) if len(ins) else mods
+    if write_set is not None:
+        write_ops, write_codes = write_set
+    else:
+        write_ops, write_codes = _sorted_write_ops(mods, ins), None
     if len(write_ops):
-        order = np.argsort(write_ops["commit_id"], kind="stable")
-        write_ops = write_ops[order]
-        new_codes_for_writes = encode(write_ops["value"])
+        new_codes_for_writes = (write_codes if write_codes is not None
+                                else encode(write_ops["value"]))
         codes[write_ops["row"]] = new_codes_for_writes.astype(codes.dtype)
         valid[write_ops["row"]] = True
     if len(dels):
@@ -239,11 +257,14 @@ def apply_updates_shards(
         inner, old_dict, write_vals)
 
     # Stage 3 per island: route row ops to owning shards over the
-    # post-insert row span (inserts extend the last shard).
+    # post-insert row span (inserts extend the last shard). Each island's
+    # write set is materialized first so the value->code encodes of ALL
+    # islands ride one batched probe launch (encode_values_shards — the
+    # hash unit's leading-shard-axis path) instead of one probe per island.
     n_new = max(n, int(ins["row"].max()) + 1) if len(ins) else n
     bounds = shard_bounds(n_new, be.n_shards)
     owner = route_updates(updates, bounds)
-    codes_parts, valid_parts = [], []
+    island_ops = []
     for s in range(be.n_shards):
         lo, hi = bounds[s], bounds[s + 1]
         src_lo, src_hi = min(lo, n), min(hi, n)
@@ -256,8 +277,16 @@ def apply_updates_shards(
         ups_s = updates[owner == s]
         ups_s["row"] = ups_s["row"] - lo  # island-local row ids
         m_s, i_s, d_s = _split_ops(ups_s)
+        w_s = _sorted_write_ops(m_s, i_s)
+        island_ops.append((codes_s, valid_s, m_s, i_s, d_s, w_s))
+    write_codes = inner.encode_values_shards(
+        encode, [w["value"] for *_, w in island_ops])
+    codes_parts, valid_parts = [], []
+    for (codes_s, valid_s, m_s, i_s, d_s, w_s), wc in zip(island_ops,
+                                                          write_codes):
         codes_s, valid_s = _apply_row_ops(codes_s, valid_s, new_dict,
-                                          m_s, i_s, d_s, encode=encode)
+                                          m_s, i_s, d_s, encode=encode,
+                                          write_set=(w_s, wc))
         codes_parts.append(codes_s)
         valid_parts.append(valid_s)
 

@@ -24,7 +24,8 @@ import dataclasses
 import itertools
 
 from repro.core.backend import get_backend
-from repro.core.dsm import DSMReplica, EncodedColumn, concat_columns
+from repro.core.dsm import (DSMReplica, EncodedColumn, ShardedView,
+                            concat_columns)
 from repro.core.hwmodel import CostLog
 from repro.core.schema import VALUE_BYTES
 
@@ -34,6 +35,17 @@ class _Version:
     version_id: int
     column: EncodedColumn
     readers: int = 0
+    # The sharded snapshot plane: islands' resident shards of this
+    # version, materialized once at first pinned read (`read_scan`) and
+    # reused by every query group pinning the same version. Invalidated —
+    # a hard StaleShardedViewError for any later use — when the version is
+    # garbage-collected or swapped out unpinned (see on_update).
+    view: ShardedView | None = None
+
+    def drop_view(self, reason: str) -> None:
+        if self.view is not None:
+            self.view.invalidate(reason)
+            self.view = None
 
 
 class SnapshotChain:
@@ -57,6 +69,8 @@ class SnapshotChain:
                 keep.insert(-1 if keep else 0, v)
             else:
                 freed += 1
+                v.drop_view(f"snapshot {v.version_id} of column "
+                            f"{self.col_id} was garbage-collected")
         keep.sort(key=lambda v: v.version_id)
         self.versions = keep
         return freed
@@ -77,12 +91,26 @@ class ConsistencyManager:
         self._handle_ids = itertools.count()
         self.snapshots_created = 0
         self.snapshots_shared = 0
+        self.views_built = 0
+        self.views_shared = 0
 
     # -- transactional side ----------------------------------------------
     def on_update(self, col_id: int, new_col: EncodedColumn) -> None:
-        """Phase-2 pointer swap: install the new column, mark dirty."""
+        """Phase-2 pointer swap: install the new column, mark dirty.
+
+        The swap also invalidates every *unpinned* ShardedView of this
+        column's snapshots: the next pinned read will snapshot + re-shard
+        the fresh column, and using a swapped-out view without a pin is a
+        hard StaleShardedViewError (never a silently stale cache). Views
+        still pinned by in-flight queries stay valid — that is snapshot
+        isolation — until their readers finish and GC drops the version.
+        """
         self.replica.columns[col_id] = new_col
         self.chains[col_id].dirty = True
+        for v in self.chains[col_id].versions:
+            if v.readers == 0:
+                v.drop_view(f"column {col_id} was swapped out by a Phase-2 "
+                            f"update (now at version {new_col.version})")
 
     def on_update_shards(self, col_id: int,
                          shard_cols: list[EncodedColumn]) -> None:
@@ -152,6 +180,27 @@ class ConsistencyManager:
     def read(self, handle: int, col_id: int) -> EncodedColumn:
         """Read the pinned version — O(1), no chain traversal (vs MVCC)."""
         return self._handles[handle][col_id].column
+
+    def read_scan(self, handle: int, col_id: int):
+        """Pinned read for the scan plane: shard at pin, once per round.
+
+        On a sharded backend this returns the pinned version's resident
+        `ShardedView`, materializing it on first access ("shard at pin")
+        and reusing it for every later query group that pins the same
+        snapshot version — so a round shards each column exactly once, and
+        all islands scan their resident shards in one batched launch. On
+        single-replica backends it is `read` (the plain pinned column).
+        """
+        v = self._handles[handle][col_id]
+        if getattr(self.backend, "n_shards", 1) <= 1:
+            return v.column
+        if v.view is None or v.view.stale:
+            v.view = self.backend.shard_view(v.column,
+                                             snapshot_id=v.version_id)
+            self.views_built += 1
+        else:
+            self.views_shared += 1
+        return v.view
 
     def end_query(self, handle: int) -> None:
         pinned = self._handles.pop(handle)

@@ -163,6 +163,127 @@ def concat_columns(shards: list[EncodedColumn]) -> EncodedColumn:
     )
 
 
+class StaleShardedViewError(RuntimeError):
+    """A ShardedView was used after its source column was swapped out.
+
+    The sharded snapshot plane materializes each pinned column's shards
+    once per query round; a Phase-2 pointer swap (or snapshot-chain GC)
+    invalidates any unpinned view built from the superseded column.
+    Staleness is a *hard error* — never a silently-refreshed cache — so a
+    scan can never mix rounds without the caller noticing.
+    """
+
+
+@dataclasses.dataclass
+class ShardedView:
+    """Materialized island-resident shards of one pinned column.
+
+    The paper's analytical islands each *own* a resident DSM shard (§4,
+    Fig. 5). This is that residency made explicit: the column's rows are
+    partitioned by `shard_bounds` and stacked into equal-shaped
+    ``(n_shards, width)`` arrays — `shard_bounds` produces at most two
+    shard sizes differing by one row, so every shard except the smaller
+    "tail" shards carries zero padding, and padded slots are marked
+    ``valid=False`` (they contribute the exact identity to every scan).
+    The stacked layout is what lets all islands execute in ONE batched
+    Pallas launch (kernels/dict_ops.scan_filter_agg_sharded) instead of a
+    serial per-shard loop.
+
+    Provenance is explicit: ``version`` is the source column's update
+    round and ``snapshot_id`` the consistency snapshot it was pinned from
+    (-1 for ad-hoc views). `invalidate` marks the view stale;
+    every consumer calls `require_fresh` first, so a swapped-out view is
+    a hard `StaleShardedViewError`, not a silent cache hit.
+    """
+
+    codes: jnp.ndarray        # (n_shards, width) int32, padded slots = 0
+    valid: jnp.ndarray        # (n_shards, width) bool, padded slots = False
+    dictionary: jnp.ndarray   # replicated across islands
+    bounds: tuple[int, ...]   # row partition, len n_shards + 1
+    version: int
+    snapshot_id: int = -1
+    stale_reason: str | None = None
+
+    @property
+    def n_shards(self) -> int:
+        return len(self.bounds) - 1
+
+    @property
+    def n_rows(self) -> int:
+        return self.bounds[-1]
+
+    @property
+    def width(self) -> int:
+        return int(self.codes.shape[1])
+
+    @property
+    def sizes(self) -> tuple[int, ...]:
+        return tuple(hi - lo for lo, hi in zip(self.bounds, self.bounds[1:]))
+
+    # priced by the cost model exactly like the column it mirrors
+    @property
+    def dict_size(self) -> int:
+        return int(self.dictionary.shape[0])
+
+    @property
+    def bit_width(self) -> int:
+        return max(1, math.ceil(math.log2(max(self.dict_size, 2))))
+
+    @property
+    def encoded_bytes(self) -> float:
+        return self.n_rows * self.bit_width / 8.0
+
+    @property
+    def stale(self) -> bool:
+        return self.stale_reason is not None
+
+    def invalidate(self, reason: str) -> None:
+        self.stale_reason = reason
+
+    def require_fresh(self) -> None:
+        if self.stale_reason is not None:
+            raise StaleShardedViewError(
+                f"sharded view of column version {self.version} "
+                f"(snapshot {self.snapshot_id}) is stale: "
+                f"{self.stale_reason}")
+
+    def shard(self, s: int) -> EncodedColumn:
+        """One island's resident shard as an (unpadded) EncodedColumn."""
+        self.require_fresh()
+        size = self.bounds[s + 1] - self.bounds[s]
+        return EncodedColumn(codes=self.codes[s, :size],
+                             dictionary=self.dictionary,
+                             valid=self.valid[s, :size],
+                             version=self.version)
+
+    def to_column(self) -> EncodedColumn:
+        """Reassemble the full column (row-order inverse of the shard)."""
+        return concat_columns([self.shard(s) for s in range(self.n_shards)])
+
+
+def make_sharded_view(col: EncodedColumn, n_shards: int,
+                      snapshot_id: int = -1) -> ShardedView:
+    """Shard `col` ONCE into a resident ShardedView (the pin-time copy).
+
+    This is the only place the snapshot plane moves rows: operators after
+    this consume the stacked arrays directly, so a query round shards each
+    pinned column exactly once instead of re-partitioning per operator.
+    """
+    bounds = shard_bounds(col.n_rows, n_shards)
+    sizes = [hi - lo for lo, hi in zip(bounds, bounds[1:])]
+    width = max(sizes, default=0)
+    codes = np.zeros((n_shards, width), dtype=np.int32)
+    valid = np.zeros((n_shards, width), dtype=bool)
+    src_codes = np.asarray(col.codes)
+    src_valid = np.asarray(col.valid)
+    for s, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
+        codes[s, :hi - lo] = src_codes[lo:hi]
+        valid[s, :hi - lo] = src_valid[lo:hi]
+    return ShardedView(codes=jnp.asarray(codes), valid=jnp.asarray(valid),
+                       dictionary=col.dictionary, bounds=tuple(bounds),
+                       version=col.version, snapshot_id=snapshot_id)
+
+
 @dataclasses.dataclass
 class DSMReplica:
     """The analytical island's replica: one EncodedColumn per table column."""

@@ -98,9 +98,22 @@ def hash_join_count(left: EncodedColumn, right: EncodedColumn,
     return get_backend("numpy").hash_join_count(left, right, left_mask)
 
 
+def _launch_cost(cost: CostLog, on_pim: bool, n_launches: int) -> None:
+    """Per-launch setup on the fixed-function scan path (priced by
+    `HardwareParams.launch_overhead_s`). Fused query groups charge ONE
+    launch for the whole group, and the sharded snapshot plane keeps that
+    count island-independent (all shards ride one batched launch) — this
+    is the amortization the batching buys, now visible to the model. The
+    CPU software path has no kernel launches to set up."""
+    if on_pim and n_launches:
+        cost.add(phase="ana", island="ana", resource="launch",
+                 items=float(n_launches))
+
+
 def _query_cost(cost: CostLog, fcol, acol, jcol, n_sel: int, on_pim: bool):
     """Per-query cost events — identical whether queries run alone or fused
-    (batching amortizes kernel *launches*, not the modeled scan traffic)."""
+    (batching amortizes kernel *launches* — priced separately by
+    `_launch_cost` — not the modeled scan traffic)."""
     scanned_bytes = fcol.encoded_bytes + acol.encoded_bytes
     rows = fcol.n_rows * 2
     if jcol is not None:
@@ -147,6 +160,7 @@ def run_query_dsm(
         result += be.hash_join_count(jcol, jcol, left_mask=mask)
     if cost is not None:
         _query_cost(cost, fcol, acol, jcol, n_sel, on_pim)
+        _launch_cost(cost, on_pim, 1)  # a lone query is its own launch
     return result
 
 
@@ -208,6 +222,12 @@ def run_query_group_dsm(
         if cost is not None:
             _query_cost(cost, fcol, acol, jcol, n_sel, on_pim)
         out.append(result)
+    if cost is not None:
+        # launch amortization: one fused launch answers every join-free
+        # predicate in the group (for all islands at once); each join
+        # query still runs its own mask-producing scan
+        n_join = sum(1 for q in queries if q.join_col is not None)
+        _launch_cost(cost, on_pim, (1 if no_join else 0) + n_join)
     return out
 
 

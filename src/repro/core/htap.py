@@ -188,10 +188,15 @@ def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
     timing = resolve_timing(timing)
     cost = CostLog()
     replica = DSMReplica.from_table(table)
+    view = replica.columns
+    if getattr(be, "n_shards", 1) > 1:
+        # shard the read-only replica ONCE: the islands' resident shards
+        # for the whole run (no updates ever invalidate them here)
+        view = {c: be.shard_view(col) for c, col in replica.columns.items()}
     results = []
     for i, q in enumerate(queries):
         with cost.tagged(f"q{i}:ana", "ana", round=0):
-            results.append(engine.run_query_dsm(replica.columns, q, cost,
+            results.append(engine.run_query_dsm(view, q, cost,
                                                 on_pim=False, backend=be))
     return _price("Ana-Only", cost, hw, timing, 0, len(queries), results,
                   concurrent_islands=False)
@@ -447,9 +452,13 @@ def run_multi_instance(
         # (one kernel launch per group on the accelerator backend). Every
         # query still pins its own snapshot handle, and no update lands
         # mid-round, so the group shares a single consistent view; answers
-        # are emitted in the original query order. On the timeline a group
-        # depends only on its pinned snapshot's creation node — round r+1's
-        # propagation overlaps analytics over round r.
+        # are emitted in the original query order. On island backends the
+        # pinned read is a resident ShardedView (cons.read_scan): each
+        # column is sharded once at its first pin of the round, every
+        # group reuses the same view, and all islands execute in one
+        # batched launch. On the timeline a group depends only on its
+        # pinned snapshot's creation node — round r+1's propagation
+        # overlaps analytics over round r.
         round_results: dict[int, int] = {}
         for g, group in enumerate(engine.group_queries(q_chunk)):
             cols = group[0].columns
@@ -458,7 +467,7 @@ def run_multi_instance(
                 vis_node[c] for c in cols if c in vis_node))
             with cost.tagged(snap_node, "snapshot", round=r, deps=snap_deps):
                 handles = [cons.begin_query(q.columns) for q in group]
-                view = {c: cons.read(handles[0], c) for c in cols}
+                view = {c: cons.read_scan(handles[0], c) for c in cols}
             with cost.tagged(f"r{r}:ana{g}", "ana", round=r,
                              deps=(snap_node,)):
                 answers = engine.run_query_group_dsm(
@@ -474,7 +483,9 @@ def run_multi_instance(
                   stats={"applications": applications,
                          "snapshots": cons.snapshots_created,
                          "shared": cons.snapshots_shared,
-                         "islands": getattr(be, "n_shards", 1)},
+                         "islands": getattr(be, "n_shards", 1),
+                         "sharded_views": cons.views_built,
+                         "views_shared": cons.views_shared},
                   async_propagation=async_propagation)
 
 

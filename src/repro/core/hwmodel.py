@@ -65,6 +65,12 @@ class HardwareParams:
     merge_rate: float = 1.4e9    # entries/s (comparator tree, 1 entry/cycle)
     hash_rate: float = 0.7e9     # lookups/s (4 probe units, ~2 cycles/lookup avg)
     copy_bw_frac: float = 1.0    # copy unit runs at full vault bandwidth
+    # Per-launch setup of a fixed-function scan (operator dispatch + LOB/
+    # descriptor writes). Charged once per fused query group — and once
+    # regardless of island count, because the sharded snapshot plane
+    # batches every island into the same launch — so the model reflects
+    # the amortization that query batching and shard batching actually buy.
+    launch_overhead_s: float = 1e-8
     # --- energy coefficients (J) ---
     e_offchip_byte: float = 60e-12   # off-chip DRAM access incl. channel
     e_internal_byte: float = 8e-12   # TSV/vault-local access
@@ -246,6 +252,7 @@ class HardwareModel:
             "merge": p.merge_rate * nv,
             "hash": p.hash_rate * nv,
             "copy": p.copy_bw_frac * p.internal_bw,  # bytes/s (copy-unit engines)
+            "launch": 1.0 / p.launch_overhead_s,     # kernel launches/s
         }[resource]
 
     def phase_time(self, events: list[CostEvent], offchip_share: float = 1.0,
@@ -272,7 +279,11 @@ class HardwareModel:
         islands = p.n_ana_islands if island == "ana" else 1
         for e in events:
             bytes_off += e.bytes_offchip
-            if e.resource in ("sorter", "merge", "hash"):
+            if e.resource in ("sorter", "merge", "hash", "launch"):
+                # item-counted units; "launch" is per-launch setup, charged
+                # once per fused group and NOT scaled by islands — the
+                # vmapped shard batch is one launch however many islands
+                # share it
                 local_repl += e.bytes_local
                 remote_repl += e.bytes_remote
                 by_res[e.resource] += e.items

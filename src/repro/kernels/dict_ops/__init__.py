@@ -1,1 +1,3 @@
-from repro.kernels.dict_ops.ops import scan_filter_agg, scan_filter_agg_batch
+from repro.kernels.dict_ops.ops import (scan_filter_agg,
+                                        scan_filter_agg_batch,
+                                        scan_filter_agg_sharded)

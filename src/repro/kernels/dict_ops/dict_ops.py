@@ -77,6 +77,64 @@ def scan_filter_agg_exact_kernel(fcodes, acodes, valid, dictionary, bounds,
     )(fcodes, acodes, valid, dictionary, bounds)
 
 
+def _scan_exact_sharded_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref,
+                               bounds_ref, lo_ref, hi_ref, cnt_ref, neg_ref):
+    """Leading-shard-axis variant of `_scan_exact_kernel`.
+
+    Grid step (s, i) pulls block i of island s's resident shard; all
+    islands share one launch (the vmapped execution of §4's multiple
+    analytical islands). Padding rows carry valid=0, so a padded slot
+    contributes the exact identity to every accumulator. The same
+    per-block split-16-bit accumulation keeps each int32 partial below
+    2^31; the host reassembles exact int64 per-shard totals.
+    """
+    f = fcodes_ref[0, :]                     # (block,) one shard's tile
+    a = acodes_ref[0, :]
+    valid = valid_ref[0, :]
+    b = bounds_ref[...]                      # (Q, 2) code ranges
+    lo = b[:, 0][:, None]
+    hi = b[:, 1][:, None]
+    mask = (f[None, :] >= lo) & (f[None, :] < hi) & (valid[None, :] != 0)
+    m = mask.astype(jnp.int32)               # (Q, block)
+    vals = jnp.take(dict_ref[...], a)        # decode via VMEM dictionary
+    lo16 = (vals & 0xFFFF)[None, :]
+    hi16 = ((vals >> 16) & 0xFFFF)[None, :]
+    lo_ref[0, 0, :] = jnp.sum(m * lo16, axis=1)
+    hi_ref[0, 0, :] = jnp.sum(m * hi16, axis=1)
+    cnt_ref[0, 0, :] = jnp.sum(m, axis=1)
+    neg_ref[0, 0, :] = jnp.sum(m * (vals < 0)[None, :].astype(jnp.int32),
+                               axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def scan_filter_agg_sharded_kernel(fcodes, acodes, valid, dictionary, bounds,
+                                   block: int = 4096, interpret: bool = True):
+    """One launch over (n_shards, width) stacked shards x Q fused queries."""
+    n_shards, width = fcodes.shape
+    assert width % block == 0
+    n_blocks = width // block
+    k = dictionary.shape[0]
+    q = bounds.shape[0]
+    part = jax.ShapeDtypeStruct((n_shards, n_blocks, q), jnp.int32)
+    return pl.pallas_call(
+        _scan_exact_sharded_kernel,
+        grid=(n_shards, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda s, i: (s, i)),
+            pl.BlockSpec((1, block), lambda s, i: (s, i)),
+            pl.BlockSpec((1, block), lambda s, i: (s, i)),
+            pl.BlockSpec((k,), lambda s, i: (0,)),
+            pl.BlockSpec((q, 2), lambda s, i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, 1, q), lambda s, i: (s, i, 0)),
+                   pl.BlockSpec((1, 1, q), lambda s, i: (s, i, 0)),
+                   pl.BlockSpec((1, 1, q), lambda s, i: (s, i, 0)),
+                   pl.BlockSpec((1, 1, q), lambda s, i: (s, i, 0))),
+        out_shape=(part, part, part, part),
+        interpret=interpret,
+    )(fcodes, acodes, valid, dictionary, bounds)
+
+
 def _scan_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
                  sum_ref, cnt_ref):
     @pl.when(pl.program_id(0) == 0)

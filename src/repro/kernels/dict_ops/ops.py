@@ -7,9 +7,11 @@ import numpy as np
 
 from repro.kernels.common import default_interpret, next_pow2
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
-                                             scan_filter_agg_kernel)
+                                             scan_filter_agg_kernel,
+                                             scan_filter_agg_sharded_kernel)
 from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
-                                        scan_filter_agg_ref)
+                                        scan_filter_agg_ref,
+                                        scan_filter_agg_sharded_ref)
 
 
 def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
@@ -82,3 +84,47 @@ def scan_filter_agg_batch(fcodes, acodes, valid, dictionary, bounds,
     # reassemble: sum(u32(v)) - 2^32 * #negatives == exact signed sum
     sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
     return [(int(s), int(c)) for s, c in zip(sums[:nq], counts[:nq])]
+
+
+def scan_filter_agg_sharded(fcodes, acodes, valid, dictionary, bounds,
+                            use_pallas: bool = True, block: int = 4096):
+    """All islands' fused scans in ONE launch over a leading shard axis.
+
+    fcodes/acodes/valid: (n_shards, width) stacked resident shards (padded
+    slots must carry valid=0 — see dsm.ShardedView). bounds: Q (code_lo,
+    code_hi) predicates shared by every island. Returns per-island exact
+    partials: [[(sum, count), ...Q] ...n_shards] as python ints,
+    bit-identical to running the unsharded scan per shard.
+    """
+    if not use_pallas:
+        return scan_filter_agg_sharded_ref(fcodes, acodes, valid, dictionary,
+                                           bounds)
+    n_shards, width = fcodes.shape
+    nq = len(bounds)
+    if width == 0 or nq == 0:
+        return [[(0, 0)] * nq for _ in range(n_shards)]
+    # bucket the block to the (pow2) shard width so small shards don't pad
+    # a 4096-wide tile each; pad the stacked width to a block multiple
+    # (padding carries valid=0, the scan identity)
+    block = min(block, next_pow2(width))
+    pad = (-width) % block
+    if pad:
+        fcodes = jnp.pad(fcodes, ((0, 0), (0, pad)))
+        acodes = jnp.pad(acodes, ((0, 0), (0, pad)))
+        valid = jnp.pad(valid, ((0, 0), (0, pad)))
+    k = dictionary.shape[0]
+    kpad = next_pow2(k) - k
+    if kpad:  # pow2 shape bucketing, as in scan_filter_agg_batch
+        dictionary = jnp.pad(dictionary, (0, kpad))
+    barr = np.zeros((next_pow2(nq), 2), dtype=np.int32)
+    barr[:nq] = np.asarray(bounds, dtype=np.int32).reshape(-1, 2)
+    lo16, hi16, cnt, neg = scan_filter_agg_sharded_kernel(
+        fcodes, acodes, valid.astype(jnp.int32), dictionary,
+        jnp.asarray(barr), block=block, interpret=default_interpret())
+    lo64 = np.asarray(lo16).astype(np.int64).sum(axis=1)   # (n_shards, Q)
+    hi64 = np.asarray(hi16).astype(np.int64).sum(axis=1)
+    counts = np.asarray(cnt).astype(np.int64).sum(axis=1)
+    negs = np.asarray(neg).astype(np.int64).sum(axis=1)
+    sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
+    return [[(int(sums[s, q]), int(counts[s, q])) for q in range(nq)]
+            for s in range(n_shards)]

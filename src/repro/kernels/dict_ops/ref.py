@@ -10,6 +10,17 @@ def scan_filter_agg_ref(fcodes, acodes, valid, dictionary, code_lo, code_hi):
     return jnp.sum(jnp.where(mask, vals, 0.0)), jnp.sum(mask.astype(jnp.int32))
 
 
+def scan_filter_agg_sharded_ref(fcodes, acodes, valid, dictionary, bounds):
+    """Exact int64 oracle for the leading-shard-axis fused scan (numpy)."""
+    fcodes = np.asarray(fcodes)
+    valid = np.asarray(valid) != 0
+    acodes = np.asarray(acodes)
+    dictionary = np.asarray(dictionary, dtype=np.int64)
+    return [scan_filter_agg_batch_ref(fcodes[s], acodes[s], valid[s],
+                                      dictionary, bounds)
+            for s in range(fcodes.shape[0])]
+
+
 def scan_filter_agg_batch_ref(fcodes, acodes, valid, dictionary, bounds):
     """Exact int64 oracle for the multi-query fused scan (numpy)."""
     fcodes = np.asarray(fcodes)

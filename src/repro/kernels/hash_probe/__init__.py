@@ -1,2 +1,3 @@
 from repro.kernels.hash_probe.hash_probe import EMPTY as EMPTY_KEY
-from repro.kernels.hash_probe.ops import build_table, probe, HashTable
+from repro.kernels.hash_probe.ops import (HashTable, build_table,
+                                          probe, probe_sharded)

@@ -38,6 +38,46 @@ def _probe_kernel(q_ref, tk_ref, tv_ref, default_ref, out_ref):
     out_ref[...] = jnp.where(hit.any(axis=1), val, default)
 
 
+def _probe_sharded_kernel(q_ref, tk_ref, tv_ref, default_ref, out_ref):
+    """Leading-batch-axis probe: grid step (s, i) probes island s's block i
+    against the shared (replicated-dictionary) table — all islands' lookups
+    in one launch."""
+    q = q_ref[0, :]                     # (blk,) one island's query tile
+    tk = tk_ref[...]
+    tv = tv_ref[...]
+    default = default_ref[0]
+    n_buckets = tk.shape[0]
+    bucket = jax.lax.rem(q, n_buckets)
+    bucket = jnp.where(bucket < 0, bucket + n_buckets, bucket)
+    bk = jnp.take(tk, bucket, axis=0)
+    bv = jnp.take(tv, bucket, axis=0)
+    hit = bk == q[:, None]
+    val = jnp.max(jnp.where(hit, bv, jnp.iinfo(jnp.int32).min), axis=1)
+    out_ref[0, :] = jnp.where(hit.any(axis=1), val, default)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def probe_table_sharded(queries, table_keys, table_vals, default,
+                        block: int = 1024, interpret: bool = True):
+    """Probe a (n_shards, width) stacked query batch in one launch."""
+    n_shards, width = queries.shape
+    assert width % block == 0
+    nb, slots = table_keys.shape
+    return pl.pallas_call(
+        _probe_sharded_kernel,
+        grid=(n_shards, width // block),
+        in_specs=[
+            pl.BlockSpec((1, block), lambda s, i: (s, i)),
+            pl.BlockSpec((nb, slots), lambda s, i: (0, 0)),
+            pl.BlockSpec((nb, slots), lambda s, i: (0, 0)),
+            pl.BlockSpec((1,), lambda s, i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, block), lambda s, i: (s, i)),
+        out_shape=jax.ShapeDtypeStruct((n_shards, width), table_vals.dtype),
+        interpret=interpret,
+    )(queries, table_keys, table_vals, default)
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def probe_table(queries, table_keys, table_vals, default, block: int = 1024,
                 interpret: bool = True):

@@ -7,8 +7,9 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import default_interpret
-from repro.kernels.hash_probe.hash_probe import EMPTY, probe_table
+from repro.kernels.common import default_interpret, next_pow2
+from repro.kernels.hash_probe.hash_probe import (EMPTY, probe_table,
+                                                 probe_table_sharded)
 from repro.kernels.hash_probe.ref import probe_ref
 
 
@@ -64,3 +65,34 @@ def probe(table: HashTable, queries: jnp.ndarray, default: int = -1,
                       jnp.asarray([default], dtype=table.values.dtype),
                       block=block, interpret=default_interpret())
     return out[:n]
+
+
+def probe_sharded(table: HashTable, query_batches, default: int = -1,
+                  use_pallas: bool = True, block: int = 1024):
+    """Probe every island's query batch in ONE launch (leading shard axis).
+
+    query_batches: list of per-island int32 query arrays (ragged lengths
+    allowed — they are stack-padded; padded lookups are discarded). Returns
+    the per-island value arrays, elementwise identical to calling `probe`
+    once per island.
+    """
+    lens = [int(len(q)) for q in query_batches]
+    width = max(lens, default=0)
+    if width == 0:
+        return [np.empty(0, dtype=np.int32) for _ in query_batches]
+    if not use_pallas:
+        return [np.asarray(probe(table, jnp.asarray(q), default=default,
+                                 use_pallas=False)) for q in query_batches]
+    # pow2-bucket the padded width to bound compiled shapes; pad with 0
+    # (whatever a 0-key probe returns lands in a discarded slot). wpad and
+    # blk are both powers of two with wpad >= blk, so wpad % blk == 0.
+    wpad = next_pow2(width)
+    blk = min(block, wpad)
+    stacked = np.zeros((len(query_batches), wpad), dtype=np.int32)
+    for s, q in enumerate(query_batches):
+        stacked[s, :lens[s]] = np.asarray(q, dtype=np.int32)
+    out = probe_table_sharded(jnp.asarray(stacked), table.keys, table.values,
+                              jnp.asarray([default], dtype=table.values.dtype),
+                              block=blk, interpret=default_interpret())
+    out = np.asarray(out)
+    return [out[s, :lens[s]] for s in range(len(query_batches))]

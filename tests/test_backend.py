@@ -16,9 +16,7 @@ from repro.core.dsm import DSMReplica, decode_column, encode_column
 from repro.core.nsm import make_entries
 from repro.core.shipping import ship_updates
 
-KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch", "probe",
-                       "build_table", "merge_sorted_runs", "sort_1024",
-                       "sort_rows", "snapshot_copy")
+from repro.core.backend import KERNEL_ENTRY_POINTS
 
 
 # ---------------------------------------------------------------------------

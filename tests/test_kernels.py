@@ -105,6 +105,44 @@ def test_scan_filter_agg_sweep(rng, n, k):
     assert int(c) == int(rc)
 
 
+@pytest.mark.parametrize("n_shards,width", [(1, 4096), (4, 1000), (3, 7),
+                                            (8, 5000), (2, 0)])
+def test_scan_filter_agg_sharded_sweep(rng, n_shards, width):
+    """Leading-shard-axis fused scan: one launch == per-shard oracle,
+    exactly (negative dictionary values exercise the split accumulator)."""
+    from repro.kernels.dict_ops import scan_filter_agg_sharded
+    from repro.kernels.dict_ops.ref import scan_filter_agg_sharded_ref
+    k = 60
+    fcodes = rng.integers(0, k, size=(n_shards, width)).astype(np.int32)
+    acodes = rng.integers(0, k, size=(n_shards, width)).astype(np.int32)
+    valid = rng.random((n_shards, width)) < 0.85
+    d = np.sort(rng.choice(np.arange(-(10**6), 10**6, dtype=np.int32),
+                           size=k, replace=False))
+    bounds = [(k // 4, 3 * k // 4), (0, k), (7, 7)]
+    got = scan_filter_agg_sharded(jnp.asarray(fcodes), jnp.asarray(acodes),
+                                  jnp.asarray(valid), jnp.asarray(d), bounds)
+    assert got == scan_filter_agg_sharded_ref(fcodes, acodes, valid, d,
+                                              bounds)
+
+
+def test_probe_sharded_matches_per_island_probe(rng):
+    """Leading-batch-axis probe (ragged islands stack-padded): elementwise
+    identical to one probe call per island."""
+    from repro.kernels.hash_probe import probe_sharded
+    keys = rng.choice(1 << 20, size=300, replace=False).astype(np.int32)
+    vals = rng.integers(0, 1000, size=300).astype(np.int32)
+    t = build_table(keys, vals)
+    batches = [rng.choice(np.concatenate([keys, rng.integers(0, 1 << 20, m)
+                                          .astype(np.int32)]), size=m)
+               .astype(np.int32) if m else np.empty(0, np.int32)
+               for m in (0, 3, 700, 64)]
+    got = probe_sharded(t, batches, default=-7)
+    for b, g in zip(batches, got):
+        exp = (np.asarray(probe(t, jnp.asarray(b), default=-7))
+               if len(b) else np.empty(0, np.int32))
+        np.testing.assert_array_equal(g, exp)
+
+
 @pytest.mark.parametrize("n,block", [(50_000, 8192), (8192, 1024),
                                      (1000, 256)])
 def test_snapshot_copy_sweep(rng, n, block):

@@ -12,6 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import backend as backend_mod
 from repro.core import engine, htap
 from repro.core.application import (apply_updates, apply_updates_shards,
                                     route_updates)
@@ -19,9 +20,10 @@ from repro.core.backend import (ShardedBackend, default_n_shards,
                                 get_backend, reduce_partials,
                                 set_default_n_shards)
 from repro.core.consistency import ConsistencyManager
-from repro.core.dsm import (DSMReplica, EncodedColumn, concat_columns,
-                            decode_column, encode_column, shard_bounds,
-                            shard_column)
+from repro.core.dsm import (DSMReplica, EncodedColumn, ShardedView,
+                            StaleShardedViewError, concat_columns,
+                            decode_column, encode_column, make_sharded_view,
+                            shard_bounds, shard_column)
 from repro.core.nsm import make_entries
 
 
@@ -79,6 +81,68 @@ def test_concat_rejects_mixed_rounds(rng):
         concat_columns([a, stale])
     with pytest.raises(ValueError):
         concat_columns([])
+
+
+# ---------------------------------------------------------------------------
+# ShardedView: the materialized sharded snapshot plane
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k", [(1000, 1), (1000, 3), (100, 7), (5, 8),
+                                 (0, 2)])
+def test_sharded_view_mirrors_shard_column(rng, n, k):
+    """The stacked view is the same partition shard_column produces:
+    per-shard slices match, padding carries valid=False, and to_column
+    is an exact row-order inverse."""
+    col = _col(rng, n)
+    view = make_sharded_view(col, k)
+    assert view.n_shards == k and view.n_rows == n
+    assert view.bounds == tuple(shard_bounds(n, k))
+    for s, ref in enumerate(shard_column(col, k)):
+        got = view.shard(s)
+        np.testing.assert_array_equal(np.asarray(got.codes),
+                                      np.asarray(ref.codes))
+        np.testing.assert_array_equal(np.asarray(got.valid),
+                                      np.asarray(ref.valid))
+        assert got.dictionary is col.dictionary
+        # padded slots (beyond the shard's true size) are never valid
+        assert not np.asarray(view.valid)[s, view.sizes[s]:].any()
+    back = view.to_column()
+    np.testing.assert_array_equal(np.asarray(back.codes),
+                                  np.asarray(col.codes))
+    np.testing.assert_array_equal(np.asarray(back.valid),
+                                  np.asarray(col.valid))
+    assert back.version == col.version == view.version
+    # cost-model properties mirror the source column
+    assert (view.encoded_bytes, view.bit_width, view.dict_size) == \
+        (col.encoded_bytes, col.bit_width, col.dict_size)
+
+
+def test_backend_consumes_views_and_rejects_stale(rng):
+    be = ShardedBackend("numpy", 4)
+    base = get_backend("numpy")
+    fcol, acol = _col(rng, 777), _col(rng, 777, domain=120)
+    fv, av = be.shard_view(fcol), be.shard_view(acol)
+    # views answer exactly like the raw columns (and the unsharded path)
+    assert be.filter_agg(fv, av, 10, 400) == \
+        base.filter_agg(fcol, acol, 10, 400)
+    np.testing.assert_array_equal(be.filter_mask(fv, 10, 400),
+                                  base.filter_mask(fcol, 10, 400))
+    s, c, m = be.filter_agg_mask(fv, av, 10, 400)
+    s0, c0, m0 = base.filter_agg_mask(fcol, acol, 10, 400)
+    assert (s, c) == (s0, c0)
+    np.testing.assert_array_equal(m, m0)
+    assert be.hash_join_count(av, av, left_mask=m) == \
+        base.hash_join_count(acol, acol, left_mask=m0)
+    # staleness is a hard error on every consumer, not a silent refresh
+    fv.invalidate("test says so")
+    assert fv.stale
+    with pytest.raises(StaleShardedViewError, match="test says so"):
+        be.filter_agg(fv, av, 10, 400)
+    with pytest.raises(StaleShardedViewError):
+        fv.shard(0)
+    # island-count mismatches are rejected, not silently re-sharded
+    with pytest.raises(ValueError, match="islands"):
+        ShardedBackend("numpy", 2).filter_agg(av, av, 10, 400)
 
 
 # ---------------------------------------------------------------------------
@@ -281,6 +345,82 @@ def test_polynesia_pallas_sharded_matches_numpy(small_workload,
     sharded = htap.run_polynesia(table, stream, queries, n_rounds=4,
                                  backend="pallas", n_shards=2)
     assert sharded.results == unsharded_runs["Polynesia"].results
+    assert sharded.stats["sharded_views"] > 0  # the view plane actually ran
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4])
+@pytest.mark.parametrize("system", list(htap.ALL_SYSTEMS))
+def test_all_drivers_pallas_vmapped_bit_identical(small_workload,
+                                                  unsharded_runs, system,
+                                                  n_shards):
+    """Acceptance sweep: every driver, serial numpy == serial pallas (@1)
+    == vmapped pallas@N for N in {1, 2, 4} — the batched one-launch scan
+    plane never changes an answer."""
+    table, stream, queries = small_workload
+    run = htap.ALL_SYSTEMS[system](table, stream, queries, n_rounds=4,
+                                   backend="pallas", n_shards=n_shards)
+    base = unsharded_runs[system]
+    assert run.results == base.results
+    assert (run.n_txn, run.n_ana) == (base.n_txn, base.n_ana)
+
+
+def _count_kernel_calls(monkeypatch):
+    counts = {}
+
+    def wrap(name, real):
+        def inner(*args, **kwargs):
+            counts[name] = counts.get(name, 0) + 1
+            return real(*args, **kwargs)
+        return inner
+
+    for name in backend_mod.KERNEL_ENTRY_POINTS:
+        monkeypatch.setattr(backend_mod, name,
+                            wrap(name, getattr(backend_mod, name)))
+    return counts
+
+
+def test_scan_group_launch_count_constant_in_islands(small_workload,
+                                                     monkeypatch):
+    """A fused scan group is ONE kernel launch however many islands share
+    it (the vmapped shard batch), not one launch per shard."""
+    counts = _count_kernel_calls(monkeypatch)
+    table, _, _ = small_workload
+    rng = np.random.default_rng(5)
+    queries = engine.gen_queries(rng, 8, 4, join_fraction=0.0,
+                                 same_column=True)
+    replica = DSMReplica.from_table(table)
+    expected = [engine.run_query_dsm(replica.columns, q, backend="numpy")
+                for q in queries]
+    for n in (1, 2, 4, 8):
+        counts.clear()
+        be = get_backend("pallas", n_shards=n)
+        view = replica.columns
+        if n > 1:
+            view = {c: be.shard_view(col)
+                    for c, col in replica.columns.items()}
+        assert engine.run_query_group_dsm(view, queries, backend=be) \
+            == expected
+        scans = sum(counts.get(k, 0) for k in
+                    ("scan_filter_agg", "scan_filter_agg_batch",
+                     "scan_filter_agg_sharded"))
+        assert scans == 1, (n, counts)
+
+
+def test_polynesia_total_launches_shard_invariant(small_workload,
+                                                  monkeypatch):
+    """End to end, pallas@4 issues no more kernel launches than pallas@1:
+    scans ride one batched launch per group, per-island value encodes one
+    batched probe, snapshots one stacked copy pass."""
+    counts = _count_kernel_calls(monkeypatch)
+    table, stream, queries = small_workload
+    htap.run_polynesia(table, stream, queries, n_rounds=4, backend="pallas",
+                       n_shards=1)
+    at_1 = sum(counts.values())
+    counts.clear()
+    htap.run_polynesia(table, stream, queries, n_rounds=4, backend="pallas",
+                       n_shards=4)
+    at_4 = sum(counts.values())
+    assert at_4 <= at_1, (at_4, at_1)
 
 
 def test_modeled_ana_throughput_monotone_in_islands(small_workload):
@@ -328,6 +468,36 @@ def test_backend_spec_parsing():
         get_backend("numpy@-2")
     with pytest.raises(ValueError, match="n_shards"):
         get_backend("numpy", n_shards=0)
+
+
+def test_malformed_specs_fail_early_with_actionable_errors():
+    """Bad specs error at parse time with the expected form in the
+    message, not as deep lookup errors ("@4", "pallas@", non-integers)."""
+    from repro.core.backend import parse_backend_spec
+    assert parse_backend_spec("pallas") == ("pallas", None)
+    assert parse_backend_spec("numpy@4") == ("numpy", 4)
+    with pytest.raises(KeyError, match="empty backend name"):
+        get_backend("@4")
+    with pytest.raises(KeyError, match="empty backend spec"):
+        get_backend("")
+    with pytest.raises(KeyError, match="decimal integer"):
+        get_backend("pallas@")
+    with pytest.raises(KeyError, match="decimal integer"):
+        get_backend("pallas@4.0")
+    with pytest.raises(ValueError, match="n_shards"):
+        parse_backend_spec("pallas@0")
+    # unknown names still list the registry; the default-resolution path
+    # points at the environment variable that supplied the bad name
+    with pytest.raises(KeyError, match="have.*numpy"):
+        get_backend("cuda")
+    import repro.core.backend as bmod
+    old = bmod._default_backend
+    try:
+        bmod._default_backend = "cuda"
+        with pytest.raises(KeyError, match="REPRO_BACKEND"):
+            get_backend(None)
+    finally:
+        bmod._default_backend = old
 
 
 def test_spec_shard_count_conflicts_with_argument():

@@ -1,0 +1,205 @@
+"""Sharded snapshot plane lifecycle: shard at pin, invalidate at swap.
+
+The ConsistencyManager materializes each pinned column's island shards
+once per round (`read_scan`) and reuses the view across the round's query
+groups. A Phase-2 swap invalidates unpinned views — using one afterwards
+is a hard `StaleShardedViewError` — while a *pinned* view keeps answering
+from its frozen snapshot (that is snapshot isolation). The hypothesis
+sweep interleaves updates/swaps with pinned-view scans to check both
+properties against the unsharded numpy reference, and the golden-answer
+test pins the whole plane to the committed fixture.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import htap
+from repro.core.application import apply_updates
+from repro.core.backend import NumpyBackend, ShardedBackend
+from repro.core.consistency import ConsistencyManager
+from repro.core.dsm import DSMReplica, ShardedView, StaleShardedViewError
+from repro.core.nsm import make_entries
+
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_answers.json"
+
+
+def _replica(rng, n=600, cols=2):
+    table = rng.integers(0, 200, size=(n, cols)).astype(np.int32)
+    return DSMReplica.from_table(table)
+
+
+def _mods(rng, col, m, cid0):
+    """m modify entries at random rows of `col` (commit ids from cid0)."""
+    return make_entries(
+        np.arange(cid0, cid0 + m, dtype=np.int64),
+        np.ones(m, np.int8),
+        rng.integers(0, 500, m).astype(np.int32),
+        rng.integers(0, col.n_rows, m).astype(np.int64),
+        np.zeros(m, np.int32))
+
+
+# ---------------------------------------------------------------------------
+# shard at pin: once per round, shared across groups
+# ---------------------------------------------------------------------------
+
+def test_read_scan_shards_once_per_round(rng):
+    rep = _replica(rng)
+    cons = ConsistencyManager(rep, backend=ShardedBackend("numpy", 3))
+    h1 = cons.begin_query([0, 1])
+    v1 = cons.read_scan(h1, 0)
+    assert isinstance(v1, ShardedView) and v1.n_shards == 3
+    assert v1.snapshot_id >= 0  # provenance: pinned from a real snapshot
+    # a second group pinning the same (shared) snapshot reuses the view
+    h2 = cons.begin_query([0])
+    assert cons.read_scan(h2, 0) is v1
+    assert cons.views_built == 1 and cons.views_shared == 1
+    # read_scan answers match the plain pinned read, bit for bit
+    be = ShardedBackend("numpy", 3)
+    ref = NumpyBackend()
+    assert be.filter_agg(v1, cons.read_scan(h1, 1), 0, 500) == \
+        ref.filter_agg(cons.read(h1, 0), cons.read(h1, 1), 0, 500)
+    cons.end_query(h1)
+    cons.end_query(h2)
+
+
+def test_read_scan_is_plain_read_unsharded(rng):
+    rep = _replica(rng)
+    cons = ConsistencyManager(rep, backend="numpy")
+    h = cons.begin_query([0])
+    assert cons.read_scan(h, 0) is cons.read(h, 0)
+    assert cons.views_built == 0
+    cons.end_query(h)
+
+
+# ---------------------------------------------------------------------------
+# invalidate at Phase-2 swap: hard errors, never silent staleness
+# ---------------------------------------------------------------------------
+
+def test_swap_invalidates_unpinned_view(rng):
+    rep = _replica(rng)
+    be = ShardedBackend("numpy", 4)
+    cons = ConsistencyManager(rep, backend=be)
+    h = cons.begin_query([0])
+    view = cons.read_scan(h, 0)
+    cons.end_query(h)
+    # unpinned now; the Phase-2 swap must kill it
+    cons.on_update(0, apply_updates(rep.columns[0], _mods(rng, view, 10, 0),
+                                    backend="numpy"))
+    assert view.stale
+    with pytest.raises(StaleShardedViewError, match="swapped out"):
+        be.filter_agg(view, view, 0, 500)
+    # the next pin builds a fresh view over the post-swap snapshot
+    h2 = cons.begin_query([0])
+    v2 = cons.read_scan(h2, 0)
+    assert v2 is not view and not v2.stale
+    assert be.filter_agg(v2, v2, 0, 500) == \
+        NumpyBackend().filter_agg(cons.read(h2, 0), cons.read(h2, 0), 0, 500)
+    cons.end_query(h2)
+
+
+def test_pinned_view_survives_swap_then_dies(rng):
+    """Snapshot isolation: a pinned view keeps answering from its frozen
+    round through a concurrent swap; once unpinned, the next swap (or GC)
+    turns further use into a hard error."""
+    rng2 = np.random.default_rng(1)
+    rep = _replica(rng)
+    be = ShardedBackend("numpy", 2)
+    ref = NumpyBackend()
+    cons = ConsistencyManager(rep, backend=be)
+    h = cons.begin_query([0])
+    view = cons.read_scan(h, 0)
+    frozen = ref.filter_agg(cons.read(h, 0), cons.read(h, 0), 0, 500)
+    cons.on_update(0, apply_updates(rep.columns[0], _mods(rng2, view, 25, 0),
+                                    backend="numpy"))
+    # still pinned: fresh, and still the pre-swap answers
+    assert not view.stale
+    assert be.filter_agg(view, view, 0, 500) == frozen
+    cons.end_query(h)
+    cons.on_update(0, apply_updates(rep.columns[0], _mods(rng2, view, 5, 100),
+                                    backend="numpy"))
+    with pytest.raises(StaleShardedViewError):
+        be.filter_agg_batch(view, view, [(0, 500)])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweep: random interleavings of swaps and pinned scans
+# ---------------------------------------------------------------------------
+
+def test_property_interleaved_swaps_and_pinned_scans():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 1 << 16), k=st.integers(2, 6),
+           actions=st.lists(st.sampled_from(["pin", "scan", "end", "swap"]),
+                            min_size=4, max_size=24))
+    def prop(seed, k, actions):
+        rng = np.random.default_rng(seed)
+        rep = _replica(rng, n=int(rng.integers(50, 300)))
+        be = ShardedBackend("numpy", k)
+        ref = NumpyBackend()
+        cons = ConsistencyManager(rep, backend=be)
+        pinned = []       # (handle, view, pinned column)
+        retired = []      # views whose pin ended before a later swap
+        cid = 0
+        for act in actions:
+            if act == "pin":
+                h = cons.begin_query([0])
+                view = cons.read_scan(h, 0)
+                # snapshot sharing may re-pin a previously retired view
+                retired = [r for r in retired if r is not view]
+                pinned.append((h, view, cons.read(h, 0)))
+            elif act == "scan" and pinned:
+                h, view, col = pinned[int(rng.integers(len(pinned)))]
+                lo = int(rng.integers(0, 300))
+                hi = lo + int(rng.integers(0, 300))
+                # a pinned view always answers, exactly as the unsharded
+                # reference over the pinned column
+                assert be.filter_agg(view, view, lo, hi) == \
+                    ref.filter_agg(col, col, lo, hi)
+            elif act == "end" and pinned:
+                h, view, _ = pinned.pop(int(rng.integers(len(pinned))))
+                cons.end_query(h)
+                if all(v is not view for _, v, _ in pinned):
+                    retired.append(view)  # truly unpinned from here on
+            elif act == "swap":
+                m = int(rng.integers(1, 20))
+                cons.on_update(0, apply_updates(
+                    rep.columns[0], _mods(rng, rep.columns[0], m, cid),
+                    backend="numpy"))
+                cid += m
+                # every view retired before this swap is now a hard error
+                for view in retired:
+                    assert view.stale
+                    with pytest.raises(StaleShardedViewError):
+                        be.filter_agg(view, view, 0, 500)
+                # pinned views are untouched by the swap
+                assert all(not v.stale for _, v, _ in pinned)
+        for h, _, _ in pinned:
+            cons.end_query(h)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# golden answers: the whole plane, end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend,n_shards", [("numpy", 4), ("pallas", 2)])
+def test_sharded_view_plane_matches_golden(small_workload, backend,
+                                           n_shards):
+    """Polynesia through the pinned-ShardedView plane reproduces the
+    committed golden answers (default driver arguments, like the
+    fixture's regeneration path)."""
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)["results"]["Polynesia"]
+    table, stream, queries = small_workload
+    res = htap.run_polynesia(table, stream, queries, backend=backend,
+                             n_shards=n_shards)
+    assert [int(a) for a in res.results] == golden
+    assert res.stats["sharded_views"] > 0

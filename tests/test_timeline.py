@@ -158,6 +158,77 @@ def test_utilization_reported_per_lane(small_workload):
 
 
 # ---------------------------------------------------------------------------
+# batch-aware launch cost: one launch per fused group, island-invariant
+# ---------------------------------------------------------------------------
+
+def _ana_seconds(cost, islands=1):
+    import dataclasses
+    hw = dataclasses.replace(HMC_PARAMS, n_ana_islands=islands)
+    return HardwareModel(hw).time(cost, concurrent_islands=False)["ana"]
+
+
+def test_group_launch_amortization(small_workload):
+    """A fused group charges ONE kernel launch; the same queries run
+    singly charge one each — so the model now rewards batching, and the
+    fused bound is what the timeline's makespan inherits."""
+    from repro.core import engine
+    from repro.core.dsm import DSMReplica
+    table, _, _ = small_workload
+    rng = np.random.default_rng(11)
+    queries = engine.gen_queries(rng, 8, 4, join_fraction=0.0,
+                                 same_column=True)
+    replica = DSMReplica.from_table(table)
+    fused, single = CostLog(), CostLog()
+    with fused.tagged("r0:ana0", "ana", round=0):
+        grouped = engine.run_query_group_dsm(replica.columns, queries, fused,
+                                             on_pim=True, backend="numpy")
+    singly = []
+    for i, q in enumerate(queries):
+        with single.tagged(f"r0:ana{i}", "ana", round=0):
+            singly.append(engine.run_query_dsm(replica.columns, q, single,
+                                               on_pim=True, backend="numpy"))
+    assert grouped == singly  # pricing never changes answers
+    launches = {"fused": 0.0, "single": 0.0}
+    for key, log in (("fused", fused), ("single", single)):
+        launches[key] = sum(e.items for e in log.events
+                            if e.resource == "launch")
+    assert launches["fused"] == 1.0
+    assert launches["single"] == float(len(queries))
+    assert _ana_seconds(fused) <= _ana_seconds(single)
+
+
+def test_launch_cost_island_invariant():
+    """The vmapped shard batch is ONE launch however many islands share
+    it: the modeled launch term must not shrink (or grow) with islands,
+    unlike the partitioned PIM scan term."""
+    log = CostLog()
+    log.add(phase="ana", island="ana", resource="launch", items=16.0)
+    t1 = HardwareModel(HMC_PARAMS).phase_time(log.events).seconds
+    assert t1 == pytest.approx(16.0 * HMC_PARAMS.launch_overhead_s)
+    assert _ana_seconds(log, islands=1) == pytest.approx(
+        _ana_seconds(log, islands=4))
+
+
+def test_cpu_path_charges_no_launches(small_workload):
+    """The software engine has no kernel launches to set up (on_pim=False
+    emits no launch events), so its modeled time is untouched by even a
+    pathological launch overhead."""
+    import dataclasses
+    from repro.core import engine
+    from repro.core.dsm import DSMReplica
+    table, _, queries = small_workload
+    cost = CostLog()
+    replica = DSMReplica.from_table(table)
+    with cost.tagged("q:ana", "ana", round=0):
+        engine.run_query_dsm(replica.columns, queries[0], cost, on_pim=False,
+                             backend="numpy")
+    assert not any(e.resource == "launch" for e in cost.events)
+    slow_launch = dataclasses.replace(HMC_PARAMS, launch_overhead_s=1.0)
+    assert HardwareModel(slow_launch).time(cost)["ana"] == \
+        pytest.approx(HardwareModel(HMC_PARAMS).time(cost)["ana"])
+
+
+# ---------------------------------------------------------------------------
 # timing selection and guard rails
 # ---------------------------------------------------------------------------
 

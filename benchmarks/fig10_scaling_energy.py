@@ -38,11 +38,11 @@ def run(shards=DEFAULT_SHARDS):
                                           n_cols=8, n_txn=150_000,
                                           n_queries=32)
         hw = _scaled(stacks)
-        (poly, us1) = timed(htap.run_polynesia, table, stream, queries,
-                            hw=hw)
+        (poly, us1) = timed(htap.run, "Polynesia", table, stream,
+                            queries, hw=hw)
         # MI gets proportionally more CPU cores (paper: fair comparison)
         hw_mi = dataclasses.replace(hw, cpu_cores=4 * stacks)
-        (mi, us2) = timed(htap.run_multi_instance, table, stream, queries,
+        (mi, us2) = timed(htap.run, "MI+SW", table, stream, queries,
                           hw=hw_mi, name="MI",
                           optimized_application=False)
         ratios[stacks] = poly.ana_throughput / mi.ana_throughput
@@ -62,7 +62,7 @@ def run(shards=DEFAULT_SHARDS):
     ana = {}
     answers = None
     for s in shards:
-        res, us = timed(htap.run_polynesia, table, stream, queries,
+        res, us = timed(htap.run, "Polynesia", table, stream, queries,
                         n_shards=s)
         ana[s] = res.ana_throughput
         if answers is None:
@@ -86,7 +86,7 @@ def run(shards=DEFAULT_SHARDS):
                                       n_txn=150_000, n_queries=48)
     e = {}
     for name in ("SI-SS", "SI-MVCC", "MI+SW", "Polynesia"):
-        res = htap.ALL_SYSTEMS[name](table, stream, queries)
+        res = htap.run(name, table, stream, queries)
         e[name] = res.energy_joules
     claims.add("Polynesia energy vs MI+SW (-48%)", 1 - 0.48,
                e["Polynesia"] / e["MI+SW"])

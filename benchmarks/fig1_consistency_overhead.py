@@ -22,10 +22,10 @@ def _mvcc_drop(rng, n_txn):
     table, stream, queries = workload(rng, n_rows=34_000, n_cols=4,
                                       n_txn=n_txn, n_queries=16,
                                       join_fraction=0.0)
-    res = htap.run_si_mvcc(table, stream, queries, n_rounds=4)
+    res = htap.run("SI-MVCC", table, stream, queries, n_rounds=4)
     # zero-cost MVCC: identical run, chain traversal costs nothing
-    zero = htap.run_si_mvcc(table, stream, queries, n_rounds=4,
-                            zero_cost_mvcc=True)
+    zero = htap.run("SI-MVCC", table, stream, queries, n_rounds=4,
+                    zero_cost_mvcc=True)
     return res.ana_throughput / zero.ana_throughput
 
 
@@ -34,9 +34,9 @@ def _snapshot_drop(rng, n_queries):
                                 n_txn=250_000, n_queries=n_queries)
     queries = engine.gen_queries(np.random.default_rng(1), n_queries, 8,
                                  join_fraction=0.0)
-    res = htap.run_si_ss(table, stream, queries, n_rounds=n_queries)
-    zero = htap.run_si_ss(table, stream, queries, n_rounds=n_queries,
-                          zero_cost_snapshot=True)
+    res = htap.run("SI-SS", table, stream, queries, n_rounds=n_queries)
+    zero = htap.run("SI-SS", table, stream, queries, n_rounds=n_queries,
+                    zero_cost_snapshot=True)
     return res.txn_throughput / zero.txn_throughput
 
 

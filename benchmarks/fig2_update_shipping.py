@@ -15,20 +15,19 @@ def _propagation_drop(rng, write_ratio, application: bool):
     table, stream, queries = workload(rng, n_rows=20_000, n_cols=8,
                                       n_txn=120_000, n_queries=16,
                                       write_ratio=write_ratio)
+    mi = htap.SystemSpec.mi_sw(name="MI", optimized_application=False)
     if application:
         # plain Multiple-Instance: naive (de)compressing application (§3.2)
-        res = htap.run_multi_instance(table, stream, queries, name="MI",
-                                      optimized_application=False, n_rounds=8)
+        res = htap.run_spec(mi, table, stream, queries, n_rounds=8)
     else:
         # shipping only: zero-cost application
-        res = htap.run_multi_instance(table, stream, queries,
-                                      name="MI-ship-only",
-                                      optimized_application=False,
-                                      n_rounds=8, shipping_only=True)
+        res = htap.run_spec(mi.replace(name="MI-ship-only",
+                                       shipping_only=True),
+                            table, stream, queries, n_rounds=8)
     # the paper's baseline: identical run, zero-cost shipping AND application
-    ideal = htap.run_multi_instance(table, stream, queries, name="Ideal",
-                                    optimized_application=False, n_rounds=8,
-                                    zero_cost_propagation=True)
+    ideal = htap.run_spec(mi.replace(name="Ideal",
+                                     zero_cost_propagation=True),
+                          table, stream, queries, n_rounds=8)
     return res.txn_throughput / ideal.txn_throughput
 
 

@@ -2,6 +2,12 @@
 
 Paper: shipping ~15.4% of execution time; application ~23.8% of cycles, of
 which 62.6% is column (de)compression; the rest is transactional work.
+
+The breakdown needs propagation *without* analytics (every priced event on
+the txn island), which the batch API could only fake with a hand-copied
+round loop; the session API expresses it directly — ``execute`` each
+round's chunk, then ``flush_updates()`` at the query points instead of
+answering queries.
 """
 
 import numpy as np
@@ -9,61 +15,35 @@ import numpy as np
 from benchmarks.common import ClaimTable, timed, workload
 from repro.core import htap
 from repro.core.hwmodel import HardwareModel, HMC_PARAMS
+from repro.core.workload import split_queries, split_stream
 
 
-def _breakdown(rng):
-    table, stream, queries = workload(rng, n_rows=20_000, n_cols=8,
-                                      n_txn=120_000, n_queries=16)
-    res = htap.run_multi_instance(table, stream, queries, name="MI",
-                                  optimized_application=False, n_rounds=8)
-    # recover per-phase seconds from the stats emitted by the model
-    return res
+def _breakdown_session(table, stream, queries) -> htap.HTAPSession:
+    """MI (naive application) with propagation but silent query cores."""
+    spec = htap.SystemSpec.mi_sw(name="MI", optimized_application=False)
+    session = htap.HTAPSession(spec, table)
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(split_stream(stream, 8), split_queries(queries, 8))):
+        if r:
+            session.advance_round()
+        session.execute(txn_chunk)
+        if q_chunk:
+            # the §5 trigger a query batch would pull, minus the queries
+            session.flush_updates()
+    return session
 
 
 def run():
-    rng = np.random.default_rng(0)
     claims = ClaimTable("fig3")
     rows = []
-    (res, us) = timed(_breakdown, rng)
-    # re-price phases individually
-    from repro.core.hwmodel import CostLog
     table, stream, queries = workload(np.random.default_rng(0),
                                       n_rows=20_000, n_cols=8,
                                       n_txn=120_000, n_queries=16)
-    cost = CostLog()
-    import repro.core.htap as H
-    r = H.run_multi_instance(table, stream, queries, name="MI",
-                             optimized_application=False, n_rounds=8)
+    (session, us) = timed(_breakdown_session, table, stream, queries)
     # breakdown by phase on the txn island
     model = HardwareModel(HMC_PARAMS)
-    # rebuild: use a fresh run capturing the CostLog
-    phases = {}
-    cost2 = CostLog()
-    store_time = {}
-    # (simple re-run with exposed log)
-    from repro.core.htap import _split_queries, _split_stream
-    from repro.core.nsm import RowStore
-    from repro.core.dsm import DSMReplica
-    from repro.core.consistency import ConsistencyManager
-    from repro.core.shipping import ship_updates, FINAL_LOG_CAPACITY
-    from repro.core.application import apply_updates_naive
-    store = RowStore(table)
-    replica = DSMReplica.from_table(table)
-    cons = ConsistencyManager(replica, cost2, on_pim=False)
-    for txn_chunk, q_chunk in zip(_split_stream(stream, 8),
-                                  _split_queries(queries, 8)):
-        store.execute(txn_chunk, cost2)
-        while store.pending_updates >= FINAL_LOG_CAPACITY or (
-                store.pending_updates and q_chunk):
-            buffers = ship_updates(store.drain_logs(), store.n_cols, cost2,
-                                   on_pim=False)
-            for col_id, entries in buffers.items():
-                cons.on_update(col_id, apply_updates_naive(
-                    replica.columns[col_id], entries, cost2))
-        for q in q_chunk:
-            pass  # analytics priced separately; breakdown is txn-island-only
     by_phase = {}
-    for t in model.time(cost2, concurrent_islands=False)["phases"]:
+    for t in model.time(session.cost, concurrent_islands=False)["phases"]:
         name = t.phase.split(":", 1)[-1]
         by_phase[name] = by_phase.get(name, 0.0) + t.seconds
     total = sum(by_phase.values())

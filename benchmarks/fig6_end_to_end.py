@@ -17,8 +17,8 @@ def run():
                                       n_txn=150_000, n_queries=48)
     rows = []
     results = {}
-    for name, fn in htap.ALL_SYSTEMS.items():
-        (res, us) = timed(fn, table, stream, queries)
+    for name in htap.PRESETS:
+        (res, us) = timed(htap.run, name, table, stream, queries)
         results[name] = res
         rows.append((f"fig6_{name}", us,
                      f"txn={res.txn_throughput:.3e};ana={res.ana_throughput:.3e}"))

@@ -26,19 +26,21 @@ def run():
     claims = ClaimTable("fig7")
     rows = []
     # MI with naive application, CPU propagation
-    (mi, us1) = timed(htap.run_multi_instance, table, stream, queries,
-                      name="MI", optimized_application=False, n_rounds=8)
+    (mi, us1) = timed(htap.run_spec,
+                      htap.SystemSpec.mi_sw(name="MI",
+                                            optimized_application=False),
+                      table, stream, queries, n_rounds=8)
     # Polynesia: optimized algorithm on the in-memory units
-    (poly, us2) = timed(htap.run_multi_instance, table, stream, queries,
-                        name="Polynesia-prop", propagation_on_pim=True,
-                        analytics_on_pim=True, n_rounds=8)
+    poly_spec = htap.SystemSpec.polynesia(name="Polynesia-prop")
+    (poly, us2) = timed(htap.run_spec, poly_spec, table, stream, queries,
+                        n_rounds=8)
     # Ideal: zero-cost propagation
-    (ideal, us3) = timed(htap.run_multi_instance, table, stream, queries,
-                         name="Ideal-prop", shipping_only=True,
-                         analytics_on_pim=True, propagation_on_pim=True,
-                         n_rounds=8)
+    (ideal, us3) = timed(htap.run_spec,
+                         poly_spec.replace(name="Ideal-prop",
+                                           shipping_only=True),
+                         table, stream, queries, n_rounds=8)
     # ideal still prices shipping... zero both by comparing to Ideal-Txn-ish:
-    ideal_txn = htap.run_ideal_txn(table, stream)
+    ideal_txn = htap.run("Ideal-Txn", table, stream)
 
     claims.add("MI txn vs zero-cost propagation", 1 - 0.495,
                mi.txn_throughput / ideal_txn.txn_throughput)
@@ -52,14 +54,15 @@ def run():
     assert poly.txn_throughput > mi.txn_throughput
 
     # -- sync vs async propagation on the discrete-event timeline ----------
-    (tl_sync, us6) = timed(htap.run_multi_instance, table, stream, queries,
-                           name="Polynesia-sync", propagation_on_pim=True,
-                           analytics_on_pim=True, n_rounds=8,
-                           timing="timeline")
-    (tl_async, us7) = timed(htap.run_multi_instance, table, stream, queries,
-                            name="Polynesia-async", propagation_on_pim=True,
-                            analytics_on_pim=True, n_rounds=8,
-                            timing="timeline", async_propagation=True)
+    (tl_sync, us6) = timed(
+        htap.run_spec,
+        htap.SystemSpec.polynesia(name="Polynesia-sync", timing="timeline"),
+        table, stream, queries, n_rounds=8)
+    (tl_async, us7) = timed(
+        htap.run_spec,
+        htap.SystemSpec.polynesia(name="Polynesia-async", timing="timeline",
+                                  async_propagation=True),
+        table, stream, queries, n_rounds=8)
     assert tl_sync.results == poly.results == tl_async.results, \
         "timeline timing changed query answers — exactness contract broken"
     # overlap can only help: never stalling the txn island beats stalling

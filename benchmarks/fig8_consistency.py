@@ -23,17 +23,20 @@ def run():
     table, stream, queries = workload(rng, n_rows=34_000, n_cols=4,
                                       n_txn=80_000, n_queries=16,
                                       join_fraction=0.0)
-    (mvcc, us1) = timed(htap.run_si_mvcc, table, stream, queries, n_rounds=4)
+    (mvcc, us1) = timed(htap.run, "SI-MVCC", table, stream, queries,
+                        n_rounds=4)
     # our mechanism in the same single-instance CPU setting (paper: "for a
     # fair comparison, we implement our consistency mechanism in a
     # single-instance system"): column snapshots, no chains, analytics on
     # the CPU; propagation zero-cost to isolate consistency.
-    (ours_a, us2) = timed(htap.run_multi_instance, table, stream, queries,
-                          name="Poly-consistency", propagation_on_pim=True,
-                          analytics_on_pim=False, zero_cost_propagation=True,
-                          n_rounds=4)
-    zero = htap.run_si_mvcc(table, stream, queries, n_rounds=4,
-                            zero_cost_mvcc=True)
+    (ours_a, us2) = timed(
+        htap.run_spec,
+        htap.SystemSpec.polynesia(name="Poly-consistency",
+                                  analytics_on_pim=False,
+                                  zero_cost_propagation=True),
+        table, stream, queries, n_rounds=4)
+    zero = htap.run("SI-MVCC", table, stream, queries, n_rounds=4,
+                    zero_cost_mvcc=True)
     claims.add("MVCC analytical vs zero-cost", 1 - 0.370,
                mvcc.ana_throughput / zero.ana_throughput)
     claims.add("ours vs MVCC (analytical)", 1.4,
@@ -46,12 +49,14 @@ def run():
                                   n_txn=250_000, n_queries=128)
     q2 = engine.gen_queries(np.random.default_rng(1), 128, 8,
                             join_fraction=0.0)
-    (ss, us3) = timed(htap.run_si_ss, table2, stream2, q2, n_rounds=128)
-    (ours_t, us4) = timed(htap.run_multi_instance, table2, stream2, q2,
-                          name="Poly-consistency", propagation_on_pim=True,
-                          analytics_on_pim=True, shipping_only=True,
-                          n_rounds=128)
-    ideal = htap.run_ideal_txn(table2, stream2)
+    (ss, us3) = timed(htap.run, "SI-SS", table2, stream2, q2,
+                      n_rounds=128)
+    (ours_t, us4) = timed(
+        htap.run_spec,
+        htap.SystemSpec.polynesia(name="Poly-consistency",
+                                  shipping_only=True),
+        table2, stream2, q2, n_rounds=128)
+    ideal = htap.run("Ideal-Txn", table2, stream2)
     claims.add("snapshot txn vs zero-cost", 1 - 0.59,
                ss.txn_throughput / ideal.txn_throughput)
     claims.add("ours vs snapshot (txn)", 2.2,

@@ -3,7 +3,7 @@
 Prints ``name,us_per_call,derived`` CSV rows (plus paper-claim check tables
 on stderr-style stdout lines prefixed with spaces).
 
-Usage: python -m benchmarks.run [figN|ci] [--backend=numpy|pallas]
+Usage: python -m benchmarks.run [figN|serve|ci] [--backend=numpy|pallas]
                                 [--shards=N] [--timing=phase|timeline]
                                 [--json=PATH]
 
@@ -14,21 +14,26 @@ works too). --timing selects the cost model — whole-run phase buckets
 ("phase") or the round-by-round discrete-event timeline ("timeline",
 core/timeline.py); REPRO_TIMING works too. The ``ci`` tag runs the small
 fixed CI workload over numpy/pallas x shards {1, 4} plus one async-timeline
-configuration and writes the throughput gate file (--json, default
-BENCH_ci.json) compared by tools/check_bench.py.
+and one incremental (HTAPSession, mid-round chunked) configuration and
+writes the throughput gate file (--json, default BENCH_ci.json) compared
+by tools/check_bench.py. The ``serve`` tag is the open-system mixed-traffic
+sweep (benchmarks/fig_serve.py).
 """
 
 import json
 import sys
 import time
 
-USAGE = ("usage: python -m benchmarks.run [figN|ci] [--backend=NAME] "
+USAGE = ("usage: python -m benchmarks.run [figN|serve|ci] [--backend=NAME] "
          "[--shards=N] [--timing=phase|timeline] [--json=PATH]")
 
-# (label, driver kwargs). The timeline combo prices the very same Polynesia
-# run with the discrete-event model (async propagation): its answers must
-# match the phase combos bit-for-bit, and its modeled throughput/freshness
-# are gated like any other row.
+# (label, spec overrides). The timeline combo prices the very same
+# Polynesia run with the discrete-event model (async propagation): its
+# answers must match the phase combos bit-for-bit, and its modeled
+# throughput/freshness are gated like any other row. The session-chunked
+# combo drives the same rounds through HTAPSession with each round's txn
+# chunk split in two — the incremental surface must stay at exact parity
+# with the batch wrappers (answers AND modeled throughput).
 CI_MATRIX = [
     ("numpy@1", dict(backend="numpy", n_shards=1)),
     ("numpy@4", dict(backend="numpy", n_shards=4)),
@@ -37,7 +42,31 @@ CI_MATRIX = [
     ("numpy@1+timeline-async",
      dict(backend="numpy", n_shards=1, timing="timeline",
           async_propagation=True)),
+    ("numpy@1+session-chunked",
+     dict(backend="numpy", n_shards=1, session_chunked=True)),
 ]
+
+
+def _run_polynesia(table, stream, queries, n_rounds, **overrides):
+    """One CI combo: the batch wrapper, or (session_chunked=True) an
+    HTAPSession driven incrementally with sub-round txn chunks."""
+    from repro.core import htap
+    from repro.core.workload import split_queries, split_stream
+
+    session_chunked = overrides.pop("session_chunked", False)
+    if not session_chunked:
+        return htap.run("Polynesia", table, stream, queries,
+                        n_rounds=n_rounds, **overrides)
+    session = htap.HTAPSession(htap.SystemSpec.polynesia(**overrides), table)
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(split_stream(stream, n_rounds),
+                split_queries(queries, n_rounds))):
+        if r:
+            session.advance_round()
+        for sub in split_stream(txn_chunk, 2):   # mid-round chunk boundary
+            session.execute(sub)
+        session.query_batch(q_chunk)
+    return session.finish()
 
 
 def ci_bench(json_path: str) -> None:
@@ -53,7 +82,6 @@ def ci_bench(json_path: str) -> None:
     import numpy as np
 
     from benchmarks.common import ci_workload
-    from repro.core import htap
 
     metrics = {}
     answers = None
@@ -62,14 +90,12 @@ def ci_bench(json_path: str) -> None:
         # cold pass: counts kernel dispatches (and takes the jit compiles)
         from repro.core.backend import counting_kernel_calls
         with counting_kernel_calls() as counts:
-            res = htap.run_polynesia(table, stream, queries, n_rounds=4,
-                                     **kwargs)
+            res = _run_polynesia(table, stream, queries, 4, **dict(kwargs))
         # warm pass: the measured wall-clock column. Compile caches are
         # hot, so this is steady-state execution time — stable enough for
         # the (still generous, 30%) gate in tools/check_bench.py.
         t0 = time.perf_counter()
-        res2 = htap.run_polynesia(table, stream, queries, n_rounds=4,
-                                  **kwargs)
+        res2 = _run_polynesia(table, stream, queries, 4, **dict(kwargs))
         wall_s = time.perf_counter() - t0
         if res2.results != res.results:
             sys.exit(f"CI bench: {label} warm-run answers diverged — "
@@ -114,7 +140,7 @@ def main() -> None:
                             fig3_breakdown, fig6_end_to_end,
                             fig7_update_propagation, fig8_consistency,
                             fig9_placement_sched, fig10_scaling_energy,
-                            lm_step)
+                            fig_serve, lm_step)
 
     modules = [
         ("fig1", fig1_consistency_overhead),
@@ -125,6 +151,7 @@ def main() -> None:
         ("fig8", fig8_consistency),
         ("fig9", fig9_placement_sched),
         ("fig10", fig10_scaling_energy),
+        ("serve", fig_serve),
         ("lm_step", lm_step),
     ]
     args = sys.argv[1:]

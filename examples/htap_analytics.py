@@ -84,6 +84,24 @@ def main():
     assert answers["numpy"] == answers["pallas"]
     print(f"backend cross-check: numpy == pallas == {answers['numpy']}")
 
+    # session surface: the same pipeline as one incremental HTAPSession on
+    # the kernel backend — execute a chunk, query, execute more, query
+    # again; the second answer reflects the newly propagated updates
+    from repro.core import workload
+    from repro.core.session import HTAPSession, SystemSpec
+
+    session = HTAPSession(SystemSpec.polynesia(backend="pallas"), table)
+    first_half, second_half = workload.split_stream(stream, 2)
+    session.execute(first_half)
+    mid = session.query(q)
+    session.advance_round()
+    session.execute(second_half)
+    end = session.query(q)
+    res = session.finish()
+    print(f"session on pallas: answer after half the stream {mid}, after "
+          f"all of it {end} (txn throughput {res.txn_throughput:.3e}/s, "
+          f"snapshots {res.stats['snapshots']})")
+
 
 if __name__ == "__main__":
     main()

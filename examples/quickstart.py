@@ -22,8 +22,8 @@ def main():
 
     print(f"{'system':12s} {'txn/s':>12s} {'queries/s':>12s} {'energy':>10s}")
     results = {}
-    for name, fn in htap.ALL_SYSTEMS.items():
-        r = fn(table, stream, queries)
+    for name in htap.PRESETS:
+        r = htap.run(name, table, stream, queries)
         results[name] = r
         print(f"{name:12s} {r.txn_throughput:12.3e} {r.ana_throughput:12.3e}"
               f" {r.energy_joules:9.4f}J")

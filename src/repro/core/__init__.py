@@ -15,3 +15,5 @@ from repro.core.shipping import merge_logs, ship_updates, FINAL_LOG_CAPACITY
 from repro.core.application import apply_updates, apply_updates_naive
 from repro.core.consistency import ConsistencyManager
 from repro.core.hwmodel import HardwareModel, HMC_PARAMS, TPU_V5E_PARAMS, CostLog
+from repro.core.session import HTAPSession, SystemSpec
+from repro.core.workload import split_queries, split_stream

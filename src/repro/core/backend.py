@@ -567,18 +567,20 @@ class ShardedBackend(ExecutionBackend):
     def hash_join_count(self, left, right, left_mask=None):
         # Each island histograms only its own resident probe-side shard;
         # the partial histograms reduce exactly in int arithmetic. The
-        # build side (the replicated right dictionary's counts) is computed
-        # once — it is identical on every island — and the match runs once
-        # on the inner backend (hash unit on PallasBackend).
+        # build side (the replicated right dictionary's counts) depends
+        # only on the pinned data, so it lives on the view
+        # (`ShardedView.dict_counts`): built once, reused by every join
+        # group probing the same pinned snapshot, and invalidated with the
+        # view at the Phase-2 swap. The match runs once on the inner
+        # backend (hash unit on PallasBackend).
         lview = self._as_view(left)
         lv = np.asarray(lview.dictionary)
         lcount = self._view_side_counts(lview, left_mask)
         if right is left:  # the engine's self-join fast path
-            rv, rcount = lv, self._view_side_counts(lview, None)
+            rv, rcount = lv, lview.dict_counts()
         elif isinstance(right, ShardedView):
-            right.require_fresh()
             rv = np.asarray(right.dictionary)
-            rcount = self._view_side_counts(right, None)
+            rcount = right.dict_counts()
         else:
             rv, rcount = _side_counts(right, None)
         return self.inner._join_match(lv, rv, lcount, rcount)
@@ -586,14 +588,16 @@ class ShardedBackend(ExecutionBackend):
     @staticmethod
     def _view_side_counts(view: ShardedView, mask) -> np.ndarray:
         """Per-dictionary-value occurrence counts, reduced across islands'
-        resident shards — straight off the stacked arrays, no reassembly."""
+        resident shards — straight off the stacked arrays, no reassembly.
+        The unmasked histogram has exactly one implementation: the view's
+        cached build side (`ShardedView.dict_counts`)."""
+        if mask is None:
+            return view.dict_counts()
         codes = np.asarray(view.codes)
-        keep2d = np.asarray(view.valid)
-        if mask is not None:
-            keep2d = keep2d.copy()
-            m = np.asarray(mask)
-            for s, (lo, hi) in enumerate(zip(view.bounds, view.bounds[1:])):
-                keep2d[s, :hi - lo] &= m[lo:hi]
+        keep2d = np.asarray(view.valid).copy()
+        m = np.asarray(mask)
+        for s, (lo, hi) in enumerate(zip(view.bounds, view.bounds[1:])):
+            keep2d[s, :hi - lo] &= m[lo:hi]
         count = np.zeros(view.dict_size, dtype=np.int64)
         for s in range(view.n_shards):
             count += np.bincount(codes[s][keep2d[s]], minlength=view.dict_size

@@ -202,6 +202,23 @@ class ConsistencyManager:
             self.views_shared += 1
         return v.view
 
+    def pin_scan_group(self, col_sets: list[list[int]]
+                       ) -> tuple[list[int], dict]:
+        """Pin one snapshot handle per query of a fused same-column-set
+        group and materialize the group's shared scan view.
+
+        Every query still pins its own handle (reader counts drive GC
+        exactly as with per-query `begin_query` calls), but because no
+        update lands between the pins, all handles resolve to the same
+        snapshot versions — the group reads one consistent `read_scan`
+        view, sharded once per round on island backends. Returns
+        ``(handles, {col_id: column-or-ShardedView})``; callers must
+        `end_query` every handle when the group finishes.
+        """
+        handles = [self.begin_query(cols) for cols in col_sets]
+        view = {c: self.read_scan(handles[0], c) for c in col_sets[0]}
+        return handles, view
+
     def end_query(self, handle: int) -> None:
         pinned = self._handles.pop(handle)
         for c, v in pinned.items():

@@ -203,6 +203,11 @@ class ShardedView:
     version: int
     snapshot_id: int = -1
     stale_reason: str | None = None
+    # Join build side, materialized lazily by `dict_counts` and owned by
+    # the view: a Phase-2 swap or GC invalidates the view and the cached
+    # build dies with it (`require_fresh` guards every read).
+    _dict_counts: np.ndarray | None = dataclasses.field(
+        default=None, repr=False, compare=False)
 
     @property
     def n_shards(self) -> int:
@@ -246,6 +251,28 @@ class ShardedView:
                 f"sharded view of column version {self.version} "
                 f"(snapshot {self.snapshot_id}) is stale: "
                 f"{self.stale_reason}")
+
+    def dict_counts(self) -> np.ndarray:
+        """Per-dictionary-value occurrence counts of the view's valid rows.
+
+        This is a hash join's *build side* (the replicated dictionary's
+        occurrence histogram): it depends only on the pinned data, so it is
+        computed once per view — across all islands' resident shards — and
+        reused by every join-query group that probes against this view,
+        instead of being re-histogrammed per call. Callers must treat the
+        returned array as read-only.
+        """
+        self.require_fresh()
+        if self._dict_counts is None:
+            codes = np.asarray(self.codes)
+            valid = np.asarray(self.valid)
+            count = np.zeros(self.dict_size, dtype=np.int64)
+            for s in range(self.n_shards):
+                count += np.bincount(codes[s][valid[s]],
+                                     minlength=self.dict_size
+                                     ).astype(np.int64)
+            self._dict_counts = count
+        return self._dict_counts
 
     def shard(self, s: int) -> EncodedColumn:
         """One island's resident shard as an (unpadded) EncodedColumn."""

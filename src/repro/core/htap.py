@@ -1,22 +1,29 @@
-"""End-to-end HTAP system compositions (§4, §9.1).
+"""Batch drivers over the session API (§4, §9.1).
 
-Six systems, matching Fig. 6:
+Six systems, matching Fig. 6, plus the two normalization baselines — each
+is a `SystemSpec` preset (core/session.py):
+
   SI-SS      single instance (NSM), software snapshotting
   SI-MVCC    single instance (NSM), MVCC version chains
   MI+SW      multiple instance, Polynesia's software optimizations, CPU only
   MI+SW+HB   MI+SW with a hypothetical 8x off-chip bandwidth (256 GB/s)
   PIM-Only   MI+SW run entirely on general-purpose PIM cores
   Polynesia  islands + PIM accelerators + placement + scheduler (full system)
-
-plus the two normalization baselines:
   Ideal-Txn  transactions alone (no analytics, zero-cost propagation)
   Ana-Only   analytics alone on the multicore CPU
+
+`run(system, table, stream, queries)` — or the per-system `run_*` wrappers
+kept for call-site convenience — splits the pre-generated workload into
+uniform rounds (core/workload.py) and drives an incremental `HTAPSession`;
+the open-system surface itself (`session.execute` / `session.query_batch`
+/ `session.advance_round`) lives in core/session.py and accepts arbitrary
+interleavings the batch shape cannot express (examples/htap_serve.py).
 
 Each run executes the workload *functionally* (every system computes real
 query answers — asserted equal across systems in tests/) while emitting
 cost events priced by the analytic hardware model (hwmodel.py).
 
-Timing models (``timing=`` on every driver, or REPRO_TIMING):
+Timing models (``timing=`` on every spec, or REPRO_TIMING):
   "phase"     whole-run phase buckets per island (hwmodel.HardwareModel.time)
   "timeline"  round-by-round discrete-event replay (core/timeline.py): every
               stage of a round is a tagged node in a dependency graph, so
@@ -32,27 +39,13 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
-
-from repro.core import engine
-from repro.core.application import (apply_updates, apply_updates_naive,
-                                    apply_updates_shards)
-from repro.core.backend import get_backend
-from repro.core.consistency import ConsistencyManager
-from repro.core.dsm import DSMReplica
 from repro.core.hwmodel import (CostLog, HardwareModel, HardwareParams,
                                 HB_PARAMS, HMC_PARAMS)
-from repro.core.mvcc import MVCCStore
-from repro.core.nsm import RowStore
-from repro.core.placement import hybrid
-from repro.core.schema import UpdateStream
-from repro.core.shipping import ship_updates, FINAL_LOG_CAPACITY
-from repro.core.snapshot import SnapshotStore
-from repro.core.timeline import resolve_timing, simulate_timeline
-
-# PIM-Only calibration: OLTP on in-order PIM cores pays extra cycles (no OoO
-# ILP for pointer-heavy txn code) even though more threads are available.
-PIM_TXN_CYCLE_FACTOR = 1.4
+from repro.core.session import (ALL_PRESETS, BASELINE_PRESETS,  # noqa: F401
+                                HTAPSession, PIM_TXN_CYCLE_FACTOR, PRESETS,
+                                SystemSpec, resolve_spec)
+from repro.core.timeline import simulate_timeline
+from repro.core.workload import split_queries, split_stream
 
 
 @dataclasses.dataclass
@@ -76,43 +69,6 @@ class RunResult:
     @property
     def ana_throughput(self) -> float:
         return self.n_ana / self.ana_seconds if self.ana_seconds > 0 else float("inf")
-
-
-def _split_stream(stream: UpdateStream, n_rounds: int) -> list[UpdateStream]:
-    n = len(stream)
-    bounds = np.linspace(0, n, n_rounds + 1).astype(int)
-    out = []
-    for r in range(n_rounds):
-        s = slice(bounds[r], bounds[r + 1])
-        out.append(UpdateStream(stream.thread_id[s], stream.commit_id[s],
-                                stream.op[s], stream.row[s], stream.col[s],
-                                stream.value[s]))
-    return out
-
-
-def _split_queries(queries, n_rounds):
-    bounds = np.linspace(0, len(queries), n_rounds + 1).astype(int)
-    return [queries[bounds[r]:bounds[r + 1]] for r in range(n_rounds)]
-
-
-def _resolve_islands(backend, n_shards, hw: HardwareParams):
-    """Resolve the execution backend (wrapping in ShardedBackend when
-    n_shards/REPRO_SHARDS asks for islands) and scale the hardware model to
-    the island count — each analytical island brings its own stack of
-    in-memory hardware (§4), so `hw.n_ana_islands` follows the shard count
-    unless the caller already set it."""
-    be = get_backend(backend, n_shards=n_shards)
-    islands = getattr(be, "n_shards", 1)
-    if islands > 1 and hw.n_ana_islands == 1:
-        hw = dataclasses.replace(hw, n_ana_islands=islands)
-    return be, hw
-
-
-def _cid_span(chunk: UpdateStream) -> tuple[int, int]:
-    """(first, last) commit id of a round's chunk (-1, -1 when empty)."""
-    if not len(chunk):
-        return -1, -1
-    return int(chunk.commit_id[0]), int(chunk.commit_id[-1])
 
 
 def _price(name: str, cost: CostLog, hw: HardwareParams, timing: str,
@@ -158,7 +114,89 @@ def _price(name: str, cost: CostLog, hw: HardwareParams, timing: str,
 
 
 # ---------------------------------------------------------------------------
-# Normalization baselines
+# The batch driver: uniform rounds through an HTAPSession
+# ---------------------------------------------------------------------------
+
+def run_spec(spec: SystemSpec, table, stream=None, queries=None,
+             n_rounds: int = 8) -> RunResult:
+    """Run a pre-generated workload through ``spec``'s system.
+
+    Splits the stream/queries into ``n_rounds`` uniform rounds and drives
+    an `HTAPSession` — the closed-workload shape every figure uses. The
+    normalization baselines ignore the side they don't model (Ideal-Txn
+    takes the whole stream in one round; Ana-Only answers each query
+    individually over the initial table).
+    """
+    session = HTAPSession(spec, table)
+    if spec.kind == "ideal_txn":
+        session.execute(stream)
+        return session.finish()
+    if spec.kind == "ana_only":
+        for q in list(queries or []):
+            session.query(q)
+        return session.finish()
+    queries = list(queries or [])
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(split_stream(stream, n_rounds),
+                split_queries(queries, n_rounds))):
+        if r:
+            session.advance_round()
+        session.execute(txn_chunk)
+        session.query_batch(q_chunk)
+    return session.finish()
+
+
+def run(system: str | SystemSpec, table, stream=None, queries=None,
+        n_rounds: int = 8, **overrides) -> RunResult:
+    """Run a preset (by name) or an explicit spec over a batch workload.
+
+    ``overrides`` refine the preset, e.g. ``run("Polynesia", t, s, q,
+    backend="pallas", n_shards=4, timing="timeline",
+    async_propagation=True)``.
+    """
+    return run_spec(resolve_spec(system, **overrides), table, stream,
+                    queries, n_rounds=n_rounds)
+
+
+def run_mixed_traffic(spec: SystemSpec, table, stream,
+                      arrivals) -> RunResult:
+    """Serve an *open* arrival schedule through ``spec``'s system.
+
+    ``arrivals`` is a `core.workload.mixed_traffic_schedule` result:
+    analytical queries from interleaved clients landing at arbitrary
+    positions inside the commit stream. The txn stream executes in
+    contiguous chunks up to each arrival's position, the arrival batch is
+    answered over exactly the data visible there, and every visibility
+    point closes a round (the boundary where synchronous propagation may
+    stall the next chunk). This is the scenario the closed batch API could
+    not express — its rounds are uniform by construction.
+    """
+    from repro.core.workload import arrival_batches, slice_stream
+    session = HTAPSession(spec, table)
+    cursor = 0
+    batches = arrival_batches(arrivals)
+    if batches and batches[-1][0] > len(stream):
+        # a schedule built for a different n_txn would silently clamp and
+        # answer queries over less data than their position promises
+        raise ValueError(
+            f"arrival position {batches[-1][0]} beyond the stream's "
+            f"{len(stream)} commits (schedule built with a different "
+            "n_txn?)")
+    for i, (pos, batch) in enumerate(batches):
+        if i:
+            session.advance_round()
+        session.execute(slice_stream(stream, cursor, pos))
+        cursor = pos
+        session.query_batch([a.query for a in batch])
+    if cursor < len(stream):
+        if batches:
+            session.advance_round()
+        session.execute(slice_stream(stream, cursor, len(stream)))
+    return session.finish()
+
+
+# ---------------------------------------------------------------------------
+# Per-system wrappers (batch call sites; specs do the configuration)
 # ---------------------------------------------------------------------------
 
 def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
@@ -168,43 +206,19 @@ def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
 
     `n_shards` is accepted for driver-API uniformity; with no analytical
     work there are no islands to shard."""
-    get_backend(backend, n_shards=n_shards)  # validate selection only
-    timing = resolve_timing(timing)
-    cost = CostLog()
-    store = RowStore(table)
-    lo, hi = _cid_span(stream)
-    with cost.tagged("r0:txn", "txn", round=0, n=len(stream),
-                     cid_lo=lo, cid_hi=hi):
-        store.execute(stream, cost)
-    return _price("Ideal-Txn", cost, hw, timing, len(stream), 0, [],
-                  concurrent_islands=False)
+    return run_spec(SystemSpec.ideal_txn(hw=hw, backend=backend,
+                                         n_shards=n_shards, timing=timing),
+                    table, stream)
 
 
 def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
                  backend=None, n_shards: int | None = None,
                  timing: str | None = None) -> RunResult:
     """Analytics alone on the multicore CPU over a DSM replica."""
-    be, hw = _resolve_islands(backend, n_shards, hw)
-    timing = resolve_timing(timing)
-    cost = CostLog()
-    replica = DSMReplica.from_table(table)
-    view = replica.columns
-    if getattr(be, "n_shards", 1) > 1:
-        # shard the read-only replica ONCE: the islands' resident shards
-        # for the whole run (no updates ever invalidate them here)
-        view = {c: be.shard_view(col) for c, col in replica.columns.items()}
-    results = []
-    for i, q in enumerate(queries):
-        with cost.tagged(f"q{i}:ana", "ana", round=0):
-            results.append(engine.run_query_dsm(view, q, cost,
-                                                on_pim=False, backend=be))
-    return _price("Ana-Only", cost, hw, timing, 0, len(queries), results,
-                  concurrent_islands=False)
+    return run_spec(SystemSpec.ana_only(hw=hw, backend=backend,
+                                        n_shards=n_shards, timing=timing),
+                    table, queries=queries)
 
-
-# ---------------------------------------------------------------------------
-# Single-instance systems (§3.1)
-# ---------------------------------------------------------------------------
 
 def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
               n_rounds: int = 8, zero_cost_snapshot: bool = False,
@@ -218,41 +232,11 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     `n_shards` is accepted for driver-API uniformity; a single instance has
     no analytical islands to shard (that's the point of the baseline).
     """
-    get_backend(backend, n_shards=n_shards)  # validate selection only
-    timing = resolve_timing(timing)
-    cost = CostLog()
-    store = RowStore(table)
-    snap = SnapshotStore(table)
-    results = []
-    prev_txn = None
-    for r, (txn_chunk, q_chunk) in enumerate(
-            zip(_split_stream(stream, n_rounds),
-                _split_queries(queries, n_rounds))):
-        txn_node = f"r{r}:txn"
-        lo, hi = _cid_span(txn_chunk)
-        with cost.tagged(txn_node, "txn", round=r,
-                         deps=(prev_txn,) if prev_txn else (),
-                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
-            store.execute(txn_chunk, cost)
-        prev_txn = txn_node
-        snap.data = store.data            # single instance: same storage
-        if txn_chunk.writes_mask().any():
-            snap.mark_dirty()
-        if q_chunk:
-            # the memcpy burns txn-island CPU -> the snapshot node lands in
-            # the txn lane, which is exactly the Fig. 1-right stall
-            snap_node = f"r{r}:snap"
-            with cost.tagged(snap_node, "snapshot", round=r,
-                             deps=(txn_node,)):
-                view = snap.take_snapshot_if_needed(
-                    None if zero_cost_snapshot else cost)
-            for i, q in enumerate(q_chunk):
-                with cost.tagged(f"r{r}:ana{i}", "ana", round=r,
-                                 deps=(snap_node,)):
-                    results.append(engine.run_query_nsm(view, q, cost,
-                                                        backend=backend))
-    return _price("SI-SS", cost, hw, timing, len(stream), len(queries),
-                  results, stats={"snapshots": snap.snapshots_taken})
+    return run_spec(SystemSpec.si_ss(hw=hw,
+                                     zero_cost_snapshot=zero_cost_snapshot,
+                                     backend=backend, n_shards=n_shards,
+                                     timing=timing),
+                    table, stream, queries, n_rounds=n_rounds)
 
 
 def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
@@ -269,57 +253,11 @@ def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     PIM-analog kernels nor the island sharding model — the numpy path
     always executes on the single instance.
     """
-    get_backend(backend, n_shards=n_shards)
-    timing = resolve_timing(timing)
-    cost = CostLog()
-    store = MVCCStore(table)
-    results = []
-    prev_txn = None
-    for r, (txn_chunk, q_chunk) in enumerate(
-            zip(_split_stream(stream, n_rounds),
-                _split_queries(queries, n_rounds))):
-        # analytics run CONCURRENTLY with this round's transactions: their
-        # snapshot timestamp is the round start, so every version committed
-        # during the round is "newer" and must be hopped over (§3.1). On
-        # the timeline the query nodes therefore depend only on the
-        # *previous* round's txn node.
-        ts = int(txn_chunk.commit_id[0]) - 1 if len(txn_chunk) else 0
-        txn_node = f"r{r}:txn"
-        lo, hi = _cid_span(txn_chunk)
-        with cost.tagged(txn_node, "txn", round=r,
-                         deps=(prev_txn,) if prev_txn else (),
-                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
-            store.execute(txn_chunk, cost)
-        hops = not zero_cost_mvcc
-        for i, q in enumerate(q_chunk):
-            with cost.tagged(f"r{r}:ana{i}", "ana", round=r,
-                             deps=(prev_txn,) if r else ()):
-                fvals = store.read_column_at(q.filter_col, ts, cost, hops)
-                avals = store.read_column_at(q.agg_col, ts, cost, hops)
-                mask = (fvals >= q.lo) & (fvals <= q.hi)
-                res = int(avals[mask].astype(np.int64).sum())
-                if q.join_col is not None:
-                    jv = store.read_column_at(q.join_col, ts, cost, hops)
-                    uv, counts = np.unique(jv, return_counts=True)
-                    lv, lcounts = np.unique(jv[mask], return_counts=True)
-                    common, li, ri = np.intersect1d(lv, uv,
-                                                    return_indices=True)
-                    res += int((lcounts[li].astype(np.int64)
-                                * counts[ri]).sum())
-                results.append(res)
-                # scan cycles beyond chain traversal (already priced in
-                # read_column_at)
-                cost.add(phase="ana", island="ana", resource="cpu",
-                         cycles=store.base.shape[0]
-                         * engine.CPU_CYCLES_PER_ROW)
-        prev_txn = txn_node
-    return _price("SI-MVCC", cost, hw, timing, len(stream), len(queries),
-                  results, stats={"versions": store.n_versions})
+    return run_spec(SystemSpec.si_mvcc(hw=hw, zero_cost_mvcc=zero_cost_mvcc,
+                                       backend=backend, n_shards=n_shards,
+                                       timing=timing),
+                    table, stream, queries, n_rounds=n_rounds)
 
-
-# ---------------------------------------------------------------------------
-# Multiple-instance systems (§3.2) and Polynesia (§4-§7)
-# ---------------------------------------------------------------------------
 
 def run_multi_instance(
     table, stream, queries,
@@ -337,156 +275,19 @@ def run_multi_instance(
     timing: str | None = None,
     async_propagation: bool = False,
 ) -> RunResult:
-    """Shared driver for MI+SW / MI+SW+HB / PIM-Only / Polynesia.
-
-    The flags place each mechanism on the CPU island or the PIM islands:
-      MI+SW      : all False (software optimizations, CPU everywhere)
-      MI+SW+HB   : all False with hw=HB_PARAMS
-      PIM-Only   : analytics_on_pim=txn_on_pim=True, propagation on PIM cores
-      Polynesia  : propagation_on_pim=analytics_on_pim=True (accelerators)
-
-    `backend` selects the execution backend for the whole hot path (update
-    shipping/application, snapshots, analytical scans); answers are
-    bit-identical across backends, only what executes the operators changes.
-    `n_shards` > 1 scales analytics out over that many analytical islands:
-    the DSM is row-sharded (ShardedBackend), updates route to owning
-    islands, partial aggregates reduce exactly, and the hardware model gets
-    island-scaled ana-side rates — answers stay bit-identical to n_shards=1.
-
-    `timing` selects the pricing model (see module docstring).
-    `async_propagation=True` (timeline only) removes the round-boundary
-    stall: the txn island never waits for update application, ship batches
-    are released as their updates commit, and freshness (commit-to-
-    visibility lag) absorbs the difference — exactly §5/§6's contract.
-    """
-    be, hw = _resolve_islands(backend, n_shards, hw)
-    timing = resolve_timing(timing)
-    if async_propagation and timing != "timeline":
-        raise ValueError(
-            "async_propagation requires timing='timeline' (the phase-bucket "
-            "model has no round boundaries to overlap)")
-    cost = CostLog()
-    store = RowStore(table)
-    replica = DSMReplica.from_table(table)
-    cons = ConsistencyManager(replica, cost, on_pim=analytics_on_pim,
-                              backend=be)
-    placement = hybrid(hw.n_vaults * hw.n_stacks)
-    results = []
-    applications = 0
-    prev_txn = None
-    prev_round_prop: tuple[str, ...] = ()
-    vis_node: dict[int, str] = {}   # col -> apply node of its last Phase-2 swap
-    ship_i = 0
-    for r, (txn_chunk, q_chunk) in enumerate(
-            zip(_split_stream(stream, n_rounds),
-                _split_queries(queries, n_rounds))):
-        # -- transactional island -----------------------------------------
-        txn_node = f"r{r}:txn"
-        lo, hi = _cid_span(txn_chunk)
-        with cost.tagged(txn_node, "txn", round=r,
-                         deps=(prev_txn,) if prev_txn else (),
-                         sync_deps=prev_round_prop,
-                         n=len(txn_chunk), cid_lo=lo, cid_hi=hi):
-            if txn_on_pim:
-                store.execute(txn_chunk)  # functional only; price on PIM:
-                n = len(txn_chunk)
-                cost.add(phase="txn", island="txn", resource="pim_txn",
-                         cycles=n * RowStore.CYCLES_PER_TXN
-                         * PIM_TXN_CYCLE_FACTOR,
-                         bytes_local=n * store.n_cols * 4
-                         * RowStore.MISS_FRACTION)
-            else:
-                store.execute(txn_chunk, cost)
-        prev_txn = txn_node
-        round_prop: list[str] = []
-
-        # -- update propagation (§5): ship when final log capacity reached --
-        while store.pending_updates >= FINAL_LOG_CAPACITY or (
-                store.pending_updates and q_chunk):
-            # The final log is a hardware buffer (§5.1's merge unit): when
-            # propagation runs on the in-memory units, each ship batch is
-            # at most one final log's worth — larger capacity -> fewer,
-            # larger batches -> staler visible data. The software baseline
-            # has no such structure and ships its whole backlog at once.
-            logs = store.drain_logs(
-                limit=FINAL_LOG_CAPACITY if propagation_on_pim else None)
-            ship_node = f"r{r}:ship{ship_i}"
-            ship_cost = None if zero_cost_propagation else cost
-            # in sync timing the batch waits for the whole round's txn
-            # execution; async releases it at its last update's commit time
-            with cost.tagged(ship_node, "ship", round=r,
-                             sync_deps=(txn_node,)):
-                buffers = ship_updates(logs, store.n_cols, ship_cost,
-                                       on_pim=propagation_on_pim, backend=be)
-            islands = getattr(be, "n_shards", 1)
-            for col_id, entries in buffers.items():
-                old = replica.columns[col_id]
-                app_cost = (None if (shipping_only or zero_cost_propagation)
-                            else cost)
-                apply_node = f"{ship_node}:c{col_id}"
-                with cost.tagged(apply_node, "apply", round=r,
-                                 deps=(ship_node,), col=col_id):
-                    if optimized_application and islands > 1:
-                        # each island applies its own row range; the round
-                        # becomes visible only as a complete shard set
-                        # (all-or-none Phase-2 swap)
-                        shards = apply_updates_shards(
-                            old, entries, app_cost,
-                            on_pim=propagation_on_pim, backend=be)
-                        cons.on_update_shards(col_id, shards)
-                    elif optimized_application:
-                        cons.on_update(col_id, apply_updates(
-                            old, entries, app_cost,
-                            on_pim=propagation_on_pim, backend=be))
-                    else:
-                        # the naive software baseline rebuilds a whole column
-                        cons.on_update(col_id, apply_updates_naive(
-                            old, entries, app_cost))
-                vis_node[col_id] = apply_node
-                round_prop.append(apply_node)
-                applications += 1
-            ship_i += 1
-
-        # -- analytical island (§6 consistency + §7 engine) -----------------
-        # Queries over the same column set run as one fused multi-query scan
-        # (one kernel launch per group on the accelerator backend). Every
-        # query still pins its own snapshot handle, and no update lands
-        # mid-round, so the group shares a single consistent view; answers
-        # are emitted in the original query order. On island backends the
-        # pinned read is a resident ShardedView (cons.read_scan): each
-        # column is sharded once at its first pin of the round, every
-        # group reuses the same view, and all islands execute in one
-        # batched launch. On the timeline a group depends only on its
-        # pinned snapshot's creation node — round r+1's propagation
-        # overlaps analytics over round r.
-        round_results: dict[int, int] = {}
-        for g, group in enumerate(engine.group_queries(q_chunk)):
-            cols = group[0].columns
-            snap_node = f"r{r}:snap{g}"
-            snap_deps = tuple(dict.fromkeys(
-                vis_node[c] for c in cols if c in vis_node))
-            with cost.tagged(snap_node, "snapshot", round=r, deps=snap_deps):
-                handles = [cons.begin_query(q.columns) for q in group]
-                view = {c: cons.read_scan(handles[0], c) for c in cols}
-            with cost.tagged(f"r{r}:ana{g}", "ana", round=r,
-                             deps=(snap_node,)):
-                answers = engine.run_query_group_dsm(
-                    view, group, cost, placement, on_pim=analytics_on_pim,
-                    backend=be)
-            for q, a in zip(group, answers):
-                round_results[id(q)] = a
-            for h in handles:
-                cons.end_query(h)
-        results.extend(round_results[id(q)] for q in q_chunk)
-        prev_round_prop = tuple(round_prop)
-    return _price(name, cost, hw, timing, len(stream), len(queries), results,
-                  stats={"applications": applications,
-                         "snapshots": cons.snapshots_created,
-                         "shared": cons.snapshots_shared,
-                         "islands": getattr(be, "n_shards", 1),
-                         "sharded_views": cons.views_built,
-                         "views_shared": cons.views_shared},
-                  async_propagation=async_propagation)
+    """Shared driver for the MI family (MI+SW / MI+SW+HB / PIM-Only /
+    Polynesia) — the keyword surface over ``SystemSpec(kind=
+    "multi_instance")``; prefer the presets for new call sites."""
+    spec = SystemSpec(name=name, kind="multi_instance", hw=hw,
+                      propagation_on_pim=propagation_on_pim,
+                      analytics_on_pim=analytics_on_pim,
+                      txn_on_pim=txn_on_pim,
+                      optimized_application=optimized_application,
+                      shipping_only=shipping_only,
+                      zero_cost_propagation=zero_cost_propagation,
+                      backend=backend, n_shards=n_shards, timing=timing,
+                      async_propagation=async_propagation)
+    return run_spec(spec, table, stream, queries, n_rounds=n_rounds)
 
 
 def run_mi_sw(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
@@ -508,13 +309,3 @@ def run_polynesia(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
     return run_multi_instance(table, stream, queries, hw, name="Polynesia",
                               propagation_on_pim=True, analytics_on_pim=True,
                               **kw)
-
-
-ALL_SYSTEMS = {
-    "SI-SS": run_si_ss,
-    "SI-MVCC": run_si_mvcc,
-    "MI+SW": run_mi_sw,
-    "MI+SW+HB": run_mi_sw_hb,
-    "PIM-Only": run_pim_only,
-    "Polynesia": run_polynesia,
-}

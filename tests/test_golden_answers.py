@@ -26,14 +26,14 @@ def _golden():
         return json.load(f)
 
 
-@pytest.mark.parametrize("name", sorted(htap.ALL_SYSTEMS))
+@pytest.mark.parametrize("name", sorted(htap.PRESETS))
 def test_driver_matches_golden_answers(small_workload, name):
     """Runs under the session-default backend (numpy locally; the CI matrix
     repeats the suite with REPRO_BACKEND=pallas), so a silent answer drift
     on either backend fails here before the bench gate sees it."""
     table, stream, queries = small_workload
     golden = _golden()["results"][name]
-    res = htap.ALL_SYSTEMS[name](table, stream, queries)
+    res = htap.run(name, table, stream, queries)
     assert [int(a) for a in res.results] == golden
 
 
@@ -46,7 +46,7 @@ def test_ana_only_matches_golden_answers(small_workload):
 
 def test_golden_fixture_shape():
     golden = _golden()
-    assert set(golden["results"]) == set(htap.ALL_SYSTEMS) | {"Ana-Only"}
+    assert set(golden["results"]) == set(htap.PRESETS) | {"Ana-Only"}
     n = {len(v) for v in golden["results"].values()}
     assert n == {12}, "every driver answers the 12 standard queries"
     # the three legitimate consistency points: round-end (SI-SS + the MI
@@ -76,9 +76,9 @@ def _regenerate() -> None:
                     "8000 txn, 12 queries, default driver args (n_rounds=8)",
         "results": {
             name: [int(a) for a in
-                   fn(table, stream, queries,
-                      backend="numpy", n_shards=1).results]
-            for name, fn in htap.ALL_SYSTEMS.items()
+                   htap.run(name, table, stream, queries,
+                            backend="numpy", n_shards=1).results]
+            for name in htap.PRESETS
         },
     }
     golden["results"]["Ana-Only"] = [

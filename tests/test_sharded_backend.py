@@ -323,16 +323,17 @@ def test_per_shard_swap_all_or_none(rng):
 @pytest.fixture(scope="module")
 def unsharded_runs(small_workload):
     table, stream, queries = small_workload
-    return {name: fn(table, stream, queries, n_rounds=4, backend="numpy")
-            for name, fn in htap.ALL_SYSTEMS.items()}
+    return {name: htap.run(name, table, stream, queries, n_rounds=4,
+                     backend="numpy")
+            for name in htap.PRESETS}
 
 
-@pytest.mark.parametrize("system", list(htap.ALL_SYSTEMS))
+@pytest.mark.parametrize("system", list(htap.PRESETS))
 def test_all_drivers_sharded_bit_identical(small_workload, unsharded_runs,
                                            system):
     table, stream, queries = small_workload
-    sharded = htap.ALL_SYSTEMS[system](table, stream, queries, n_rounds=4,
-                                       backend="numpy", n_shards=4)
+    sharded = htap.run(system, table, stream, queries, n_rounds=4,
+                       backend="numpy", n_shards=4)
     base = unsharded_runs[system]
     assert sharded.results == base.results
     assert (sharded.n_txn, sharded.n_ana) == (base.n_txn, base.n_ana)
@@ -349,7 +350,7 @@ def test_polynesia_pallas_sharded_matches_numpy(small_workload,
 
 
 @pytest.mark.parametrize("n_shards", [1, 2, 4])
-@pytest.mark.parametrize("system", list(htap.ALL_SYSTEMS))
+@pytest.mark.parametrize("system", list(htap.PRESETS))
 def test_all_drivers_pallas_vmapped_bit_identical(small_workload,
                                                   unsharded_runs, system,
                                                   n_shards):
@@ -357,8 +358,8 @@ def test_all_drivers_pallas_vmapped_bit_identical(small_workload,
     == vmapped pallas@N for N in {1, 2, 4} — the batched one-launch scan
     plane never changes an answer."""
     table, stream, queries = small_workload
-    run = htap.ALL_SYSTEMS[system](table, stream, queries, n_rounds=4,
-                                   backend="pallas", n_shards=n_shards)
+    run = htap.run(system, table, stream, queries, n_rounds=4,
+                   backend="pallas", n_shards=n_shards)
     base = unsharded_runs[system]
     assert run.results == base.results
     assert (run.n_txn, run.n_ana) == (base.n_txn, base.n_ana)

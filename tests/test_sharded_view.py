@@ -124,6 +124,39 @@ def test_pinned_view_survives_swap_then_dies(rng):
         be.filter_agg_batch(view, view, [(0, 500)])
 
 
+def test_join_build_side_cached_on_view(rng):
+    """The join build side (right-dictionary occurrence counts) is folded
+    into the view: computed once, reused by every join group probing the
+    same pinned snapshot, correct vs the unsharded reference, and dead
+    with the view after the Phase-2 swap."""
+    rep = _replica(rng)
+    be = ShardedBackend("numpy", 3)
+    ref = NumpyBackend()
+    cons = ConsistencyManager(rep, backend=be)
+    h = cons.begin_query([0, 1])
+    view = cons.read_scan(h, 0)
+    assert view._dict_counts is None          # lazy: no build yet
+    expect = be.hash_join_count(view, view)
+    assert expect == ref.hash_join_count(cons.read(h, 0), cons.read(h, 0))
+    build = view._dict_counts
+    assert build is not None                  # first join built the cache
+    # repeated join-query groups reuse the same build object
+    mask = np.zeros(view.n_rows, dtype=bool)
+    mask[::2] = True
+    be.hash_join_count(view, view, left_mask=mask)
+    assert be.hash_join_count(view, view) == expect
+    assert view.dict_counts() is build
+    # counts are the valid-row histogram, summed across islands
+    np.testing.assert_array_equal(
+        build, np.bincount(np.asarray(cons.read(h, 0).codes),
+                           minlength=view.dict_size))
+    cons.end_query(h)
+    cons.on_update(0, apply_updates(rep.columns[0], _mods(rng, view, 10, 0),
+                                    backend="numpy"))
+    with pytest.raises(StaleShardedViewError):
+        view.dict_counts()                    # the build died with the view
+
+
 # ---------------------------------------------------------------------------
 # hypothesis sweep: random interleavings of swaps and pinned scans
 # ---------------------------------------------------------------------------

@@ -21,8 +21,8 @@ def workload():
 @pytest.fixture(scope="module")
 def results(workload):
     table, stream, queries = workload
-    out = {name: fn(table, stream, queries)
-           for name, fn in htap.ALL_SYSTEMS.items()}
+    out = {name: htap.run(name, table, stream, queries)
+           for name in htap.PRESETS}
     out["Ideal-Txn"] = htap.run_ideal_txn(table, stream)
     out["Ana-Only"] = htap.run_ana_only(table, queries)
     return out
@@ -34,7 +34,7 @@ def test_all_systems_same_query_answers(results):
     round's transactions), so it answers over strictly STALER data: checked
     separately against its own oracle in test_mvcc.py; here we check its
     answers differ only because of freshness (same count, valid ints)."""
-    names = [n for n in htap.ALL_SYSTEMS if n != "SI-MVCC"]
+    names = [n for n in htap.PRESETS if n != "SI-MVCC"]
     base = results[names[0]].results
     for n in names[1:]:
         assert results[n].results == base, n

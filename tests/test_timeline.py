@@ -28,17 +28,14 @@ def _tiny_workload(n_rows=1000, n_cols=3, n_txn=2000, n_queries=6):
     return table, stream, queries
 
 
-def _run(fn, table, stream, queries, **kw):
-    if fn is htap.run_ideal_txn:
-        return fn(table, stream, **kw)
-    if fn is htap.run_ana_only:
-        return fn(table, queries, **kw)
-    return fn(table, stream, queries, **kw)
+def _run(name, table, stream, queries, **kw):
+    # htap.run routes every preset (systems + baselines) through one
+    # session-driven driver; baselines ignore the side they don't model
+    return htap.run(name, table, stream, queries, **kw)
 
 
-ALL_DRIVERS = dict(htap.ALL_SYSTEMS,
-                   **{"Ideal-Txn": htap.run_ideal_txn,
-                      "Ana-Only": htap.run_ana_only})
+ALL_DRIVERS = sorted(htap.ALL_PRESETS)
+MI_FAMILY = ("MI+SW", "MI+SW+HB", "PIM-Only", "Polynesia")
 
 
 # ---------------------------------------------------------------------------
@@ -46,23 +43,21 @@ ALL_DRIVERS = dict(htap.ALL_SYSTEMS,
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("n_shards", [1, 4])
-@pytest.mark.parametrize("name", sorted(ALL_DRIVERS))
+@pytest.mark.parametrize("name", ALL_DRIVERS)
 def test_timeline_answers_bit_identical(small_workload, name, n_shards):
     """timing="timeline" (sync + async where supported) answers == phase
     answers, on the session-default backend (the CI matrix runs this under
     both numpy and pallas via REPRO_BACKEND) x shards {1, 4}."""
     table, stream, queries = small_workload
-    fn = ALL_DRIVERS[name]
-    phase = _run(fn, table, stream, queries, n_shards=n_shards,
+    phase = _run(name, table, stream, queries, n_shards=n_shards,
                  timing="phase")
-    tl = _run(fn, table, stream, queries, n_shards=n_shards,
+    tl = _run(name, table, stream, queries, n_shards=n_shards,
               timing="timeline")
     assert tl.results == phase.results
     assert tl.n_txn == phase.n_txn and tl.n_ana == phase.n_ana
     assert tl.energy_joules == phase.energy_joules  # energy is timing-free
-    if fn is htap.run_multi_instance or name in ("MI+SW", "MI+SW+HB",
-                                                 "PIM-Only", "Polynesia"):
-        asy = _run(fn, table, stream, queries, n_shards=n_shards,
+    if name in MI_FAMILY:
+        asy = _run(name, table, stream, queries, n_shards=n_shards,
                    timing="timeline", async_propagation=True)
         assert asy.results == phase.results
 
@@ -75,10 +70,10 @@ def test_timeline_answers_all_backends_slow(small_workload, backend,
     """Explicit {numpy, pallas} x shards {1, 4} sweep over all drivers
     (the weekly job; tier-1 covers the same matrix through REPRO_BACKEND)."""
     table, stream, queries = small_workload
-    for name, fn in ALL_DRIVERS.items():
-        phase = _run(fn, table, stream, queries, backend=backend,
+    for name in ALL_DRIVERS:
+        phase = _run(name, table, stream, queries, backend=backend,
                      n_shards=n_shards, timing="phase")
-        tl = _run(fn, table, stream, queries, backend=backend,
+        tl = _run(name, table, stream, queries, backend=backend,
                   n_shards=n_shards, timing="timeline")
         assert tl.results == phase.results, name
 
@@ -126,11 +121,12 @@ def test_freshness_grows_with_final_log_capacity(small_workload,
                                                  monkeypatch):
     """Bigger final log -> fewer, larger ship batches -> updates wait
     longer for their batch to fill -> staler visible data."""
+    from repro.core import session as session_mod
     table, stream, queries = small_workload
     means = []
     answers = None
     for cap in (64, 256, 1024):
-        monkeypatch.setattr(htap, "FINAL_LOG_CAPACITY", cap)
+        monkeypatch.setattr(session_mod, "FINAL_LOG_CAPACITY", cap)
         r = htap.run_polynesia(table, stream, queries, timing="timeline",
                                async_propagation=True)
         if answers is None:

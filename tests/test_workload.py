@@ -1,0 +1,135 @@
+"""Workload chunking + arrival-process utilities (core/workload.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import engine, schema, workload
+
+
+def _stream(n, n_threads=4, seed=0):
+    rng = np.random.default_rng(seed)
+    sch = schema.make_schema("t", 3, 32)
+    return schema.gen_update_stream(rng, sch, 100, n, n_threads=n_threads)
+
+
+# ---------------------------------------------------------------------------
+# split_stream / split_queries
+# ---------------------------------------------------------------------------
+
+def test_split_stream_covers_in_order():
+    stream = _stream(101)
+    chunks = workload.split_stream(stream, 7)
+    assert len(chunks) == 7
+    # contiguous cover: concatenated commit ids == the original stream
+    cat = np.concatenate([c.commit_id for c in chunks])
+    assert np.array_equal(cat, stream.commit_id)
+    # uniform: sizes differ by at most one
+    sizes = [len(c) for c in chunks]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_split_stream_more_rounds_than_entries():
+    stream = _stream(3)
+    chunks = workload.split_stream(stream, 8)
+    assert len(chunks) == 8
+    assert sum(len(c) for c in chunks) == 3
+    assert any(len(c) == 0 for c in chunks)   # empty rounds are legal
+
+
+def test_split_stream_empty_stream():
+    stream = _stream(0)
+    chunks = workload.split_stream(stream, 4)
+    assert len(chunks) == 4 and all(len(c) == 0 for c in chunks)
+
+
+def test_split_stream_single_round_is_identity():
+    stream = _stream(17)
+    [only] = workload.split_stream(stream, 1)
+    assert np.array_equal(only.commit_id, stream.commit_id)
+
+
+@pytest.mark.parametrize("bad", [0, -1])
+def test_split_validates_n_rounds(bad):
+    with pytest.raises(ValueError, match="n_rounds"):
+        workload.split_stream(_stream(4), bad)
+    with pytest.raises(ValueError, match="n_rounds"):
+        workload.split_queries([], bad)
+
+
+def test_split_queries_edges():
+    queries = engine.gen_queries(np.random.default_rng(0), 5, 3)
+    chunks = workload.split_queries(queries, 3)
+    assert [q for c in chunks for q in c] == queries
+    assert len(workload.split_queries([], 4)) == 4
+    many = workload.split_queries(queries, 9)
+    assert sum(len(c) for c in many) == 5
+
+
+def test_slice_stream_subrange():
+    stream = _stream(20)
+    part = workload.slice_stream(stream, 5, 12)
+    assert len(part) == 7
+    assert np.array_equal(part.commit_id, stream.commit_id[5:12])
+
+
+# ---------------------------------------------------------------------------
+# mixed-traffic arrival process
+# ---------------------------------------------------------------------------
+
+def _clients(n_clients=3, n_queries=16):
+    return [engine.gen_queries(np.random.default_rng(100 + c), n_queries, 3)
+            for c in range(n_clients)]
+
+
+def test_mixed_traffic_deterministic_and_sorted():
+    clients = _clients()
+    a1 = workload.mixed_traffic_schedule(np.random.default_rng(42), clients,
+                                         n_txn=10_000, txn_rate=1e6,
+                                         query_rates=[500.0, 900.0, 1300.0])
+    a2 = workload.mixed_traffic_schedule(np.random.default_rng(42), clients,
+                                         n_txn=10_000, txn_rate=1e6,
+                                         query_rates=[500.0, 900.0, 1300.0])
+    assert a1 == a2                      # seeded: bit-identical schedules
+    assert a1, "rates x horizon should admit at least one arrival"
+    times = [a.time for a in a1]
+    assert times == sorted(times)
+    horizon = 10_000 / 1e6
+    for a in a1:
+        assert 0.0 < a.time <= horizon
+        assert 0 <= a.position <= 10_000
+        assert a.client in (0, 1, 2)
+
+
+def test_mixed_traffic_load_scales_with_rate():
+    clients = _clients(n_clients=1, n_queries=256)
+    served = []
+    for rate in (200.0, 800.0, 3200.0):
+        arr = workload.mixed_traffic_schedule(
+            np.random.default_rng(1), clients, n_txn=50_000, txn_rate=1e6,
+            query_rates=[rate])
+        served.append(len(arr))
+    assert served[0] < served[1] < served[2]
+
+
+def test_mixed_traffic_validation():
+    clients = _clients(2)
+    rng = np.random.default_rng(0)
+    with pytest.raises(ValueError, match="clients"):
+        workload.mixed_traffic_schedule(rng, clients, 100, 1e6, [1.0])
+    with pytest.raises(ValueError, match="txn_rate"):
+        workload.mixed_traffic_schedule(rng, clients, 100, 0.0, [1.0, 1.0])
+    with pytest.raises(ValueError, match="rate"):
+        workload.mixed_traffic_schedule(rng, clients, 100, 1e6, [1.0, -2.0])
+
+
+def test_arrival_batches_group_by_position():
+    clients = _clients()
+    arr = workload.mixed_traffic_schedule(np.random.default_rng(3), clients,
+                                          n_txn=5_000, txn_rate=1e6,
+                                          query_rates=[2e3, 2e3, 2e3])
+    batches = workload.arrival_batches(arr)
+    positions = [p for p, _ in batches]
+    assert positions == sorted(set(positions))   # ordered, deduplicated
+    assert sum(len(b) for _, b in batches) == len(arr)
+    for pos, batch in batches:
+        assert all(a.position == pos for a in batch)

@@ -1,0 +1,162 @@
+"""Per-op-family kernel microbenchmarks: cold (first call, includes
+trace+compile) vs warm (steady-state, compile caches hot) device timings.
+
+Each family drives its public ops-layer wrapper — the exact entry points
+the execution backends dispatch to — on a fixed seeded workload sized like
+the CI benchmark, so the numbers line up with the `wall_s` column of
+``python -m benchmarks.run ci``. Results are synced with
+``jax.block_until_ready`` (host-returning wrappers sync implicitly); warm
+time is the median of ``--reps`` repeats.
+
+Usage: python -m benchmarks.microbench [--json=PATH] [--reps=N]
+
+Writes a JSON payload (default BENCH_micro.json) with per-family
+``{cold_s, warm_s, reps}`` plus the resolved kernel mode and platform;
+tools/check_bench.py --micro gates the warm column against per-family
+budgets.
+"""
+
+from __future__ import annotations
+
+import json
+import statistics
+import sys
+import time
+
+import numpy as np
+
+USAGE = "usage: python -m benchmarks.microbench [--json=PATH] [--reps=N]"
+
+_RNG_SEED = 0
+N_ROWS = 4096          # ~CI workload scale
+N_SHARDS = 4
+DICT_K = 64
+N_QUERIES = 8
+
+
+def _sync(out):
+    import jax
+    return jax.block_until_ready(out)
+
+
+def _families():
+    """name -> zero-arg callable running one representative dispatch.
+
+    Input arrays are built once (outside the timed region) so the timings
+    cover the kernel wrapper: padding, the traced call, and the host
+    reassembly — the same work a session round pays per dispatch.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.bitonic_sort import sort_rows
+    from repro.kernels.dict_ops import (scan_filter_agg_batch,
+                                        scan_filter_agg_sharded)
+    from repro.kernels.hash_probe import (build_table, probe, probe_sharded,
+                                          scan_filter_agg_join,
+                                          scan_filter_agg_join_sharded)
+    from repro.kernels.merge_runs import merge_sorted_runs
+    from repro.kernels.snapshot_copy import snapshot_copy
+
+    rng = np.random.default_rng(_RNG_SEED)
+    fc = jnp.asarray(rng.integers(0, DICT_K, N_ROWS).astype(np.int32))
+    ac = jnp.asarray(rng.integers(0, DICT_K, N_ROWS).astype(np.int32))
+    jc = jnp.asarray(rng.integers(0, DICT_K, N_ROWS).astype(np.int32))
+    valid = jnp.asarray(rng.random(N_ROWS) < 0.9)
+    jvalid = jnp.asarray(rng.random(N_ROWS) < 0.9)
+    adict = jnp.asarray(rng.integers(0, 10**6, DICT_K).astype(np.int32))
+    rcount = jnp.asarray(np.bincount(
+        np.asarray(jc)[np.asarray(jvalid)], minlength=DICT_K
+    ).astype(np.int32))
+    bounds = [(q, q + DICT_K // 2) for q in range(N_QUERIES)]
+
+    width = N_ROWS // N_SHARDS
+    shape = (N_SHARDS, width)
+    sfc = fc.reshape(shape)
+    sac = ac.reshape(shape)
+    sjc = jc.reshape(shape)
+    svalid = valid.reshape(shape)
+    sjvalid = jvalid.reshape(shape)
+
+    dvals = rng.choice(np.arange(1, 10**6, dtype=np.int32), 2048,
+                       replace=False)
+    table = build_table(dvals, np.arange(len(dvals), dtype=np.int32))
+    queries = jnp.asarray(rng.choice(dvals, N_ROWS).astype(np.int32))
+    query_shards = [np.asarray(queries)[s::N_SHARDS] for s in range(N_SHARDS)]
+
+    runs = [np.sort(rng.integers(0, 1 << 40, 512).astype(np.int64))
+            for _ in range(8)]
+    sort_in = jnp.asarray(rng.integers(0, 1 << 30,
+                                       (8, 1024)).astype(np.int32))
+    src = jnp.asarray(rng.integers(0, DICT_K, 65536).astype(np.int32))
+    prev = jnp.asarray(np.asarray(src))
+    dirty = jnp.asarray((rng.random(8) < 0.5).astype(np.int32))
+
+    return {
+        "scan": lambda: scan_filter_agg_batch(fc, ac, valid, adict, bounds),
+        "scan_sharded": lambda: scan_filter_agg_sharded(
+            sfc, sac, svalid, adict, bounds),
+        "scan_join": lambda: scan_filter_agg_join(
+            fc, ac, jc, valid, jvalid, adict, rcount, bounds),
+        "scan_join_sharded": lambda: scan_filter_agg_join_sharded(
+            sfc, sac, sjc, svalid, sjvalid, adict, rcount, bounds),
+        "probe": lambda: _sync(probe(table, queries)),
+        "probe_sharded": lambda: probe_sharded(table, query_shards),
+        "merge_runs": lambda: merge_sorted_runs(runs),
+        "sort_rows": lambda: _sync(sort_rows(sort_in)),
+        "snapshot_copy": lambda: _sync(snapshot_copy(src, prev, dirty)),
+    }
+
+
+def run(reps: int = 20) -> dict:
+    import jax
+
+    from repro.kernels.common import kernel_mode
+
+    families = {}
+    for name, fn in _families().items():
+        t0 = time.perf_counter()
+        fn()
+        cold_s = time.perf_counter() - t0
+        samples = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            samples.append(time.perf_counter() - t0)
+        families[name] = {
+            "cold_s": cold_s,
+            "warm_s": statistics.median(samples),
+            "reps": reps,
+        }
+    return {
+        "platform": jax.default_backend(),
+        "kernel_mode": kernel_mode(),
+        "families": families,
+    }
+
+
+def main() -> None:
+    json_path = "BENCH_micro.json"
+    reps = 20
+    for a in sys.argv[1:]:
+        if a.startswith("--json="):
+            json_path = a.split("=", 1)[1]
+        elif a.startswith("--reps="):
+            try:
+                reps = int(a.split("=", 1)[1])
+            except ValueError:
+                sys.exit(f"bad --reps value; {USAGE}")
+        else:
+            sys.exit(f"unknown option {a!r}; {USAGE}")
+    payload = run(reps=reps)
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {json_path} (mode={payload['kernel_mode']}, "
+          f"platform={payload['platform']})")
+    print("family,cold_us,warm_us")
+    for name, m in sorted(payload["families"].items()):
+        print(f"{name},{m['cold_s'] * 1e6:.1f},{m['warm_s'] * 1e6:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -87,19 +87,28 @@ def ci_bench(json_path: str) -> None:
     answers = None
     for label, kwargs in CI_MATRIX:
         table, stream, queries = ci_workload()
-        # cold pass: counts kernel dispatches (and takes the jit compiles)
+        # cold pass: counts kernel dispatches and eats the jit compiles;
+        # its wall clock is reported separately (cold_s) so compile cost
+        # stays visible without polluting the steady-state column
         from repro.core.backend import counting_kernel_calls
+        t0 = time.perf_counter()
         with counting_kernel_calls() as counts:
             res = _run_polynesia(table, stream, queries, 4, **dict(kwargs))
-        # warm pass: the measured wall-clock column. Compile caches are
-        # hot, so this is steady-state execution time — stable enough for
-        # the (still generous, 30%) gate in tools/check_bench.py.
-        t0 = time.perf_counter()
-        res2 = _run_polynesia(table, stream, queries, 4, **dict(kwargs))
-        wall_s = time.perf_counter() - t0
-        if res2.results != res.results:
-            sys.exit(f"CI bench: {label} warm-run answers diverged — "
-                     "nondeterministic execution")
+        cold_s = time.perf_counter() - t0
+        # warm passes: the measured wall-clock column. Compile caches are
+        # hot, so each pass is steady-state execution; wall_s is the best
+        # of three (min is the standard noise-robust estimator for timing
+        # under scheduler jitter), which keeps the machine-independent
+        # ratio gates in tools/check_bench.py stable.
+        walls = []
+        for _ in range(3):
+            t0 = time.perf_counter()
+            res2 = _run_polynesia(table, stream, queries, 4, **dict(kwargs))
+            walls.append(time.perf_counter() - t0)
+            if res2.results != res.results:
+                sys.exit(f"CI bench: {label} warm-run answers diverged — "
+                         "nondeterministic execution")
+        wall_s = min(walls)
         if answers is None:
             answers = res.results
         elif answers != res.results:
@@ -108,10 +117,11 @@ def ci_bench(json_path: str) -> None:
         metrics[label] = {
             "txn_tps": res.txn_throughput,
             "ana_qps": res.ana_throughput,
-            # measured wall clock (interpret mode off-TPU): the column that
-            # shows whether the sharded snapshot plane actually pays off,
-            # next to the modeled throughputs
+            # measured wall clock: warm steady state vs first-call compile
+            # cost, next to the modeled throughputs. The warm column backs
+            # the pallas-vs-numpy ratio gate in tools/check_bench.py.
             "wall_s": wall_s,
+            "cold_s": cold_s,
             # total kernel-dispatch count; the gate asserts pallas@4 does
             # not launch more than pallas@1 (one vmapped launch per group)
             "kernel_launches": sum(counts.values()),

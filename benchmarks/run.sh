@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# Benchmark env bootstrap: allocator, XLA flags, persistent jit cache.
+#
+#   benchmarks/run.sh ci [--json=...]     -> python -m benchmarks.run ci ...
+#   benchmarks/run.sh micro [--json=...]  -> python -m benchmarks.microbench
+#   benchmarks/run.sh figN ...            -> python -m benchmarks.run figN
+#
+# Knobs (all optional, every default can be overridden from the caller's
+# environment):
+#   REPRO_HOST_DEVICES=N        fake N host devices (XLA
+#                               --xla_force_host_platform_device_count)
+#   JAX_COMPILATION_CACHE_DIR   persistent compile cache (default
+#                               .jax_cache/ in the repo root)
+#   REPRO_PALLAS_INTERPRET      kernel mode override: 0|1|auto
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+# thread-caching allocator if the image ships one: cuts allocator
+# contention under XLA's host threadpool
+for lib in /usr/lib/x86_64-linux-gnu/libtcmalloc.so.4 \
+           /usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4; do
+  if [ -z "${LD_PRELOAD:-}" ] && [ -f "$lib" ]; then
+    export LD_PRELOAD="$lib"
+  fi
+done
+
+# silence TF/XLA banner chatter on benchmark output
+export TF_CPP_MIN_LOG_LEVEL="${TF_CPP_MIN_LOG_LEVEL:-4}"
+
+# multi-device CPU runs (e.g. REPRO_HOST_DEVICES=4 for island-per-device
+# experiments and the multi-device golden smoke)
+if [ -n "${REPRO_HOST_DEVICES:-}" ] && [ "${REPRO_HOST_DEVICES}" != "0" ]; then
+  export XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=${REPRO_HOST_DEVICES}"
+fi
+
+# persistent jit cache: repeat benchmark runs skip compilation entirely,
+# so cold_s converges toward warm wall_s after the first run
+export JAX_COMPILATION_CACHE_DIR="${JAX_COMPILATION_CACHE_DIR:-$PWD/.jax_cache}"
+export JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES="${JAX_PERSISTENT_CACHE_MIN_ENTRY_SIZE_BYTES:--1}"
+export JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS="${JAX_PERSISTENT_CACHE_MIN_COMPILE_TIME_SECS:-0}"
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+if [ "${1:-}" = "micro" ]; then
+  shift
+  exec python -m benchmarks.microbench "$@"
+fi
+exec python -m benchmarks.run "$@"

@@ -99,21 +99,68 @@ def _apply_row_ops(codes: np.ndarray, valid: np.ndarray, new_dict: np.ndarray,
     return codes, valid
 
 
-def _merge_dictionary_stages(be, old_dict: np.ndarray, write_vals: np.ndarray):
-    """Stages 1-2 of the optimized application, shared by the unsharded and
-    sharded paths (their bit-identity contract depends on this being ONE
-    code path): sort+dedupe the pending update values (1024-value sorter),
+def _merge_dictionary_stages_batch(be, per_column):
+    """Stages 1-2 of the optimized application for every column of a ship
+    batch at once. This is the ONE code path behind both the unsharded and
+    sharded applies (their bit-identity contract depends on that): per
+    column, sort+dedupe the pending update values (1024-value sorter),
     linear-merge the sorted dictionaries (merge unit), and build the
-    old->new hash index (hash unit).
+    hash-unit encoder over the merged dictionary. The backend *_batch ops
+    ride all columns' sorts as rows of one sorter dispatch and all
+    dictionary merges as rows of one merge dispatch.
 
-    Returns (update_dict, new_dict, encode, old_to_new).
+    `per_column` is a list of (old_dict, write_vals); returns a list of
+    (update_dict, new_dict, encode, old_to_new) in the same order. The
+    old->new index is a positional byproduct of the merge — both
+    dictionaries are sorted and every old value survives into the merged
+    one, so each old entry's new code is its position there (the paper's
+    merge unit emits the mapping during the merge pass; the hash unit
+    encodes the *update* values). All the batching is safe because sorts
+    and merges are exact and item-independent — grouping them cannot
+    change any individual result.
     """
-    update_dict = (be.sort_unique(write_vals) if len(write_vals)
-                   else np.empty(0, np.int32))
-    new_dict = be.merge_dictionaries(old_dict, update_dict)
-    encode = be.make_encoder(new_dict)
-    old_to_new = encode(old_dict)  # the "hash index"
-    return update_dict, new_dict, encode, old_to_new
+    upd: list = [None] * len(per_column)
+    nonempty = [i for i, (_, wv) in enumerate(per_column) if len(wv)]
+    for i, u in zip(nonempty, be.sort_unique_batch(
+            [per_column[i][1] for i in nonempty])):
+        upd[i] = u
+    for i in range(len(per_column)):
+        if upd[i] is None:
+            upd[i] = np.empty(0, np.int32)
+    new_dicts = be.merge_dictionaries_batch(
+        [(old, u) for (old, _), u in zip(per_column, upd)])
+    return [(u, nd, be.make_encoder(nd),
+             np.searchsorted(nd, old).astype(np.int64))
+            for u, nd, (old, _) in zip(upd, new_dicts, per_column)]
+
+
+def _merge_dictionary_stages(be, old_dict: np.ndarray, write_vals: np.ndarray):
+    """Single-column stages 1-2: a batch of one (see the batch docstring)."""
+    return _merge_dictionary_stages_batch(be, [(old_dict, write_vals)])[0]
+
+
+def precompute_apply_stages(columns, buffers, backend=None) -> dict:
+    """Precompute stages 1-2 for every column of a ship batch, riding all
+    columns' update-value sorts on one sorter dispatch and all dictionary
+    merges on one merge dispatch.
+
+    `columns` maps col_id -> current EncodedColumn, `buffers` maps
+    col_id -> that column's shipped update entries (shipping.ship_updates
+    output). Returns {col_id: staged} to pass as `apply_updates(...,
+    staged=...)`. With a ShardedBackend the stages run on the inner
+    backend, exactly as `apply_updates_shards` would. Purely a batching
+    hint: results are bit-identical to each apply computing its own
+    stages, because every batched op is exact and item-independent.
+    """
+    be = get_backend(backend)
+    inner = be.inner if isinstance(be, ShardedBackend) else be
+    ids = list(buffers.keys())
+    per_column = []
+    for cid in ids:
+        mods, ins, _ = _split_ops(buffers[cid])
+        per_column.append((np.asarray(columns[cid].dictionary),
+                           np.concatenate([mods["value"], ins["value"]])))
+    return dict(zip(ids, _merge_dictionary_stages_batch(inner, per_column)))
 
 
 def route_updates(updates: np.ndarray, bounds: list[int]) -> np.ndarray:
@@ -169,6 +216,7 @@ def apply_updates(
     cost: CostLog | None = None,
     on_pim: bool = True,
     backend=None,
+    staged=None,
 ) -> EncodedColumn:
     """Optimized two-stage update application (the paper's contribution).
 
@@ -178,12 +226,18 @@ def apply_updates(
     the NumpyBackend keeps the original unique/union1d/searchsorted path.
     A ShardedBackend routes row ops to their owning islands (see
     `apply_updates_shards`) — the result is bit-identical either way.
+
+    `staged`, when given, is this column's precomputed stages 1-2 entry
+    from `precompute_apply_stages` (the ship batch's cross-column sorter/
+    merge batching); it MUST have been computed from this column's current
+    dictionary and these updates' write values.
     """
     be = get_backend(backend)
     if isinstance(be, ShardedBackend) and be.n_shards > 1:
         from repro.core.dsm import concat_columns
         return concat_columns(apply_updates_shards(col, updates, cost,
-                                                   on_pim, be))
+                                                   on_pim, be,
+                                                   staged=staged))
     old_codes = np.asarray(col.codes)
     old_dict = np.asarray(col.dictionary)
     valid = np.array(col.valid, copy=True)
@@ -192,25 +246,34 @@ def apply_updates(
     write_vals = np.concatenate([mods["value"], ins["value"]])
     m = len(updates)
 
-    # Stages 1-2: update-dictionary sort + dictionary merge + hash index.
-    # (hardware: 1024-value bitonic sorter, merge unit, hash unit)
-    update_dict, new_dict, encode, old_to_new = _merge_dictionary_stages(
-        be, old_dict, write_vals)
+    # Stages 1-2: update-dictionary sort + dictionary merge + old->new
+    # index. (hardware: 1024-value bitonic sorter, merge unit; the index
+    # falls out of the merge pass — see the stages docstring)
+    update_dict, new_dict, encode, old_to_new = (
+        staged if staged is not None
+        else _merge_dictionary_stages(be, old_dict, write_vals))
+
+    # Hash unit: encode the write set's values against the new dictionary
+    # in one probe dispatch.
+    write_ops = _sorted_write_ops(mods, ins)
+    write_codes = encode(write_ops["value"])
 
     # Stage 3: sequential re-encode through the index + scatter update codes.
     new_codes = old_to_new[old_codes].astype(np.int32)
     new_codes, valid = _apply_row_ops(new_codes, valid, new_dict, mods, ins,
-                                      dels, encode=encode)
+                                      dels, encode=encode,
+                                      write_set=(write_ops, write_codes))
 
     if cost is not None and m:
         _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
                               len(update_dict), col.bit_width)
 
-    import jax.numpy as jnp
+    # columns stay host numpy: the jitted kernels convert at dispatch,
+    # which is far cheaper than an eager device_put per column per round
     return EncodedColumn(
-        codes=jnp.asarray(new_codes),
-        dictionary=jnp.asarray(new_dict),
-        valid=jnp.asarray(valid),
+        codes=np.asarray(new_codes),
+        dictionary=np.asarray(new_dict),
+        valid=np.asarray(valid),
         version=col.version + 1,
     )
 
@@ -221,6 +284,7 @@ def apply_updates_shards(
     cost: CostLog | None = None,
     on_pim: bool = True,
     backend=None,
+    staged=None,
 ) -> list[EncodedColumn]:
     """Update application across N analytical islands (row-wise shards).
 
@@ -253,8 +317,9 @@ def apply_updates_shards(
 
     # Stages 1-2 once on the shared (replicated) dictionary — the same
     # code path as the unsharded apply, so the maps cannot drift apart.
-    update_dict, new_dict, encode, old_to_new = _merge_dictionary_stages(
-        inner, old_dict, write_vals)
+    update_dict, new_dict, encode, old_to_new = (
+        staged if staged is not None
+        else _merge_dictionary_stages(inner, old_dict, write_vals))
 
     # Stage 3 per island: route row ops to owning shards over the
     # post-insert row span (inserts extend the last shard). Each island's
@@ -266,6 +331,17 @@ def apply_updates_shards(
     owner = route_updates(updates, bounds)
     island_ops = []
     for s in range(be.n_shards):
+        lo = bounds[s]
+        ups_s = updates[owner == s]
+        ups_s["row"] = ups_s["row"] - lo  # island-local row ids
+        m_s, i_s, d_s = _split_ops(ups_s)
+        w_s = _sorted_write_ops(m_s, i_s)
+        island_ops.append((m_s, i_s, d_s, w_s))
+    write_codes = inner.encode_values_shards(
+        encode, [w["value"] for *_, w in island_ops])
+    codes_parts, valid_parts = [], []
+    for s, ((m_s, i_s, d_s, w_s), wc) in enumerate(zip(island_ops,
+                                                       write_codes)):
         lo, hi = bounds[s], bounds[s + 1]
         src_lo, src_hi = min(lo, n), min(hi, n)
         codes_s = old_to_new[old_codes[src_lo:src_hi]].astype(np.int32)
@@ -274,16 +350,6 @@ def apply_updates_shards(
         if pad:  # rows this island gains from inserts
             codes_s = np.concatenate([codes_s, np.zeros(pad, np.int32)])
             valid_s = np.concatenate([valid_s, np.zeros(pad, bool)])
-        ups_s = updates[owner == s]
-        ups_s["row"] = ups_s["row"] - lo  # island-local row ids
-        m_s, i_s, d_s = _split_ops(ups_s)
-        w_s = _sorted_write_ops(m_s, i_s)
-        island_ops.append((codes_s, valid_s, m_s, i_s, d_s, w_s))
-    write_codes = inner.encode_values_shards(
-        encode, [w["value"] for *_, w in island_ops])
-    codes_parts, valid_parts = [], []
-    for (codes_s, valid_s, m_s, i_s, d_s, w_s), wc in zip(island_ops,
-                                                          write_codes):
         codes_s, valid_s = _apply_row_ops(codes_s, valid_s, new_dict,
                                           m_s, i_s, d_s, encode=encode,
                                           write_set=(w_s, wc))
@@ -294,11 +360,10 @@ def apply_updates_shards(
         _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
                               len(update_dict), col.bit_width)
 
-    import jax.numpy as jnp
-    shared_dict = jnp.asarray(new_dict)  # one replicated dictionary object
+    shared_dict = np.asarray(new_dict)  # one replicated dictionary object
     return [
-        EncodedColumn(codes=jnp.asarray(codes_s), dictionary=shared_dict,
-                      valid=jnp.asarray(valid_s), version=col.version + 1)
+        EncodedColumn(codes=np.asarray(codes_s), dictionary=shared_dict,
+                      valid=np.asarray(valid_s), version=col.version + 1)
         for codes_s, valid_s in zip(codes_parts, valid_parts)
     ]
 
@@ -365,10 +430,9 @@ def apply_updates_naive(
             ),
         )
 
-    import jax.numpy as jnp
     return EncodedColumn(
-        codes=jnp.asarray(new_codes),
-        dictionary=jnp.asarray(new_dict.astype(old_dict.dtype)),
-        valid=jnp.asarray(valid),
+        codes=np.asarray(new_codes),
+        dictionary=np.asarray(new_dict.astype(old_dict.dtype)),
+        valid=np.asarray(valid),
         version=col.version + 1,
     )

@@ -8,7 +8,8 @@ surface below, so the same drivers can run either on
 * ``NumpyBackend`` — the original pure-numpy code paths, extracted here as
   the functional reference, or
 * ``PallasBackend`` — dispatching each operator to its hardware-analog
-  kernel (interpret mode off-TPU), or
+  kernel (compiled on TPU/GPU, jitted jax-numpy lowering on CPU, Pallas
+  interpret mode on demand — ``kernels.common.kernel_mode``), or
 * ``ShardedBackend`` — N analytical islands, each owning a row-wise DSM
   shard, fanning scans out over any inner backend and reducing the exact
   partial aggregates (spec ``"pallas@4"``, ``n_shards=`` on the drivers,
@@ -49,8 +50,9 @@ from repro.kernels.bitonic_sort import sort_1024, sort_rows
 from repro.kernels.dict_ops import (scan_filter_agg, scan_filter_agg_batch,
                                     scan_filter_agg_sharded)
 from repro.kernels.hash_probe import (EMPTY_KEY, build_table, probe,
-                                      probe_sharded)
-from repro.kernels.merge_runs import merge_sorted_runs
+                                      probe_sharded, scan_filter_agg_join,
+                                      scan_filter_agg_join_sharded)
+from repro.kernels.merge_runs import merge_sorted_pairs, merge_sorted_runs
 from repro.kernels.snapshot_copy import snapshot_copy
 
 SNAPSHOT_BLOCK = 8192  # copy-unit chunk size (kernels/snapshot_copy default)
@@ -61,9 +63,11 @@ SNAPSHOT_BLOCK = 8192  # copy-unit chunk size (kernels/snapshot_copy default)
 # CI launch-count gate) wrap exactly these names — keep it next to the
 # imports so adding a kernel here keeps the gate honest.
 KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch",
-                       "scan_filter_agg_sharded", "probe", "probe_sharded",
-                       "build_table", "merge_sorted_runs", "sort_1024",
-                       "sort_rows", "snapshot_copy")
+                       "scan_filter_agg_sharded", "scan_filter_agg_join",
+                       "scan_filter_agg_join_sharded", "probe",
+                       "probe_sharded", "build_table", "merge_sorted_runs",
+                       "merge_sorted_pairs", "sort_1024", "sort_rows",
+                       "snapshot_copy")
 
 
 @contextlib.contextmanager
@@ -139,6 +143,26 @@ class ExecutionBackend(abc.ABC):
                         left_mask: np.ndarray | None = None) -> int:
         """|left JOIN right on value| via dictionary-level hash matching."""
 
+    def filter_agg_join_batch(self, fcol: EncodedColumn, acol: EncodedColumn,
+                              jcol: EncodedColumn,
+                              bounds: Sequence[tuple[int, int]]
+                              ) -> list[tuple[int, int, int]]:
+        """Fused join-query group: for every (lo, hi) predicate return the
+        exact ``(sum, count, self_join_count)`` triple, where the join count
+        is ``|jcol JOIN jcol|`` restricted to the predicate's row mask.
+
+        This default is the original per-query host path (mask-producing
+        scan + dictionary-level hash join), kept as the reference; the
+        accelerator backends override it with ONE fused device call per
+        group (the join reduces to a second exact scan against the build
+        side's occurrence histogram — see kernels/hash_probe)."""
+        out = []
+        for lo, hi in bounds:
+            s, c, mask = self.filter_agg_mask(fcol, acol, lo, hi)
+            j = self.hash_join_count(jcol, jcol, left_mask=mask)
+            out.append((s, c, j))
+        return out
+
     def scan_view(self, fview: ShardedView, aview: ShardedView,
                   code_bounds: Sequence[tuple[int, int]]
                   ) -> list[list[tuple[int, int]]]:
@@ -169,6 +193,43 @@ class ExecutionBackend(abc.ABC):
             out.append(res)
         return out
 
+    def scan_view_join(self, fview: ShardedView, aview: ShardedView,
+                       jview: ShardedView,
+                       code_bounds: Sequence[tuple[int, int]]
+                       ) -> list[list[tuple[int, int, int]]]:
+        """Every island's fused join-group scan over resident shards.
+
+        Like `scan_view` but each predicate also yields the island's partial
+        self-join count: its resident probe-side rows against the GLOBAL
+        build-side histogram (``jview.dict_counts()`` — the replicated
+        dictionary's occurrence counts over ALL islands), so the cross-shard
+        reduction is a plain exact sum. This default is the serial per-shard
+        numpy reference; PallasBackend overrides it with ONE batched launch.
+        """
+        fview.require_fresh()
+        aview.require_fresh()
+        jview.require_fresh()
+        fcodes = np.asarray(fview.codes)
+        fvalid = np.asarray(fview.valid)
+        acodes = np.asarray(aview.codes)
+        adict = np.asarray(aview.dictionary, dtype=np.int64)
+        jcodes = np.asarray(jview.codes)
+        jvalid = np.asarray(jview.valid)
+        rcount = jview.dict_counts()
+        out = []
+        for s, size in enumerate(fview.sizes):
+            fc, va, ac = fcodes[s, :size], fvalid[s, :size], acodes[s, :size]
+            jc, jv = jcodes[s, :size], jvalid[s, :size]
+            res = []
+            for code_lo, code_hi in code_bounds:
+                mask = (fc >= code_lo) & (fc < code_hi) & va
+                counts = np.bincount(ac[mask], minlength=aview.dict_size)
+                keep = mask & jv
+                res.append((int(counts @ adict), int(mask.sum()),
+                            int(rcount[jc[keep]].sum())))
+            out.append(res)
+        return out
+
     def encode_values_shards(self, encoder: Callable[[np.ndarray], np.ndarray],
                              values_list: Sequence[np.ndarray]
                              ) -> list[np.ndarray]:
@@ -196,6 +257,23 @@ class ExecutionBackend(abc.ABC):
                      ) -> Callable[[np.ndarray], np.ndarray]:
         """value -> code lookup for values present in `dictionary` (§5.2's
         hash index; also used for the old_code -> new_code re-encode map)."""
+
+    def sort_unique_batch(self, values_list: Sequence[np.ndarray]
+                          ) -> list[np.ndarray]:
+        """`sort_unique` over several pending-update value sets (one per
+        column of a ship batch). Reference: one sort per set; the
+        accelerator backend rides every set as a row of ONE sorter
+        dispatch. Results are elementwise identical either way."""
+        return [self.sort_unique(v) for v in values_list]
+
+    def merge_dictionaries_batch(self, pairs: Sequence[tuple[np.ndarray,
+                                                             np.ndarray]]
+                                 ) -> list[np.ndarray]:
+        """`merge_dictionaries` over several (old, update) dictionary
+        pairs. Reference: one merge per pair; the accelerator backend
+        merges every pair as a row of ONE merge dispatch. Results are
+        elementwise identical either way."""
+        return [self.merge_dictionaries(o, u) for o, u in pairs]
 
     # -- consistency (§6) --------------------------------------------------
     @abc.abstractmethod
@@ -350,6 +428,30 @@ class PallasBackend(NumpyBackend):
         return scan_filter_agg_sharded(fview.codes, aview.codes, fview.valid,
                                        aview.dictionary, code_bounds)
 
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+        # the whole join group in ONE fused device call: the self-join is a
+        # second exact scan with the build side's occurrence histogram as
+        # the dictionary (counts <= n_rows keep it int32-exact); the host
+        # contributes only the build-side bincount, once per group.
+        code_bounds = [self.code_range(fcol, lo, hi) for lo, hi in bounds]
+        rcount = np.bincount(np.asarray(jcol.codes)[np.asarray(jcol.valid)],
+                             minlength=jcol.dict_size).astype(np.int32)
+        return scan_filter_agg_join(fcol.codes, acol.codes, jcol.codes,
+                                    fcol.valid, jcol.valid, acol.dictionary,
+                                    rcount, code_bounds)
+
+    def scan_view_join(self, fview, aview, jview, code_bounds):
+        # every island's join group in the same single launch; the build
+        # side is the view's cached global histogram (dict_counts), so the
+        # per-island partial join counts sum exactly across shards
+        fview.require_fresh()
+        aview.require_fresh()
+        jview.require_fresh()
+        rcount = jview.dict_counts().astype(np.int32)
+        return scan_filter_agg_join_sharded(
+            fview.codes, aview.codes, jview.codes, fview.valid, jview.valid,
+            aview.dictionary, rcount, code_bounds)
+
     def _join_match(self, lv, rv, lcount, rcount):
         if (len(rv) == 0 or len(lv) == 0
                 or (rv == int(EMPTY_KEY)).any()       # can't build the table
@@ -358,7 +460,7 @@ class PallasBackend(NumpyBackend):
         # hash unit: probe each left dictionary value against the right
         # dictionary's table; hits multiply pre-grouped occurrence counts.
         table = build_table(rv, np.arange(len(rv), dtype=np.int32))
-        ri = np.asarray(probe(table, jnp.asarray(lv), default=-1))
+        ri = probe(table, lv, default=-1)
         hit = ri >= 0
         return int((lcount[hit] * rcount[ri[hit]]).sum())
 
@@ -379,7 +481,7 @@ class PallasBackend(NumpyBackend):
     def sort_unique(self, values):
         if len(values) == 0 or not _fits_int32(np.asarray(values)):
             return super().sort_unique(values)  # int32 sort unit
-        v = jnp.asarray(np.asarray(values, dtype=np.int32))
+        v = np.asarray(values, dtype=np.int32)
         if len(values) <= 1024:  # the paper's 1024-value sort unit
             s = np.asarray(sort_1024(v))
         else:
@@ -397,6 +499,59 @@ class PallasBackend(NumpyBackend):
         keep = np.concatenate([[True], merged[1:] != merged[:-1]])
         return merged[keep].astype(old_dict.dtype)
 
+    def sort_unique_batch(self, values_list):
+        """Every value set rides one row of a single sorter dispatch.
+
+        Each row's sorted prefix is exactly that set's sorted multiset
+        (the network is row-independent and sentinels fill the tails), so
+        per-row dedup yields the same update dictionary as `sort_unique`.
+        Sets the sort unit can't take (empty / beyond int32) fall back to
+        the scalar path, as does a batch with fewer than two sortable sets.
+        """
+        vals = [np.asarray(v) for v in values_list]
+        batchable = [i for i, v in enumerate(vals)
+                     if len(v) and _fits_int32(v)]
+        if len(batchable) < 2:
+            return [self.sort_unique(v) for v in vals]
+        width = max(len(vals[i]) for i in batchable)
+        stack = np.full((len(batchable), width), np.iinfo(np.int32).max,
+                        dtype=np.int32)
+        for r, i in enumerate(batchable):
+            stack[r, :len(vals[i])] = vals[i].astype(np.int32)
+        rows = np.asarray(sort_rows(stack))
+        out: list = [None] * len(vals)
+        for r, i in enumerate(batchable):
+            s = rows[r, :len(vals[i])]
+            keep = np.concatenate([[True], s[1:] != s[:-1]])
+            out[i] = s[keep].astype(vals[i].dtype)
+        for i, v in enumerate(vals):
+            if out[i] is None:
+                out[i] = self.sort_unique(v)
+        return out
+
+    def merge_dictionaries_batch(self, pairs):
+        """Every (old, update) pair rides one row of a single merge
+        dispatch (`merge_sorted_pairs`); per-row dedup of the merged keys
+        yields the same dictionary as `merge_dictionaries`. Pairs with an
+        empty side keep the scalar path (numpy union), as does a batch
+        with fewer than two mergeable pairs."""
+        pairs = [(np.asarray(o), np.asarray(u)) for o, u in pairs]
+        batchable = [i for i, (o, u) in enumerate(pairs)
+                     if len(o) and len(u)]
+        if len(batchable) < 2:
+            return [self.merge_dictionaries(o, u) for o, u in pairs]
+        merged_keys = merge_sorted_pairs([pairs[i][0] for i in batchable],
+                                         [pairs[i][1] for i in batchable])
+        out: list = [None] * len(pairs)
+        for r, i in enumerate(batchable):
+            m = merged_keys[r]
+            keep = np.concatenate([[True], m[1:] != m[:-1]])
+            out[i] = m[keep].astype(pairs[i][0].dtype)
+        for i, (o, u) in enumerate(pairs):
+            if out[i] is None:
+                out[i] = self.merge_dictionaries(o, u)
+        return out
+
     def make_encoder(self, dictionary):
         d = np.asarray(dictionary)
         if (len(d) == 0 or not _fits_int32(d)
@@ -411,7 +566,7 @@ class PallasBackend(NumpyBackend):
                 return np.empty(0, dtype=np.int64)
             if not _fits_int32(values):
                 return fallback(values)  # int32 probe unit
-            codes = np.asarray(probe(table, jnp.asarray(values.astype(np.int32))))
+            codes = probe(table, values.astype(np.int32))
             return codes.astype(np.int64)
 
         encode._table = table  # lets encode_values_shards batch the probes
@@ -448,7 +603,7 @@ class PallasBackend(NumpyBackend):
             dirty = np.ones(n_chunks, dtype=bool)
             prev_arr = col.codes
         codes = snapshot_copy(col.codes, prev_arr,
-                              jnp.asarray(dirty.astype(np.int32)),
+                              dirty.astype(np.int32),
                               block=SNAPSHOT_BLOCK)
         return EncodedColumn(codes=codes, dictionary=col.dictionary,
                              valid=col.valid, version=col.version)
@@ -564,6 +719,18 @@ class ShardedBackend(ExecutionBackend):
                  reduce_partials("count", [p[q][1] for p in per_shard]))
                 for q in range(len(bounds))]
 
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+        # one scan_view_join covers every island's aggregate AND join scans;
+        # the per-island (sum, count, join) partials all reduce as exact sums
+        fv, av, jv = self._as_view(fcol), self._as_view(acol), \
+            self._as_view(jcol)
+        code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
+        per_shard = self.inner.scan_view_join(fv, av, jv, code_bounds)
+        return [(reduce_partials("sum", [p[q][0] for p in per_shard]),
+                 reduce_partials("count", [p[q][1] for p in per_shard]),
+                 reduce_partials("sum", [p[q][2] for p in per_shard]))
+                for q in range(len(bounds))]
+
     def hash_join_count(self, left, right, left_mask=None):
         # Each island histograms only its own resident probe-side shard;
         # the partial histograms reduce exactly in int arithmetic. The
@@ -613,6 +780,12 @@ class ShardedBackend(ExecutionBackend):
 
     def merge_dictionaries(self, old_dict, update_dict):
         return self.inner.merge_dictionaries(old_dict, update_dict)
+
+    def sort_unique_batch(self, values_list):
+        return self.inner.sort_unique_batch(values_list)
+
+    def merge_dictionaries_batch(self, pairs):
+        return self.inner.merge_dictionaries_batch(pairs)
 
     def make_encoder(self, dictionary):
         return self.inner.make_encoder(dictionary)

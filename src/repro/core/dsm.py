@@ -77,10 +77,11 @@ def encode_column(values: np.ndarray) -> EncodedColumn:
     """Build the sorted dictionary and encode (order-preserving)."""
     values = np.asarray(values)
     dictionary, codes = np.unique(values, return_inverse=True)
+    # columns are host numpy; the jitted kernels convert at dispatch
     return EncodedColumn(
-        codes=jnp.asarray(codes.astype(np.int32)),
-        dictionary=jnp.asarray(dictionary.astype(np.int32)),
-        valid=jnp.ones(values.shape[0], dtype=bool),
+        codes=codes.astype(np.int32),
+        dictionary=dictionary.astype(np.int32),
+        valid=np.ones(values.shape[0], dtype=bool),
         version=0,
     )
 
@@ -97,8 +98,9 @@ def value_range_to_code_range(col: EncodedColumn, lo: int, hi: int):
     code_lo <= code < code_hi. This is the order-preserving-dictionary
     fast path used by the analytical engine's scans.
     """
-    code_lo = jnp.searchsorted(col.dictionary, lo, side="left")
-    code_hi = jnp.searchsorted(col.dictionary, hi, side="right")
+    dictionary = np.asarray(col.dictionary)
+    code_lo = int(np.searchsorted(dictionary, lo, side="left"))
+    code_hi = int(np.searchsorted(dictionary, hi, side="right"))
     return code_lo, code_hi
 
 
@@ -306,7 +308,7 @@ def make_sharded_view(col: EncodedColumn, n_shards: int,
     for s, (lo, hi) in enumerate(zip(bounds, bounds[1:])):
         codes[s, :hi - lo] = src_codes[lo:hi]
         valid[s, :hi - lo] = src_valid[lo:hi]
-    return ShardedView(codes=jnp.asarray(codes), valid=jnp.asarray(valid),
+    return ShardedView(codes=codes, valid=valid,
                        dictionary=col.dictionary, bounds=tuple(bounds),
                        version=col.version, snapshot_id=snapshot_id)
 

@@ -200,34 +200,41 @@ def run_query_group_dsm(
     be = get_backend(backend, n_shards=n_shards)
     q0 = queries[0]
     fcol, acol = view[q0.filter_col], view[q0.agg_col]
-    # join-free queries fuse into one multi-predicate scan; join queries run
-    # through filter_agg_mask so the mask is produced by the same scan that
-    # aggregates (no second filter pass on mask-producing backends)
+    # the group key includes join_col, so a group is homogeneous: either
+    # every query is join-free (one fused multi-predicate scan) or every
+    # query self-joins the same column (one fused scan+join call — the old
+    # per-query mask/bincount host glue now runs inside the backend)
     no_join = [q for q in queries if q.join_col is None]
-    answers: dict[int, tuple[int, int]] = {}
+    joins = [q for q in queries if q.join_col is not None]
+    answers: dict[int, tuple] = {}
     if no_join:
         fused = be.filter_agg_batch(fcol, acol,
                                     [(q.lo, q.hi) for q in no_join])
         for q, sc in zip(no_join, fused):
             answers[id(q)] = sc
+    if joins:
+        fused_j = be.filter_agg_join_batch(fcol, acol, view[joins[0].join_col],
+                                           [(q.lo, q.hi) for q in joins])
+        for q, scj in zip(joins, fused_j):
+            answers[id(q)] = scj
     out = []
     for q in queries:
         jcol = None
         if q.join_col is None:
             result, n_sel = answers[id(q)]
         else:
-            result, n_sel, mask = be.filter_agg_mask(fcol, acol, q.lo, q.hi)
+            s, n_sel, j = answers[id(q)]
+            result = s + j
             jcol = view[q.join_col]
-            result += be.hash_join_count(jcol, jcol, left_mask=mask)
         if cost is not None:
             _query_cost(cost, fcol, acol, jcol, n_sel, on_pim)
         out.append(result)
     if cost is not None:
         # launch amortization: one fused launch answers every join-free
-        # predicate in the group (for all islands at once); each join
-        # query still runs its own mask-producing scan
-        n_join = sum(1 for q in queries if q.join_col is not None)
-        _launch_cost(cost, on_pim, (1 if no_join else 0) + n_join)
+        # predicate in the group (for all islands at once), and one fused
+        # scan+join launch answers every join predicate
+        _launch_cost(cost, on_pim,
+                     (1 if no_join else 0) + (1 if joins else 0))
     return out
 
 

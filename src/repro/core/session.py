@@ -43,7 +43,8 @@ import numpy as np
 
 from repro.core import engine
 from repro.core.application import (apply_updates, apply_updates_naive,
-                                    apply_updates_shards)
+                                    apply_updates_shards,
+                                    precompute_apply_stages)
 from repro.core.backend import ExecutionBackend, get_backend
 from repro.core.consistency import ConsistencyManager
 from repro.core.dsm import DSMReplica
@@ -426,6 +427,12 @@ class HTAPSession:
             buffers = ship_updates(logs, self.store.n_cols, ship_cost,
                                    on_pim=spec.propagation_on_pim,
                                    backend=self.be)
+        # The whole batch's dictionary stages ride one sorter dispatch and
+        # one merge dispatch (cost events stay per column below — tags are
+        # structural, and the cost model is analytic, not measured).
+        staged = (precompute_apply_stages(self.replica.columns, buffers,
+                                          backend=self.be)
+                  if spec.optimized_application and len(buffers) > 1 else {})
         for col_id, entries in buffers.items():
             old = self.replica.columns[col_id]
             app_cost = (None if (spec.shipping_only
@@ -440,12 +447,14 @@ class HTAPSession:
                     # (all-or-none Phase-2 swap)
                     shards = apply_updates_shards(
                         old, entries, app_cost,
-                        on_pim=spec.propagation_on_pim, backend=self.be)
+                        on_pim=spec.propagation_on_pim, backend=self.be,
+                        staged=staged.get(col_id))
                     self.cons.on_update_shards(col_id, shards)
                 elif spec.optimized_application:
                     self.cons.on_update(col_id, apply_updates(
                         old, entries, app_cost,
-                        on_pim=spec.propagation_on_pim, backend=self.be))
+                        on_pim=spec.propagation_on_pim, backend=self.be,
+                        staged=staged.get(col_id)))
                 else:
                     # the naive software baseline rebuilds a whole column
                     self.cons.on_update(col_id, apply_updates_naive(

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import instrumented_jit
+
 
 def _compare_exchange(x: jnp.ndarray, k: int, j: int) -> jnp.ndarray:
     """One bitonic stage on rows of x: partner stride 2^j within 2^k blocks.
@@ -60,7 +62,13 @@ def _sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_network(x_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+# Jitted whole-array network (CPU fast path). The network is row-
+# independent, so this matches the row-tiled kernel bit-for-bit.
+bitonic_sort_rows_lowered = instrumented_jit(
+    _bitonic_network, name="bitonic_sort_rows_lowered")
+
+
+@functools.partial(instrumented_jit, static_argnames=("block_rows", "interpret"))
 def bitonic_sort_rows(x: jnp.ndarray, block_rows: int = 8,
                       interpret: bool = True) -> jnp.ndarray:
     """Row-wise bitonic sort of a (rows, width) array; width a power of 2.

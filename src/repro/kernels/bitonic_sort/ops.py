@@ -3,18 +3,34 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.bitonic_sort.bitonic_sort import bitonic_sort_rows
+from repro.kernels.bitonic_sort.bitonic_sort import (
+    bitonic_sort_rows, bitonic_sort_rows_lowered)
 from repro.kernels.bitonic_sort.ref import sort_rows_ref
-from repro.kernels.common import default_interpret, next_pow2
+from repro.kernels.common import kernel_mode, next_pow2
 
 
-def sort_rows(x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
-    """Sort each row ascending. Pads to a power of two with +inf sentinels."""
+def sort_rows(x, use_pallas: bool = True):
+    """Sort each row ascending. Pads to a power of two with +inf sentinels.
+
+    The lowered (CPU fast-path) branch pads host-side and returns host
+    numpy — the sort network is row-independent, so it also skips the
+    kernel's rows%8 tiling pad. Kernel modes keep the device path.
+    """
     if not use_pallas:
         return sort_rows_ref(x)
     rows, width = x.shape
     padded = next_pow2(width)
+    mode = kernel_mode()
+    if mode == "lowered":
+        xn = np.asarray(x)
+        sentinel = np.iinfo(xn.dtype).max \
+            if np.issubdtype(xn.dtype, np.integer) else np.inf
+        if padded != width:
+            xn = np.pad(xn, ((0, 0), (0, padded - width)),
+                        constant_values=sentinel)
+        return np.asarray(bitonic_sort_rows_lowered(xn))[:, :width]
     sentinel = jnp.iinfo(x.dtype).max if jnp.issubdtype(x.dtype, jnp.integer) \
         else jnp.inf
     if padded != width:
@@ -22,7 +38,8 @@ def sort_rows(x: jnp.ndarray, use_pallas: bool = True) -> jnp.ndarray:
     pad_rows = (-rows) % 8
     if pad_rows:
         x = jnp.pad(x, ((0, pad_rows), (0, 0)), constant_values=sentinel)
-    out = bitonic_sort_rows(x, block_rows=8, interpret=default_interpret())
+    out = bitonic_sort_rows(x, block_rows=8,
+                            interpret=(mode == "interpret"))
     return out[:rows, :width]
 
 

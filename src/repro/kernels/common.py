@@ -1,13 +1,105 @@
-"""Shared kernel utilities."""
+"""Shared kernel utilities: runtime kernel mode + trace accounting.
+
+Off-TPU, Pallas kernels can only run in *interpret* mode — a per-launch
+Python emulation that is bit-exact but ~1000x slower than compiled code.
+The kernel layer therefore resolves one of three execution modes at call
+time (``kernel_mode``):
+
+* ``"compiled"`` — real ``pallas_call`` lowering (TPU/GPU, or forced).
+* ``"interpret"`` — Pallas interpret mode: the bit-exact kernel-semantics
+  oracle, selectable anywhere.
+* ``"lowered"``  — a jitted jax-numpy lowering of the same math (identical
+  integer results, asserted by the golden-answer suite). This is the CPU
+  fast path: XLA compiles it once per pow2-bucketed shape.
+
+The choice is the ``REPRO_PALLAS_INTERPRET`` environment variable
+(``0`` force-compile, ``1`` force interpret, ``auto`` — the default —
+compiled on real accelerators, lowered on CPU), validated with an
+actionable error in the style of ``core.backend.parse_backend_spec``.
+
+The module also owns the kernel layer's *trace accounting*: every jitted
+kernel entry point is wrapped by ``instrumented_jit``, which bumps a
+per-function counter each time JAX (re)traces the Python body. Together
+with the pow2 shape-bucketing in the ops wrappers this is what the
+zero-retrace regression test pins: steady-state session rounds must hit
+only compiled-cache entries.
+"""
 
 from __future__ import annotations
 
+import functools
+import os
+
 import jax
+
+VALID_INTERPRET_SPECS = ("0", "1", "auto")
+
+# set_interpret_override wins over the environment; the env value itself is
+# parsed lazily (first kernel call, not import) and cached.
+_interpret_override: str | None = None
+_interpret_cached: str | None = None
+
+
+def parse_interpret_spec(raw: str) -> str:
+    """Validate a ``REPRO_PALLAS_INTERPRET`` value early, with a hint.
+
+    Mirrors ``core.backend.parse_backend_spec``: malformed values fail here
+    with an actionable message instead of surfacing as a deep Pallas or
+    XLA error later.
+    """
+    if raw not in VALID_INTERPRET_SPECS:
+        raise ValueError(
+            f"bad REPRO_PALLAS_INTERPRET value {raw!r}; expected one of "
+            f"{list(VALID_INTERPRET_SPECS)} — '0' forces compiled "
+            "pallas_call kernels (real accelerators only), '1' forces "
+            "Pallas interpret mode (bit-exact, slow), 'auto' (default) "
+            "compiles on TPU/GPU and uses the jitted jax-numpy lowering "
+            "on CPU")
+    return raw
+
+
+def set_interpret_override(value: str | None) -> None:
+    """Programmatic override of REPRO_PALLAS_INTERPRET (None = re-read env).
+
+    Used by tests to pin interpret mode as the kernel-semantics oracle
+    against the lowered path; the value is validated like the env var.
+    """
+    global _interpret_override, _interpret_cached
+    _interpret_override = (parse_interpret_spec(value)
+                           if value is not None else None)
+    _interpret_cached = None
+
+
+def interpret_spec() -> str:
+    """The resolved REPRO_PALLAS_INTERPRET value ('0' | '1' | 'auto')."""
+    global _interpret_cached
+    if _interpret_override is not None:
+        return _interpret_override
+    if _interpret_cached is None:
+        _interpret_cached = parse_interpret_spec(
+            os.environ.get("REPRO_PALLAS_INTERPRET", "auto"))
+    return _interpret_cached
+
+
+def kernel_mode() -> str:
+    """Resolve the kernel execution mode: 'compiled' | 'interpret' | 'lowered'."""
+    spec = interpret_spec()
+    if spec == "1":
+        return "interpret"
+    if spec == "0":
+        return "compiled"
+    return "compiled" if jax.default_backend() in ("tpu", "gpu") \
+        else "lowered"
 
 
 def default_interpret() -> bool:
-    """Pallas interpret mode unless we are actually on TPU."""
-    return jax.default_backend() != "tpu"
+    """Pallas interpret flag for kernels without a lowered path.
+
+    True unless the resolved mode is 'compiled' — i.e. unchanged behavior
+    (interpret off-TPU) under 'auto', while REPRO_PALLAS_INTERPRET=0 forces
+    real compilation everywhere.
+    """
+    return kernel_mode() != "compiled"
 
 
 def next_pow2(n: int) -> int:
@@ -15,3 +107,48 @@ def next_pow2(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+# ---------------------------------------------------------------------------
+# Trace accounting
+# ---------------------------------------------------------------------------
+
+_trace_counts: dict[str, int] = {}
+
+
+def kernel_trace_counts() -> dict[str, int]:
+    """Per-entry-point (re)trace counts since the last reset (a copy)."""
+    return dict(_trace_counts)
+
+
+def total_kernel_traces() -> int:
+    return sum(_trace_counts.values())
+
+
+def reset_kernel_trace_counts() -> None:
+    _trace_counts.clear()
+
+
+def instrumented_jit(fn=None, *, static_argnames=(), donate_argnums=(),
+                     name: str | None = None):
+    """``jax.jit`` that counts every (re)trace of the wrapped function.
+
+    The counter bump lives inside the traced Python body, so it executes
+    exactly when JAX traces (a new shape/static-arg combination) and never
+    on compiled-cache hits — which makes ``kernel_trace_counts`` a direct
+    measure of recompilation. Usable as a decorator (with keywords via
+    ``functools.partial``) or called directly.
+    """
+    if fn is None:
+        return functools.partial(instrumented_jit,
+                                 static_argnames=static_argnames,
+                                 donate_argnums=donate_argnums, name=name)
+    label = name or fn.__name__
+
+    @functools.wraps(fn)
+    def counted(*args, **kwargs):
+        _trace_counts[label] = _trace_counts.get(label, 0) + 1
+        return fn(*args, **kwargs)
+
+    return jax.jit(counted, static_argnames=static_argnames,
+                   donate_argnums=donate_argnums)

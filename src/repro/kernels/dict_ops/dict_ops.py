@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import instrumented_jit
+
 
 def _scan_exact_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
                        lo_ref, hi_ref, cnt_ref, neg_ref):
@@ -48,7 +50,7 @@ def _scan_exact_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
                            axis=1, keepdims=True).T
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def scan_filter_agg_exact_kernel(fcodes, acodes, valid, dictionary, bounds,
                                  block: int = 4096, interpret: bool = True):
     """Per-block split-sum partials for Q fused queries; combined on host."""
@@ -106,7 +108,7 @@ def _scan_exact_sharded_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref,
                                axis=1)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def scan_filter_agg_sharded_kernel(fcodes, acodes, valid, dictionary, bounds,
                                    block: int = 4096, interpret: bool = True):
     """One launch over (n_shards, width) stacked shards x Q fused queries."""
@@ -153,7 +155,7 @@ def _scan_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
     cnt_ref[0] += jnp.sum(mask.astype(jnp.int32))
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def scan_filter_agg_kernel(fcodes, acodes, valid, dictionary, bounds,
                            block: int = 4096, interpret: bool = True):
     (n,) = fcodes.shape

@@ -1,0 +1,130 @@
+"""Jitted jax-numpy lowerings of the fused-scan kernels (CPU fast path).
+
+Each lowering computes the *same per-block split-16-bit int32 partials* as
+its Pallas kernel — pure integer arithmetic, so the results are
+bit-identical and the ops-layer host reassembly is shared verbatim between
+the kernel and lowered paths. The bodies are plain traceable functions
+(no jit) so the fused join-scan entry point in ``kernels/hash_probe`` can
+inline two of them inside ONE traced call; the jitted wrappers here are
+the standalone entry points the ops wrappers dispatch to on CPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels.common import instrumented_jit
+
+
+def scan_exact_partials(fcodes, acodes, valid, dictionary, bounds, block):
+    """Traceable body: (lo16, hi16, cnt, neg) per-block partials, (nb, Q).
+
+    Mirrors ``dict_ops._scan_exact_kernel`` exactly: per-block masked sums
+    of the split 16-bit halves of the two's-complement aggregate values,
+    each partial bounded by block * 0xFFFF < 2^31.
+    """
+    n = fcodes.shape[0]
+    nb = n // block
+    f = fcodes.reshape(nb, block)
+    a = acodes.reshape(nb, block)
+    v = valid.reshape(nb, block)
+    lo = bounds[:, 0][:, None, None]
+    hi = bounds[:, 1][:, None, None]
+    mask = (f[None] >= lo) & (f[None] < hi) & (v[None] != 0)
+    m = mask.astype(jnp.int32)                    # (Q, nb, block)
+    vals = jnp.take(dictionary, a)                # (nb, block)
+    lo16 = (vals & 0xFFFF)[None]
+    hi16 = ((vals >> 16) & 0xFFFF)[None]
+    neg = (vals < 0).astype(jnp.int32)[None]
+    return (jnp.sum(m * lo16, axis=2).T,          # (nb, Q) each
+            jnp.sum(m * hi16, axis=2).T,
+            jnp.sum(m, axis=2).T,
+            jnp.sum(m * neg, axis=2).T)
+
+
+def scan_exact_sharded_partials(fcodes, acodes, valid, dictionary, bounds,
+                                block):
+    """Traceable body: (n_shards, nb, Q) partials — the stacked-shard scan."""
+    n_shards, width = fcodes.shape
+    nb = width // block
+    f = fcodes.reshape(n_shards, nb, block)
+    a = acodes.reshape(n_shards, nb, block)
+    v = valid.reshape(n_shards, nb, block)
+    lo = bounds[:, 0][:, None, None, None]
+    hi = bounds[:, 1][:, None, None, None]
+    mask = (f[None] >= lo) & (f[None] < hi) & (v[None] != 0)
+    m = mask.astype(jnp.int32)                    # (Q, S, nb, block)
+    vals = jnp.take(dictionary, a)                # (S, nb, block)
+    lo16 = (vals & 0xFFFF)[None]
+    hi16 = ((vals >> 16) & 0xFFFF)[None]
+    neg = (vals < 0).astype(jnp.int32)[None]
+    move = functools.partial(jnp.transpose, axes=(1, 2, 0))
+    return (move(jnp.sum(m * lo16, axis=3)),      # (S, nb, Q) each
+            move(jnp.sum(m * hi16, axis=3)),
+            move(jnp.sum(m, axis=3)),
+            move(jnp.sum(m * neg, axis=3)))
+
+
+def pad_rows_flat(fcodes, acodes, valid, block):
+    """In-trace row padding to a block multiple (valid=0 scan identity;
+    fcodes get int32.max so no code range matches). Traced shapes key on
+    the RAW row count, so callers skip the eager pad dispatches — the
+    expensive part of per-call overhead on CPU (~35us per eager op)."""
+    n = fcodes.shape[0]
+    pad = (-n) % block
+    v = valid.astype(jnp.int32)
+    if pad:
+        fcodes = jnp.pad(fcodes, (0, pad),
+                         constant_values=jnp.iinfo(jnp.int32).max)
+        acodes = jnp.pad(acodes, (0, pad))
+        v = jnp.pad(v, (0, pad))
+    return fcodes, acodes, v
+
+
+def pad_rows_sharded(fcodes, acodes, valid, block):
+    """In-trace width padding of stacked (n_shards, width) shards."""
+    width = fcodes.shape[1]
+    pad = (-width) % block
+    v = valid.astype(jnp.int32)
+    if pad:
+        wpad = ((0, 0), (0, pad))
+        fcodes = jnp.pad(fcodes, wpad)
+        acodes = jnp.pad(acodes, wpad)
+        v = jnp.pad(v, wpad)
+    return fcodes, acodes, v
+
+
+@functools.partial(instrumented_jit, static_argnames=("block",))
+def scan_exact_lowered(fcodes, acodes, valid, dictionary, bounds,
+                       block: int = 4096):
+    fcodes, acodes, v = pad_rows_flat(fcodes, acodes, valid, block)
+    return scan_exact_partials(fcodes, acodes, v, dictionary, bounds, block)
+
+
+@functools.partial(instrumented_jit, static_argnames=("block",))
+def scan_exact_sharded_lowered(fcodes, acodes, valid, dictionary, bounds,
+                               block: int = 4096):
+    fcodes, acodes, v = pad_rows_sharded(fcodes, acodes, valid, block)
+    return scan_exact_sharded_partials(fcodes, acodes, v, dictionary,
+                                       bounds, block)
+
+
+@functools.partial(instrumented_jit, static_argnames=("block",))
+def scan_float_lowered(fcodes, acodes, valid, dictionary, bounds,
+                       block: int = 4096):
+    """Lowering of the legacy float32 scan: per-block sums, then a block
+    reduction (the kernel accumulates block partials sequentially; callers
+    tolerance-test this path, unlike the exact integer partials above)."""
+    fcodes, acodes, v = pad_rows_flat(fcodes, acodes, valid, block)
+    n = fcodes.shape[0]
+    nb = n // block
+    f = fcodes.reshape(nb, block)
+    a = acodes.reshape(nb, block)
+    v = v.reshape(nb, block)
+    mask = (f >= bounds[0]) & (f < bounds[1]) & (v != 0)
+    vals = jnp.take(dictionary, a)
+    contrib = jnp.where(mask, vals.astype(jnp.float32), 0.0)
+    return (jnp.sum(contrib, axis=1).sum()[None],
+            jnp.sum(mask.astype(jnp.int32))[None])

@@ -1,17 +1,117 @@
-"""Public wrappers for the fused dictionary-encoded scan."""
+"""Public wrappers for the fused dictionary-encoded scan.
+
+Execution mode (``common.kernel_mode``): the Pallas kernels run compiled on
+real accelerators or in interpret mode when forced; on CPU the default is
+the jitted jax-numpy lowering (``lowered.py``), which produces the *same*
+per-block split-accumulator partials — the host reassembly below is shared
+by both paths and the results are bit-identical.
+
+Dispatch-overhead note (the CPU fast path's whole point): the lowered
+entry points take the RAW arrays and pad *inside* the traced call, and the
+query bounds stay host numpy (jit converts an np argument cheaper than an
+eager ``jnp.asarray``) — so a warm scan costs one jitted dispatch plus the
+host reassembly, no eager device ops. Shapes stay trace-stable because the
+dictionary and query-count axes are pow2-bucketed here on the host.
+"""
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.common import default_interpret, next_pow2
+from repro.kernels.common import kernel_mode, next_pow2
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
                                              scan_filter_agg_kernel,
                                              scan_filter_agg_sharded_kernel)
+from repro.kernels.dict_ops.lowered import (scan_exact_lowered,
+                                            scan_exact_sharded_lowered,
+                                            scan_float_lowered)
 from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
                                         scan_filter_agg_ref,
                                         scan_filter_agg_sharded_ref)
+
+_I32_MAX = np.iinfo(np.int32).max
+
+
+def pad_dictionary_pow2(dictionary):
+    """Pad a dictionary to the next power of two so growing dictionaries
+    reuse compiled shapes; padded entries are never addressed by a code.
+    Type-preserving: host numpy stays host numpy (no eager device op)."""
+    k = dictionary.shape[0]
+    kpad = next_pow2(k) - k
+    if not kpad:
+        return dictionary
+    if isinstance(dictionary, np.ndarray):
+        return np.pad(dictionary, (0, kpad))
+    return jnp.pad(dictionary, (0, kpad))
+
+
+def pad_bounds_pow2(bounds) -> np.ndarray:
+    """(Q, 2) int32 code bounds padded to a pow2 query count with empty
+    ranges — bounding the number of distinct compiled shapes. Returned as
+    host numpy; the jitted callee converts it on dispatch."""
+    nq = len(bounds)
+    barr = np.zeros((next_pow2(nq), 2), dtype=np.int32)
+    barr[:nq] = np.asarray(bounds, dtype=np.int32).reshape(-1, 2)
+    return barr
+
+
+def assemble_exact(lo16, hi16, cnt, neg, axis):
+    """Reassemble exact int64 (sums, counts) from split-16-bit partials.
+
+    sum(u32(v)) - 2^32 * #negatives == exact signed sum; `axis` is the
+    per-block partial axis being reduced (0 for (nb, Q) partials, 1 for
+    (n_shards, nb, Q)).
+    """
+    lo64 = np.asarray(lo16).astype(np.int64).sum(axis=axis)
+    hi64 = np.asarray(hi16).astype(np.int64).sum(axis=axis)
+    counts = np.asarray(cnt).astype(np.int64).sum(axis=axis)
+    negs = np.asarray(neg).astype(np.int64).sum(axis=axis)
+    sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
+    return sums, counts
+
+
+def scan_exact_dispatch(fcodes, acodes, valid, dictionary, bounds,
+                        block: int):
+    """Mode-dispatched exact scan over RAW (unpadded) flat columns: same
+    (nb, Q) int32 partials either way. `dictionary` must be pow2-padded,
+    `bounds` a host (pow2(Q), 2) int32 array."""
+    mode = kernel_mode()
+    if mode == "lowered":
+        return scan_exact_lowered(fcodes, acodes, valid, dictionary, bounds,
+                                  block=block)
+    n = fcodes.shape[0]
+    pad = (-n) % block
+    v = valid.astype(jnp.int32)
+    if pad:
+        fcodes = jnp.pad(fcodes, (0, pad), constant_values=_I32_MAX)
+        acodes = jnp.pad(acodes, (0, pad))
+        v = jnp.pad(v, (0, pad))
+    return scan_filter_agg_exact_kernel(fcodes, acodes, v, dictionary,
+                                        jnp.asarray(bounds), block=block,
+                                        interpret=(mode == "interpret"))
+
+
+def scan_exact_sharded_dispatch(fcodes, acodes, valid, dictionary, bounds,
+                                block: int):
+    """Mode-dispatched stacked-shard scan over RAW (n_shards, width) arrays:
+    (n_shards, nb, Q) partials. Padding contract as scan_exact_dispatch
+    (stacked padding carries valid=0, the scan identity)."""
+    mode = kernel_mode()
+    if mode == "lowered":
+        return scan_exact_sharded_lowered(fcodes, acodes, valid, dictionary,
+                                          bounds, block=block)
+    width = fcodes.shape[1]
+    pad = (-width) % block
+    v = valid.astype(jnp.int32)
+    if pad:
+        wpad = ((0, 0), (0, pad))
+        fcodes = jnp.pad(fcodes, wpad)
+        acodes = jnp.pad(acodes, wpad)
+        v = jnp.pad(v, wpad)
+    return scan_filter_agg_sharded_kernel(fcodes, acodes, v, dictionary,
+                                          jnp.asarray(bounds), block=block,
+                                          interpret=(mode == "interpret"))
 
 
 def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
@@ -31,16 +131,22 @@ def scan_filter_agg(fcodes, acodes, valid, dictionary, code_lo, code_hi,
     if not use_pallas:
         return scan_filter_agg_ref(fcodes, acodes, valid, dictionary,
                                    code_lo, code_hi)
+    bounds = np.asarray([code_lo, code_hi], dtype=np.int32)
+    mode = kernel_mode()
+    if mode == "lowered":
+        s, c = scan_float_lowered(fcodes, acodes, valid, dictionary, bounds,
+                                  block=block)
+        return s[0], c[0]
     (n,) = fcodes.shape
     pad = (-n) % block
+    v = valid.astype(jnp.int32)
     if pad:
-        fcodes = jnp.pad(fcodes, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
+        fcodes = jnp.pad(fcodes, (0, pad), constant_values=_I32_MAX)
         acodes = jnp.pad(acodes, (0, pad))
-        valid = jnp.pad(valid, (0, pad))
-    bounds = jnp.asarray([code_lo, code_hi], dtype=jnp.int32)
-    s, c = scan_filter_agg_kernel(fcodes, acodes, valid.astype(jnp.int32),
-                                  dictionary, bounds, block=block,
-                                  interpret=default_interpret())
+        v = jnp.pad(v, (0, pad))
+    s, c = scan_filter_agg_kernel(fcodes, acodes, v, dictionary,
+                                  jnp.asarray(bounds), block=block,
+                                  interpret=(mode == "interpret"))
     return s[0], c[0]
 
 
@@ -57,32 +163,11 @@ def scan_filter_agg_batch(fcodes, acodes, valid, dictionary, bounds,
     (n,) = fcodes.shape
     if n == 0 or not len(bounds):
         return [(0, 0) for _ in bounds]
-    pad = (-n) % block
-    if pad:
-        fcodes = jnp.pad(fcodes, (0, pad), constant_values=jnp.iinfo(jnp.int32).max)
-        acodes = jnp.pad(acodes, (0, pad))
-        valid = jnp.pad(valid, (0, pad))
-    # pad the dictionary to a power of two so growing dictionaries reuse
-    # compiled kernel shapes; padded entries are never addressed by a code
-    k = dictionary.shape[0]
-    kpad = next_pow2(k) - k
-    if kpad:
-        dictionary = jnp.pad(dictionary, (0, kpad))
-    # pad the query axis to a power of two as well (empty ranges), again to
-    # bound the number of distinct compiled shapes
     nq = len(bounds)
-    barr = np.zeros((next_pow2(nq), 2), dtype=np.int32)
-    barr[:nq] = np.asarray(bounds, dtype=np.int32).reshape(-1, 2)
-    b = jnp.asarray(barr)
-    lo16, hi16, cnt, neg = scan_filter_agg_exact_kernel(
-        fcodes, acodes, valid.astype(jnp.int32), dictionary, b,
-        block=block, interpret=default_interpret())
-    lo64 = np.asarray(lo16).astype(np.int64).sum(axis=0)
-    hi64 = np.asarray(hi16).astype(np.int64).sum(axis=0)
-    counts = np.asarray(cnt).astype(np.int64).sum(axis=0)
-    negs = np.asarray(neg).astype(np.int64).sum(axis=0)
-    # reassemble: sum(u32(v)) - 2^32 * #negatives == exact signed sum
-    sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
+    lo16, hi16, cnt, neg = scan_exact_dispatch(
+        fcodes, acodes, valid, pad_dictionary_pow2(dictionary),
+        pad_bounds_pow2(bounds), block)
+    sums, counts = assemble_exact(lo16, hi16, cnt, neg, axis=0)
     return [(int(s), int(c)) for s, c in zip(sums[:nq], counts[:nq])]
 
 
@@ -104,27 +189,11 @@ def scan_filter_agg_sharded(fcodes, acodes, valid, dictionary, bounds,
     if width == 0 or nq == 0:
         return [[(0, 0)] * nq for _ in range(n_shards)]
     # bucket the block to the (pow2) shard width so small shards don't pad
-    # a 4096-wide tile each; pad the stacked width to a block multiple
-    # (padding carries valid=0, the scan identity)
+    # a 4096-wide tile each
     block = min(block, next_pow2(width))
-    pad = (-width) % block
-    if pad:
-        fcodes = jnp.pad(fcodes, ((0, 0), (0, pad)))
-        acodes = jnp.pad(acodes, ((0, 0), (0, pad)))
-        valid = jnp.pad(valid, ((0, 0), (0, pad)))
-    k = dictionary.shape[0]
-    kpad = next_pow2(k) - k
-    if kpad:  # pow2 shape bucketing, as in scan_filter_agg_batch
-        dictionary = jnp.pad(dictionary, (0, kpad))
-    barr = np.zeros((next_pow2(nq), 2), dtype=np.int32)
-    barr[:nq] = np.asarray(bounds, dtype=np.int32).reshape(-1, 2)
-    lo16, hi16, cnt, neg = scan_filter_agg_sharded_kernel(
-        fcodes, acodes, valid.astype(jnp.int32), dictionary,
-        jnp.asarray(barr), block=block, interpret=default_interpret())
-    lo64 = np.asarray(lo16).astype(np.int64).sum(axis=1)   # (n_shards, Q)
-    hi64 = np.asarray(hi16).astype(np.int64).sum(axis=1)
-    counts = np.asarray(cnt).astype(np.int64).sum(axis=1)
-    negs = np.asarray(neg).astype(np.int64).sum(axis=1)
-    sums = lo64 + (hi64 << np.int64(16)) - (negs << np.int64(32))
+    lo16, hi16, cnt, neg = scan_exact_sharded_dispatch(
+        fcodes, acodes, valid, pad_dictionary_pow2(dictionary),
+        pad_bounds_pow2(bounds), block)
+    sums, counts = assemble_exact(lo16, hi16, cnt, neg, axis=1)
     return [[(int(sums[s, q]), int(counts[s, q])) for q in range(nq)]
             for s in range(n_shards)]

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import instrumented_jit
+
 EMPTY = jnp.int32(-2147483648)  # reserved empty-slot key
 
 
@@ -56,7 +58,7 @@ def _probe_sharded_kernel(q_ref, tk_ref, tv_ref, default_ref, out_ref):
     out_ref[0, :] = jnp.where(hit.any(axis=1), val, default)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def probe_table_sharded(queries, table_keys, table_vals, default,
                         block: int = 1024, interpret: bool = True):
     """Probe a (n_shards, width) stacked query batch in one launch."""
@@ -78,7 +80,7 @@ def probe_table_sharded(queries, table_keys, table_vals, default,
     )(queries, table_keys, table_vals, default)
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def probe_table(queries, table_keys, table_vals, default, block: int = 1024,
                 interpret: bool = True):
     """Probe `queries` against the bucketed table; miss -> default."""

@@ -1,0 +1,35 @@
+"""Jitted jax-numpy lowering of the bucketed probe (CPU fast path).
+
+Elementwise-identical math to ``hash_probe._probe_kernel`` — the kernel's
+block grid only tiles the query axis, so one whole-array lowering produces
+bit-identical results for both the flat and the leading-shard-axis layout.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import instrumented_jit
+
+
+def probe_body(q, tk, tv, default):
+    """Traceable body shared by the flat and sharded lowered probes."""
+    n_buckets = tk.shape[0]
+    bucket = jax.lax.rem(q, n_buckets)  # the paper's modulo hash
+    bucket = jnp.where(bucket < 0, bucket + n_buckets, bucket)
+    bk = jnp.take(tk, bucket, axis=0)   # (..., slots) gathered bucket rows
+    bv = jnp.take(tv, bucket, axis=0)
+    hit = bk == q[..., None]            # vector-wide slot compare
+    val = jnp.max(jnp.where(hit, bv, jnp.iinfo(jnp.int32).min), axis=-1)
+    return jnp.where(hit.any(axis=-1), val, default[0])
+
+
+@instrumented_jit
+def probe_lowered(queries, table_keys, table_vals, default):
+    return probe_body(queries, table_keys, table_vals, default)
+
+
+@instrumented_jit
+def probe_sharded_lowered(queries, table_keys, table_vals, default):
+    return probe_body(queries, table_keys, table_vals, default)

@@ -1,1 +1,3 @@
-from repro.kernels.merge_runs.ops import merge_sorted_pair, merge_sorted_runs
+from repro.kernels.merge_runs.ops import (merge_sorted_pair,
+                                          merge_sorted_pairs,
+                                          merge_sorted_runs)

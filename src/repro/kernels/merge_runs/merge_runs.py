@@ -19,12 +19,13 @@ through it afterwards.
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.common import instrumented_jit
 
 
 def _merge_stage(hi, lo, idx, j):
@@ -53,23 +54,31 @@ def _merge_stage(hi, lo, idx, j):
     return exchange(ah, bh), exchange(al, bl), exchange(ai, bi)
 
 
-def _merge_kernel(ah_ref, al_ref, ai_ref, bh_ref, bl_ref, bi_ref,
-                  oh_ref, ol_ref, oi_ref):
-    """Merge two ascending runs (rows, width) -> (rows, 2*width)."""
-    hi = jnp.concatenate([ah_ref[...], bh_ref[...][:, ::-1]], axis=-1)
-    lo = jnp.concatenate([al_ref[...], bl_ref[...][:, ::-1]], axis=-1)
-    idx = jnp.concatenate([ai_ref[...], bi_ref[...][:, ::-1]], axis=-1)
+def _merge_body(ah, al, ai, bh, bl, bi):
+    """Traceable merge network: concat(A, reverse(B)) is bitonic, then
+    log2(width) compare-exchange stages sort it. Row-independent, so the
+    whole-array lowering and the row-tiled kernel agree bit-for-bit."""
+    hi = jnp.concatenate([ah, bh[:, ::-1]], axis=-1)
+    lo = jnp.concatenate([al, bl[:, ::-1]], axis=-1)
+    idx = jnp.concatenate([ai, bi[:, ::-1]], axis=-1)
     width = hi.shape[-1]
     for j in range(int(math.log2(width)) - 1, -1, -1):
         hi, lo, idx = _merge_stage(hi, lo, idx, j)
+    return hi, lo, idx
+
+
+def _merge_kernel(ah_ref, al_ref, ai_ref, bh_ref, bl_ref, bi_ref,
+                  oh_ref, ol_ref, oi_ref):
+    """Merge two ascending runs (rows, width) -> (rows, 2*width)."""
+    hi, lo, idx = _merge_body(ah_ref[...], al_ref[...], ai_ref[...],
+                              bh_ref[...], bl_ref[...], bi_ref[...])
     oh_ref[...] = hi
     ol_ref[...] = lo
     oi_ref[...] = idx
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def bitonic_merge_pair(ah, al, ai, bh, bl, bi, block_rows: int = 8,
-                       interpret: bool = True):
+def _merge_pallas(ah, al, ai, bh, bl, bi, block_rows: int = 8,
+                  interpret: bool = True):
     """Row-wise merge of two ascending 64-bit-keyed runs.
 
     Each run is (rows, width) split into int32 (hi, lo) key lanes plus an
@@ -90,3 +99,53 @@ def bitonic_merge_pair(ah, al, ai, bh, bl, bi, block_rows: int = 8,
         out_shape=(out, out, out),
         interpret=interpret,
     )(ah, al, ai, bh, bl, bi)
+
+
+bitonic_merge_pair = instrumented_jit(
+    _merge_pallas, static_argnames=("block_rows", "interpret"),
+    name="bitonic_merge_pair")
+
+# Compiled-mode variant: the lanes fed in are freshly padded temporaries
+# (see ops._merge_lane_pair), so their buffers can be donated to the output
+# allocation on real accelerators. CPU/interpret paths skip this — XLA:CPU
+# ignores donation and warns.
+bitonic_merge_pair_donated = instrumented_jit(
+    _merge_pallas, static_argnames=("block_rows", "interpret"),
+    donate_argnums=(0, 1, 2, 3, 4, 5), name="bitonic_merge_pair_donated")
+
+
+bitonic_merge_pair_lowered = instrumented_jit(
+    _merge_body, name="bitonic_merge_pair_lowered")
+
+
+def _merge_lanes_body(lanes):
+    """Single-argument lowering: lanes is the (6, rows, width) stack
+    (ah, al, ai, bh, bl, bi); returns the (3, rows, 2*width) stack
+    (hi, lo, idx). One host->device conversion in, one array out — the
+    cheapest possible warm dispatch on CPU."""
+    hi, lo, idx = _merge_body(lanes[0], lanes[1], lanes[2],
+                              lanes[3], lanes[4], lanes[5])
+    return jnp.stack([hi, lo, idx])
+
+
+merge_lanes_lowered = instrumented_jit(
+    _merge_lanes_body, name="merge_lanes_lowered")
+
+
+def _tournament_body(lanes):
+    """Whole K-way tournament in ONE traced call: lanes is (3, K, W) —
+    the hi/lo/idx lanes of K sentinel-padded runs (K a power of two).
+    Each round merges adjacent run pairs as independent ROWS of one
+    merge-network evaluation (the network is row-independent), halving
+    the run count and doubling the width; log2(K) rounds replace the
+    log2(K)-deep tree of separate pairwise dispatches. Returns the
+    (3, K*W) merged lanes (sentinels sort to the tail)."""
+    hi, lo, idx = lanes[0], lanes[1], lanes[2]
+    while hi.shape[0] > 1:
+        hi, lo, idx = _merge_body(hi[0::2], lo[0::2], idx[0::2],
+                                  hi[1::2], lo[1::2], idx[1::2])
+    return jnp.stack([hi[0], lo[0], idx[0]])
+
+
+merge_tournament_lowered = instrumented_jit(
+    _tournament_body, name="merge_tournament_lowered")

@@ -15,8 +15,11 @@ import numpy as np
 
 import jax.numpy as jnp
 
-from repro.kernels.common import default_interpret, next_pow2
-from repro.kernels.merge_runs.merge_runs import bitonic_merge_pair
+from repro.kernels.common import kernel_mode, next_pow2
+from repro.kernels.merge_runs.merge_runs import (bitonic_merge_pair,
+                                                 bitonic_merge_pair_donated,
+                                                 merge_lanes_lowered,
+                                                 merge_tournament_lowered)
 from repro.kernels.merge_runs.ref import merge_pair_ref, merge_runs_ref
 
 _BIAS = np.int64(1) << np.int64(31)
@@ -47,44 +50,59 @@ def _join64(hi: np.ndarray, lo: np.ndarray) -> np.ndarray:
     return (hi.astype(np.int64) << np.int64(32)) | lo_u
 
 
-def _pad_lane(lane, width, value):
-    pad = width - lane.shape[-1]
-    if pad:
-        lane = jnp.pad(lane, ((0, 0), (0, pad)), constant_values=value)
-    return lane
-
-
 _I32_MAX = np.iinfo(np.int32).max
 
 
 def _merge_lane_pair(ah, al, ai, bh, bl, bi):
-    """Merge two ascending (rows, w) lane triples -> trimmed (rows, wa+wb).
+    """Merge two ascending (rows, w) host-numpy lane triples -> trimmed
+    host-numpy (rows, wa+wb).
 
-    Pads runs to a shared power-of-two width (and rows to a multiple of 8)
-    with (hi, lo) = int32-max sentinels that sort after every real key
-    except a literal int64.max (callers route runs containing it to the
-    reference merge); sentinel entries carry index -1 and are trimmed off
-    the tail.
+    Pads runs to a shared power-of-two width with (hi, lo) = int32-max
+    sentinels that sort after every real key except a literal int64.max
+    (callers route runs containing it to the reference merge); sentinel
+    entries carry index -1 and are trimmed off the tail.
+
+    All padding and trimming happens in host numpy: the lowered path stacks
+    the six lanes into ONE (6, rows, width) buffer so a warm merge costs a
+    single jitted dispatch (each eager device pad/slice is ~35-80us on CPU,
+    and a tournament round issues many). The merge network is
+    row-independent, so the lowered path needs no rows%8 padding — that
+    exists only for the kernel's row tiling.
     """
     rows, wa = ah.shape
     wb = bh.shape[-1]
     width = next_pow2(max(wa, wb, 128))
-    ah, al = _pad_lane(ah, width, _I32_MAX), _pad_lane(al, width, _I32_MAX)
-    bh, bl = _pad_lane(bh, width, _I32_MAX), _pad_lane(bl, width, _I32_MAX)
-    ai, bi = _pad_lane(ai, width, -1), _pad_lane(bi, width, -1)
+    mode = kernel_mode()
+    if mode == "lowered":
+        lanes = np.full((6, rows, width), _I32_MAX, dtype=np.int32)
+        lanes[2] = -1
+        lanes[5] = -1
+        lanes[0, :, :wa] = ah
+        lanes[1, :, :wa] = al
+        lanes[2, :, :wa] = ai
+        lanes[3, :, :wb] = bh
+        lanes[4, :, :wb] = bl
+        lanes[5, :, :wb] = bi
+        oh, ol, oi = np.asarray(merge_lanes_lowered(lanes))
+        return oh[:, : wa + wb], ol[:, : wa + wb], oi[:, : wa + wb]
     pad_rows = (-rows) % 8
-    if pad_rows:
-        rpad = ((0, pad_rows), (0, 0))
-        ah = jnp.pad(ah, rpad, constant_values=_I32_MAX)
-        al = jnp.pad(al, rpad, constant_values=_I32_MAX)
-        bh = jnp.pad(bh, rpad, constant_values=_I32_MAX)
-        bl = jnp.pad(bl, rpad, constant_values=_I32_MAX)
-        ai = jnp.pad(ai, rpad, constant_values=-1)
-        bi = jnp.pad(bi, rpad, constant_values=-1)
-    oh, ol, oi = bitonic_merge_pair(ah, al, ai, bh, bl, bi,
-                                    interpret=default_interpret())
+    padded = []
+    for lane, wlane, fill in ((ah, wa, _I32_MAX), (al, wa, _I32_MAX),
+                              (ai, wa, -1), (bh, wb, _I32_MAX),
+                              (bl, wb, _I32_MAX), (bi, wb, -1)):
+        buf = np.full((rows + pad_rows, width), fill, dtype=np.int32)
+        buf[:rows, :wlane] = lane
+        padded.append(buf)
+    if mode == "compiled":
+        # padded lanes are fresh temporaries -> donate them to the output
+        oh, ol, oi = bitonic_merge_pair_donated(
+            *(jnp.asarray(p) for p in padded), interpret=False)
+    else:
+        oh, ol, oi = bitonic_merge_pair(*padded, interpret=True)
     # valid entries sort before the sentinels; trim to true length
-    return oh[:rows, : wa + wb], ol[:rows, : wa + wb], oi[:rows, : wa + wb]
+    return (np.asarray(oh)[:rows, : wa + wb],
+            np.asarray(ol)[:rows, : wa + wb],
+            np.asarray(oi)[:rows, : wa + wb])
 
 
 def merge_sorted_pair(a, b, ai, bi, use_pallas: bool = True):
@@ -102,10 +120,8 @@ def merge_sorted_pair(a, b, ai, bi, use_pallas: bool = True):
         return merge_pair_ref(a64, b64, ai, bi)
     ah, al = _split64(a64)
     bh, bl = _split64(b64)
-    oh, ol, oi = _merge_lane_pair(jnp.asarray(ah), jnp.asarray(al),
-                                  jnp.asarray(ai), jnp.asarray(bh),
-                                  jnp.asarray(bl), jnp.asarray(bi))
-    return _join64(np.asarray(oh), np.asarray(ol)), np.asarray(oi)
+    oh, ol, oi = _merge_lane_pair(ah, al, ai, bh, bl, bi)
+    return _join64(oh, ol), oi
 
 
 def merge_sorted_runs(runs: list, use_pallas: bool = True):
@@ -121,12 +137,14 @@ def merge_sorted_runs(runs: list, use_pallas: bool = True):
     if not use_pallas or any(r.size and r[-1] == _SENTINEL_KEY
                              for r in runs64):  # runs are ascending
         return merge_runs_ref(runs64)
+    if kernel_mode() == "lowered":
+        return _merge_runs_fused(runs64, offsets)
+    # kernel modes: pairwise tournament, one kernel dispatch per pair
     keyed = []
     for r, off in zip(runs64, offsets):
         hi, lo = _split64(r)
         idx = (np.arange(r.shape[0], dtype=np.int32) + np.int32(off))
-        keyed.append((jnp.asarray(hi[None, :]), jnp.asarray(lo[None, :]),
-                      jnp.asarray(idx[None, :])))
+        keyed.append((hi[None, :], lo[None, :], idx[None, :]))
     while len(keyed) > 1:
         nxt = []
         for p in range(0, len(keyed) - 1, 2):
@@ -136,5 +154,64 @@ def merge_sorted_runs(runs: list, use_pallas: bool = True):
             nxt.append(keyed[-1])
         keyed = nxt
     hi, lo, idx = keyed[0]
-    return (_join64(np.asarray(hi)[0], np.asarray(lo)[0]),
-            np.asarray(idx)[0])
+    return _join64(hi[0], lo[0]), idx[0]
+
+
+def merge_sorted_pairs(a_list, b_list, use_pallas: bool = True):
+    """Merge C independent ascending (a_i, b_i) run pairs in ONE merge
+    dispatch: pair i rides row i of the row-independent merge network.
+
+    Values only — no payload indices come back. Returns the merged int64
+    key arrays, each of exact length len(a_i) + len(b_i), elementwise
+    identical to C separate two-run merges: a merged key sequence is
+    determined by its input multiset, and each row's sentinel padding
+    sorts to that row's tail.
+    """
+    a64 = [np.asarray(a, dtype=np.int64).reshape(-1) for a in a_list]
+    b64 = [np.asarray(b, dtype=np.int64).reshape(-1) for b in b_list]
+    if not use_pallas or any(r.size and r[-1] == _SENTINEL_KEY
+                             for r in a64 + b64):  # runs are ascending
+        return [merge_runs_ref([a, b])[0] for a, b in zip(a64, b64)]
+    rows = len(a64)
+    wa = max(max((a.shape[0] for a in a64), default=0), 1)
+    wb = max(max((b.shape[0] for b in b64), default=0), 1)
+    ah = np.full((rows, wa), _I32_MAX, dtype=np.int32)
+    al = np.full((rows, wa), _I32_MAX, dtype=np.int32)
+    ai = np.full((rows, wa), -1, dtype=np.int32)
+    bh = np.full((rows, wb), _I32_MAX, dtype=np.int32)
+    bl = np.full((rows, wb), _I32_MAX, dtype=np.int32)
+    bi = np.full((rows, wb), -1, dtype=np.int32)
+    for i, (a, b) in enumerate(zip(a64, b64)):
+        na, nb = a.shape[0], b.shape[0]
+        ah[i, :na], al[i, :na] = _split64(a)
+        ai[i, :na] = np.arange(na, dtype=np.int32)
+        bh[i, :nb], bl[i, :nb] = _split64(b)
+        bi[i, :nb] = np.arange(nb, dtype=np.int32)
+    oh, ol, _ = _merge_lane_pair(ah, al, ai, bh, bl, bi)
+    merged = _join64(oh, ol)
+    return [merged[i, :a64[i].shape[0] + b64[i].shape[0]]
+            for i in range(rows)]
+
+
+def _merge_runs_fused(runs64, offsets):
+    """Lowered-mode K-way merge: the entire tournament in ONE jitted
+    dispatch (merge_tournament_lowered). Runs are sentinel-padded to a
+    shared pow2 width and the run count to a pow2 (empty all-sentinel
+    runs), so traced shapes stay pow2-bucketed; the sentinels sort to the
+    tail and the exact total-length prefix is the merged result. Tie
+    order between equal keys may differ from the pairwise path, which is
+    unobservable: callers consume the merged key order and gather
+    payloads through the index, and equal keys gather equal entries."""
+    total = sum(r.shape[0] for r in runs64)
+    k = next_pow2(max(len(runs64), 1))
+    width = next_pow2(max(max(r.shape[0] for r in runs64), 128))
+    lanes = np.full((3, k, width), _I32_MAX, dtype=np.int32)
+    lanes[2] = -1
+    for t, (r, off) in enumerate(zip(runs64, offsets)):
+        n = r.shape[0]
+        hi, lo = _split64(r)
+        lanes[0, t, :n] = hi
+        lanes[1, t, :n] = lo
+        lanes[2, t, :n] = np.arange(n, dtype=np.int32) + np.int32(off)
+    out = np.asarray(merge_tournament_lowered(lanes))
+    return _join64(out[0, :total], out[1, :total]), out[2, :total]

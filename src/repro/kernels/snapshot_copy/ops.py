@@ -3,24 +3,35 @@
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.common import default_interpret
+from repro.kernels.common import kernel_mode
 from repro.kernels.snapshot_copy.ref import snapshot_copy_ref
-from repro.kernels.snapshot_copy.snapshot_copy import snapshot_copy_kernel
+from repro.kernels.snapshot_copy.snapshot_copy import (snapshot_copy_kernel,
+                                                       snapshot_copy_lowered)
 
 
 def snapshot_copy(src, prev, dirty, block: int = 8192,
-                  use_pallas: bool = True) -> jnp.ndarray:
-    """Copy dirty chunks from src, carry clean chunks from prev."""
+                  use_pallas: bool = True):
+    """Copy dirty chunks from src, carry clean chunks from prev.
+
+    Accepts host numpy or device arrays; the lowered path pads and trims
+    in-trace so the warm call is one jitted dispatch (no eager device ops).
+    """
     (n,) = src.shape
     n_chunks = (n + block - 1) // block
     assert dirty.shape[0] == n_chunks
     if not use_pallas:
         return snapshot_copy_ref(src, prev, dirty, block)
+    mode = kernel_mode()
+    if mode == "lowered":
+        d = np.asarray(dirty, dtype=np.int32)
+        return snapshot_copy_lowered(src, prev, d, block=block)
     pad = n_chunks * block - n
     if pad:
         src = jnp.pad(src, (0, pad))
         prev = jnp.pad(prev, (0, pad))
-    out = snapshot_copy_kernel(src, prev, dirty.astype(jnp.int32), block=block,
-                               interpret=default_interpret())
+    out = snapshot_copy_kernel(src, prev, dirty.astype(jnp.int32),
+                               block=block,
+                               interpret=(mode == "interpret"))
     return out[:n]

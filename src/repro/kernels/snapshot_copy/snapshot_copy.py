@@ -18,13 +18,33 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.common import instrumented_jit
+
 
 def _copy_kernel(src_ref, prev_ref, dirty_ref, out_ref):
     dirty = dirty_ref[0] != 0
     out_ref[...] = jnp.where(dirty, src_ref[...], prev_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+@functools.partial(instrumented_jit, static_argnames=("block",))
+def snapshot_copy_lowered(src, prev, dirty, block: int = 8192):
+    """Jitted chunk-predicated select (CPU fast path): same per-chunk
+    where() as the kernel, one whole-array op. Takes RAW (unpadded)
+    columns and pads/trims in-trace, so a warm call is a single dispatch
+    with no eager device glue (the traced shape keys on the raw row
+    count, which is fixed for a session's table)."""
+    (n,) = src.shape
+    n_chunks = dirty.shape[0]
+    pad = n_chunks * block - n
+    if pad:
+        src = jnp.pad(src, (0, pad))
+        prev = jnp.pad(prev, (0, pad))
+    out = jnp.where(dirty[:, None] != 0, src.reshape(n_chunks, block),
+                    prev.reshape(n_chunks, block))
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
 def snapshot_copy_kernel(src, prev, dirty, block: int = 8192,
                          interpret: bool = True):
     (n,) = src.shape

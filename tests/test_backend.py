@@ -129,20 +129,24 @@ def test_pallas_backend_fuses_query_groups(workload, monkeypatch):
 
 
 def test_pallas_backend_uses_kernel_for_join_queries(workload, monkeypatch):
-    """Join queries go through filter_agg_mask — that path must still run
-    the fused scan kernel, not inherit the numpy scan (MRO regression)."""
+    """A join-query group rides ONE fused scan+join device call — not the
+    old per-query mask scan + host bincount glue."""
     counts = _count_kernel_calls(monkeypatch)
     table, _, _ = workload
     rng = np.random.default_rng(7)
-    queries = engine.gen_queries(rng, 4, 4, join_fraction=1.0)
+    queries = engine.gen_queries(rng, 4, 4, join_fraction=1.0,
+                                 same_column=True)   # one column set
     replica = DSMReplica.from_table(table)
-    got = engine.run_query_group_dsm(replica.columns, queries[:1],
-                                     backend="pallas")
-    exp = [engine.run_query_dsm(replica.columns, queries[0],
-                                backend="numpy")]
-    assert got == exp
-    assert counts.get("scan_filter_agg", 0) > 0, counts
-    assert counts.get("probe", 0) > 0, counts
+    for group in engine.group_queries(queries):
+        got = engine.run_query_group_dsm(replica.columns, group,
+                                         backend="pallas")
+        exp = [engine.run_query_dsm(replica.columns, q, backend="numpy")
+               for q in group]
+        assert got == exp
+    n_groups = len(engine.group_queries(queries))
+    assert counts.get("scan_filter_agg_join", 0) == n_groups, counts
+    assert counts.get("scan_filter_agg", 0) == 0, counts
+    assert counts.get("probe", 0) == 0, counts
 
 
 def test_numpy_backend_never_touches_kernels(workload, monkeypatch):

@@ -1,0 +1,57 @@
+"""Golden smoke under forced multi-device XLA (4 host platform devices).
+
+The kernel fast path is developed on a single CPU device; this guards the
+configuration CI actually cares about — real multi-device processes — in a
+subprocess so the forced device count never leaks into other tests.
+``XLA_FLAGS`` must be set before JAX imports, hence via the child's env.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+_REPO = pathlib.Path(__file__).parent.parent
+
+_PROG = textwrap.dedent("""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.core import engine, htap, schema
+
+    assert jax.device_count() == 4, jax.devices()
+
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", 3, 32)
+    table = schema.gen_table(rng, sch, 600)
+    stream = schema.gen_update_stream(rng, sch, 600, 1500, write_ratio=0.5)
+    queries = engine.gen_queries(rng, 6, 3)
+
+    golden = htap.run("Polynesia", table, stream, queries,
+                      backend="numpy", n_shards=1).results
+    got = htap.run("Polynesia", table, stream, queries,
+                   backend="pallas", n_shards=4).results
+    assert [int(a) for a in got] == [int(a) for a in golden], (got, golden)
+    print(json.dumps({"ok": True, "devices": jax.device_count(),
+                      "answers": [int(a) for a in got]}))
+""")
+
+
+def test_golden_smoke_with_four_host_devices():
+    """pallas@4 answers must match the numpy@1 golden run when XLA is
+    forced to expose 4 host devices (kernels and the vmapped sharded
+    execution plane must not depend on a single-device world)."""
+    env = {**os.environ,
+           "PYTHONPATH": str(_REPO / "src"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "REPRO_PALLAS_INTERPRET": "auto"}
+    out = subprocess.run([sys.executable, "-c", _PROG], cwd=_REPO,
+                         capture_output=True, text=True, timeout=300,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-2000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"] and payload["devices"] == 4

@@ -36,9 +36,10 @@ METRICS = ("txn_tps", "ana_qps")
 METRICS_LOWER_BETTER = ("freshness_mean_s", "freshness_max_s")
 # reported but not gated against the baseline: absolute wall clock is
 # machine-dependent (the baseline was recorded on one machine, CI runs on
-# another), so it is informational; the machine-independent *ratio* gate
-# below is what fails the build
-METRICS_REPORT_ONLY = ("wall_s",)
+# another), so it is informational; the machine-independent *ratio* gates
+# below are what fail the build. cold_s is the first pass including jit
+# trace+compile — kept separate so compile-cost growth stays visible.
+METRICS_REPORT_ONLY = ("wall_s", "cold_s")
 # Measured-wall-clock budget for the sharded snapshot plane: the
 # pallas@4 / pallas@1 warm wall ratio — both halves measured in the same
 # run on the same machine, so the ratio ports across machines — may
@@ -46,6 +47,29 @@ METRICS_REPORT_ONLY = ("wall_s",)
 # because interpret mode serializes the vmapped grid steps that real
 # hardware runs in parallel.
 WALL_RATIO_BUDGET = 0.30
+# Warm kernel-path overhead budget: the measured warm wall of pallas@1 may
+# cost at most this multiple of numpy@1's (same run, same machine — the
+# ratio ports). Holds because the CPU default is the jitted jax-numpy
+# lowering with steady-state dispatch (zero re-traces per session round);
+# before that fast path the interpret-mode ratio was ~11x.
+PALLAS_NUMPY_WALL_BUDGET = 3.0
+# Per-op-family warm-time budgets for the kernel microbenchmarks
+# (BENCH_micro.json, --micro). Absolute seconds, sized ~20-40x above the
+# measured lowered-mode medians on a CI-class CPU — loose enough for
+# machine variance, tight enough to fail if a family falls back to
+# interpret-mode dispatch (~1000x). Skipped when the payload was produced
+# with kernel_mode == "interpret" (a forced-slow debugging run).
+MICRO_WARM_BUDGETS_S = {
+    "scan": 0.02,
+    "scan_sharded": 0.02,
+    "scan_join": 0.025,
+    "scan_join_sharded": 0.05,
+    "probe": 0.015,
+    "probe_sharded": 0.02,
+    "merge_runs": 0.3,
+    "sort_rows": 0.015,
+    "snapshot_copy": 0.015,
+}
 
 
 def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -142,23 +166,82 @@ def _sharded_plane_gates(cur: dict, base: dict) -> list[str]:
                 f"{ceiling:.3f} (baseline {base_ratio:.3f} + "
                 f"{WALL_RATIO_BUDGET:.0%} budget) — the sharded plane's "
                 "measured wall-clock regressed")
+    wn = cur.get("numpy@1", {}).get("wall_s")
+    if None not in (w1, wn) and wn > 0:
+        ratio = w1 / wn
+        failed = ratio > PALLAS_NUMPY_WALL_BUDGET
+        status = "FAIL" if failed else "ok"
+        print(f"  wall_s ratio pallas@1/numpy@1 current={ratio:.3f} "
+              f"(budget {PALLAS_NUMPY_WALL_BUDGET:.1f}x) {status}")
+        if failed:
+            failures.append(
+                f"wall_s ratio: pallas@1/numpy@1 = {ratio:.3f} > "
+                f"{PALLAS_NUMPY_WALL_BUDGET:.1f}x budget — the kernel "
+                "path's warm dispatch overhead regressed (interpret-mode "
+                "fallback or per-round re-tracing?)")
+    return failures
+
+
+def check_micro(micro: dict) -> list[str]:
+    """Gate BENCH_micro.json warm times against per-family budgets."""
+    failures = []
+    mode = micro.get("kernel_mode", "?")
+    if mode == "interpret":
+        print(f"  micro: kernel_mode={mode} — budgets skipped "
+              "(forced interpret mode is expected-slow)")
+        return failures
+    families = micro.get("families", {})
+    for name in sorted(MICRO_WARM_BUDGETS_S):
+        budget = MICRO_WARM_BUDGETS_S[name]
+        m = families.get(name)
+        if m is None:
+            failures.append(f"micro.{name}: missing from microbench run")
+            continue
+        warm = m["warm_s"]
+        failed = warm > budget
+        status = "FAIL" if failed else "ok"
+        print(f"  micro {name:18s} warm={warm * 1e6:9.1f}us "
+              f"cold={m['cold_s'] * 1e6:9.1f}us "
+              f"(budget {budget * 1e6:.0f}us) {status}")
+        if failed:
+            failures.append(
+                f"micro.{name}: warm {warm * 1e6:.1f}us > budget "
+                f"{budget * 1e6:.0f}us (mode={mode})")
+    for name in sorted(set(families) - set(MICRO_WARM_BUDGETS_S)):
+        print(f"  micro {name:18s} (no budget — not gated)")
     return failures
 
 
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__)
-    parser.add_argument("current", help="BENCH_ci.json from this run")
-    parser.add_argument("baseline", help="checked-in benchmarks/baseline.json")
+    parser.add_argument("current", nargs="?",
+                        help="BENCH_ci.json from this run")
+    parser.add_argument("baseline", nargs="?",
+                        help="checked-in benchmarks/baseline.json")
     parser.add_argument("--tolerance", type=float, default=0.15,
                         help="allowed fractional regression (default 0.15)")
+    parser.add_argument("--micro", metavar="BENCH_micro.json",
+                        help="also gate a microbench run against the "
+                             "per-op-family warm-time budgets")
     args = parser.parse_args()
-    with open(args.current) as f:
-        current = json.load(f)
-    with open(args.baseline) as f:
-        baseline = json.load(f)
-    print(f"bench gate: {args.current} vs {args.baseline} "
-          f"(tolerance {args.tolerance:.0%})")
-    failures = compare(current, baseline, args.tolerance)
+    if args.current is None and args.micro is None:
+        parser.error("need BENCH_ci.json + baseline, --micro, or both")
+    if (args.current is None) != (args.baseline is None):
+        parser.error("current and baseline must be given together")
+    failures = []
+    if args.current is not None:
+        with open(args.current) as f:
+            current = json.load(f)
+        with open(args.baseline) as f:
+            baseline = json.load(f)
+        print(f"bench gate: {args.current} vs {args.baseline} "
+              f"(tolerance {args.tolerance:.0%})")
+        failures += compare(current, baseline, args.tolerance)
+    if args.micro is not None:
+        with open(args.micro) as f:
+            micro = json.load(f)
+        print(f"micro gate: {args.micro} (per-op-family warm budgets)")
+        failures += check_micro(micro)
     if failures:
         print("bench gate FAILED:")
         for f_ in failures:

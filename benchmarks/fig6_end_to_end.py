@@ -22,8 +22,9 @@ def run():
         results[name] = res
         rows.append((f"fig6_{name}", us,
                      f"txn={res.txn_throughput:.3e};ana={res.ana_throughput:.3e}"))
-    ideal = htap.run_ideal_txn(table, stream)
-    ana_only = htap.run_ana_only(table, queries)
+    ideal = htap.run_spec(htap.SystemSpec.ideal_txn(), table, stream)
+    ana_only = htap.run_spec(htap.SystemSpec.ana_only(), table,
+                             queries=queries)
     rows.append(("fig6_Ideal-Txn", 0.0, f"txn={ideal.txn_throughput:.3e}"))
     rows.append(("fig6_Ana-Only", 0.0, f"ana={ana_only.ana_throughput:.3e}"))
 

@@ -13,10 +13,12 @@ fans analytics out over N analytical islands (ShardedBackend; REPRO_SHARDS
 works too). --timing selects the cost model — whole-run phase buckets
 ("phase") or the round-by-round discrete-event timeline ("timeline",
 core/timeline.py); REPRO_TIMING works too. The ``ci`` tag runs the small
-fixed CI workload over numpy/pallas x shards {1, 4} plus one async-timeline
-and one incremental (HTAPSession, mid-round chunked) configuration and
-writes the throughput gate file (--json, default BENCH_ci.json) compared
-by tools/check_bench.py. The ``serve`` tag is the open-system mixed-traffic
+fixed CI workload over numpy/pallas x shards {1, 4}, the mesh placement
+tier (pallas@4/mesh, when 4 devices are available — REPRO_HOST_DEVICES=4
+through run.sh forces them on CPU), plus one async-timeline and one
+incremental (HTAPSession, mid-round chunked) configuration and writes the
+throughput gate file (--json, default BENCH_ci.json) compared by
+tools/check_bench.py. The ``serve`` tag is the open-system mixed-traffic
 sweep (benchmarks/fig_serve.py).
 """
 
@@ -39,12 +41,27 @@ CI_MATRIX = [
     ("numpy@4", dict(backend="numpy", n_shards=4)),
     ("pallas@1", dict(backend="pallas", n_shards=1)),
     ("pallas@4", dict(backend="pallas", n_shards=4)),
+    # mesh placement tier: the same 4 islands, one per device of a jax
+    # mesh (needs 4 devices — run.sh REPRO_HOST_DEVICES=4 forces them on
+    # CPU; ci_bench skips the combo with a notice when they're missing)
+    ("pallas@4/mesh", dict(backend="pallas@4/mesh")),
     ("numpy@1+timeline-async",
      dict(backend="numpy", n_shards=1, timing="timeline",
           async_propagation=True)),
     ("numpy@1+session-chunked",
      dict(backend="numpy", n_shards=1, session_chunked=True)),
 ]
+
+
+def _mesh_devices_missing(label: str) -> int | None:
+    """Devices a mesh combo needs beyond what the process has (None=runnable)."""
+    if "/mesh" not in label:
+        return None
+    import jax
+
+    from repro.core.backend import parse_backend_spec
+    need = parse_backend_spec(label.split("+")[0]).n_shards or 1
+    return need if jax.device_count() < need else None
 
 
 def _run_polynesia(table, stream, queries, n_rounds, **overrides):
@@ -86,6 +103,13 @@ def ci_bench(json_path: str) -> None:
     metrics = {}
     answers = None
     for label, kwargs in CI_MATRIX:
+        need = _mesh_devices_missing(label)
+        if need is not None:
+            print(f"# skipping {label}: needs {need} devices (have fewer); "
+                  f"force them with REPRO_HOST_DEVICES={need} through "
+                  "benchmarks/run.sh, or XLA_FLAGS="
+                  f"--xla_force_host_platform_device_count={need}")
+            continue
         table, stream, queries = ci_workload()
         # cold pass: counts kernel dispatches and eats the jit compiles;
         # its wall clock is reported separately (cold_s) so compile cost

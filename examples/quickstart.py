@@ -27,7 +27,7 @@ def main():
         results[name] = r
         print(f"{name:12s} {r.txn_throughput:12.3e} {r.ana_throughput:12.3e}"
               f" {r.energy_joules:9.4f}J")
-    ideal = htap.run_ideal_txn(table, stream)
+    ideal = htap.run_spec(htap.SystemSpec.ideal_txn(), table, stream)
     print(f"{'Ideal-Txn':12s} {ideal.txn_throughput:12.3e}")
 
     # systems with end-of-round visibility computed identical answers

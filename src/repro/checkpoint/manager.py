@@ -9,7 +9,8 @@ Layout:  <dir>/step_<N>/
 Restore never trusts an uncommitted step (crash-during-save safe). Arrays
 are stored unsharded (host numpy) and re-placed with `jax.device_put`
 against the *target* mesh's shardings at restore — which is exactly what an
-elastic restart onto a degraded mesh needs (distributed/elastic.py).
+elastic restart onto a different mesh needs (the ROADMAP's elastic-islands
+direction: HTAPSession checkpoint/restore will ride this).
 
 The async writer snapshots arrays to host first (the paper's copy-unit
 abstraction: the training step never blocks on the write-back), then

@@ -13,7 +13,13 @@ surface below, so the same drivers can run either on
 * ``ShardedBackend`` — N analytical islands, each owning a row-wise DSM
   shard, fanning scans out over any inner backend and reducing the exact
   partial aggregates (spec ``"pallas@4"``, ``n_shards=`` on the drivers,
-  or the ``REPRO_SHARDS`` environment variable):
+  or the ``REPRO_SHARDS`` environment variable), or
+* ``MeshBackend`` — the same N islands laid one-per-DEVICE on a 1-D
+  `jax.Mesh` (spec ``"pallas@4/mesh"``, ``placement="mesh"``, or the
+  ``REPRO_PLACEMENT`` environment variable): every island's resident
+  shard lives on its own device, one ``shard_map`` launch scans all
+  islands in place, and the cross-island reduction runs ON the mesh as
+  an integer ``psum``:
 
     ==========================  =================================
     operator                    kernel
@@ -28,7 +34,8 @@ surface below, so the same drivers can run either on
 
 Every backend must produce *bit-identical* results: the integer query
 answers, merged logs, dictionaries and snapshots are asserted equal across
-backends in tests/test_backend.py. Selection is by name (``backend="pallas"``
+backends in tests/test_backend.py. Selection is by spec — a ``BackendSpec``
+or its string form ``name[@N][/placement]`` (``backend="pallas@4/mesh"``
 threaded through the system drivers), by instance, or globally via
 ``set_default_backend`` / the ``REPRO_BACKEND`` environment variable.
 """
@@ -37,6 +44,7 @@ from __future__ import annotations
 
 import abc
 import contextlib
+import dataclasses
 import os
 import sys
 from typing import Callable, Iterable, Sequence
@@ -44,13 +52,17 @@ from typing import Callable, Iterable, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.dsm import EncodedColumn, ShardedView, make_sharded_view
+from repro.core.dsm import (EncodedColumn, ShardedView, make_sharded_view,
+                            stack_shard_columns)
 from repro.core.nsm import UPDATE_DTYPE
+from repro.distributed import island_mesh, place_shard_arrays
 from repro.kernels.bitonic_sort import sort_1024, sort_rows
 from repro.kernels.dict_ops import (scan_filter_agg, scan_filter_agg_batch,
+                                    scan_filter_agg_mesh,
                                     scan_filter_agg_sharded)
 from repro.kernels.hash_probe import (EMPTY_KEY, build_table, probe,
                                       probe_sharded, scan_filter_agg_join,
+                                      scan_filter_agg_join_mesh,
                                       scan_filter_agg_join_sharded)
 from repro.kernels.merge_runs import merge_sorted_pairs, merge_sorted_runs
 from repro.kernels.snapshot_copy import snapshot_copy
@@ -63,8 +75,10 @@ SNAPSHOT_BLOCK = 8192  # copy-unit chunk size (kernels/snapshot_copy default)
 # CI launch-count gate) wrap exactly these names — keep it next to the
 # imports so adding a kernel here keeps the gate honest.
 KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch",
-                       "scan_filter_agg_sharded", "scan_filter_agg_join",
-                       "scan_filter_agg_join_sharded", "probe",
+                       "scan_filter_agg_sharded", "scan_filter_agg_mesh",
+                       "scan_filter_agg_join",
+                       "scan_filter_agg_join_sharded",
+                       "scan_filter_agg_join_mesh", "probe",
                        "probe_sharded", "build_table", "merge_sorted_runs",
                        "merge_sorted_pairs", "sort_1024", "sort_rows",
                        "snapshot_copy")
@@ -107,6 +121,10 @@ class ExecutionBackend(abc.ABC):
     """
 
     name: str = "?"
+    # How analytical islands are laid out: "stacked" (leading-axis batch on
+    # one device — the flat backends trivially so) or "mesh" (one island
+    # per device of a jax.Mesh — MeshBackend).
+    placement: str = "stacked"
 
     # -- analytical engine (§7) -------------------------------------------
     def code_range(self, col: EncodedColumn, lo: int, hi: int) -> tuple[int, int]:
@@ -803,6 +821,106 @@ class ShardedBackend(ExecutionBackend):
         return self.inner.snapshot_column(col, prev=prev)
 
 
+class MeshBackend(ShardedBackend):
+    """N analytical islands, each on its OWN device of a 1-D jax mesh.
+
+    The mesh placement tier (spec ``"pallas@4/mesh"``): where
+    `ShardedBackend` stacks every island's resident shard on one device
+    and batches the launch over the leading axis, this backend lays the
+    same stacked ``(n_shards, width)`` arrays across the devices of a
+    `jax.Mesh` over ``distributed.ISLAND_AXIS`` — island *s*'s shard is
+    *resident on device s*, exactly the paper's physically separate
+    analytical islands (§4, Fig. 5). Residency is established once per
+    pinned view (`shard_view` -> `distributed.place_shard_arrays`) or,
+    on the Phase-2 swap path, directly from the per-island update
+    application outputs (`place_shards` — per-device installs, no
+    concat + re-split round trip; see `ConsistencyManager`).
+
+    Execution is still O(1) kernel launches in the island count: the
+    scan-family operators dispatch ONE ``shard_map`` call in which every
+    device runs the same batched kernels over its local shard, and the
+    cross-island reduction of the exact split-accumulator partials runs
+    ON the mesh as an integer ``psum``
+    (`kernels.dict_ops.scan_filter_agg_mesh` /
+    `kernels.hash_probe.scan_filter_agg_join_mesh`) — replacing the host
+    `reduce_partials` loop while staying bit-identical to it (16-bit
+    psum lanes, recombined exactly on the host). Everything off the scan
+    plane (update propagation, snapshots, dictionary stages) is
+    host-side control-plane work and delegates unchanged.
+
+    Requires `n_shards` devices; `distributed.island_mesh` raises an
+    actionable error (naming the ``--xla_force_host_platform_device_count``
+    CPU emulation escape hatch and the stacked fallback) when the process
+    has fewer.
+    """
+
+    placement = "mesh"
+
+    def __init__(self, inner: str | ExecutionBackend, n_shards: int):
+        super().__init__(inner, n_shards)
+        if not isinstance(self.inner, PallasBackend):
+            raise ValueError(
+                f"mesh placement runs the scan plane on the device mesh, "
+                f"which the {self.inner.name!r} backend does not drive; "
+                f"use 'pallas@{self.n_shards}/mesh', or keep "
+                f"{self.inner.name!r} islands on the stacked placement "
+                f"(e.g. '{self.inner.name}@{self.n_shards}')")
+        self.mesh = island_mesh(self.n_shards)
+        self.name = f"{self.inner.name}@{self.n_shards}/mesh"
+
+    # -- the mesh-resident snapshot plane ----------------------------------
+    def _place_view(self, view: ShardedView) -> ShardedView:
+        view.codes, view.valid = place_shard_arrays(self.mesh, view.codes,
+                                                    view.valid)
+        return view
+
+    def shard_view(self, col: EncodedColumn, snapshot_id: int = -1
+                   ) -> ShardedView:
+        """Shard once, then lay each island's shard on its own device."""
+        return self._place_view(
+            make_sharded_view(col, self.n_shards, snapshot_id=snapshot_id))
+
+    def place_shards(self, shard_cols: Sequence[EncodedColumn],
+                     snapshot_id: int = -1) -> ShardedView:
+        """Phase-2 residency install: adopt the update application's
+        per-island columns as a device-resident view directly — each
+        island's freshly applied shard is device_put to its own device,
+        with no concat + re-split round trip through the host."""
+        return self._place_view(
+            stack_shard_columns(shard_cols, snapshot_id=snapshot_id))
+
+    # -- analytical engine: one shard_map launch, psum reduction -----------
+    def filter_agg_batch(self, fcol, acol, bounds):
+        fv, av = self._as_view(fcol), self._as_view(acol)
+        code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
+        return scan_filter_agg_mesh(fv.codes, av.codes, fv.valid,
+                                    av.dictionary, code_bounds, self.mesh)
+
+    def filter_agg_mask(self, fcol, acol, lo, hi):
+        fv, av = self._as_view(fcol), self._as_view(acol)
+        [(s, c)] = scan_filter_agg_mesh(fv.codes, av.codes, fv.valid,
+                                        av.dictionary,
+                                        [self.code_range(fv, lo, hi)],
+                                        self.mesh)
+        m2d = self._mask2d(fv, lo, hi)
+        mask = np.concatenate([m2d[i, :size]
+                               for i, size in enumerate(fv.sizes)])
+        return s, c, mask
+
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+        # the whole join group in the same single shard_map launch; the
+        # build side stays the view's cached GLOBAL histogram (replicated
+        # to every island, like the dictionary), so the on-mesh psum of
+        # the per-island partial join counts is the exact total
+        fv, av, jv = self._as_view(fcol), self._as_view(acol), \
+            self._as_view(jcol)
+        code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
+        rcount = jv.dict_counts().astype(np.int32)
+        return scan_filter_agg_join_mesh(fv.codes, av.codes, jv.codes,
+                                         fv.valid, jv.valid, av.dictionary,
+                                         rcount, code_bounds, self.mesh)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------
@@ -829,26 +947,83 @@ def _shards_from_env() -> int:
     return n
 
 
-def parse_backend_spec(spec: str) -> tuple[str, int | None]:
-    """Validate a ``"name"`` / ``"name@N"`` backend spec early.
+# Island placements a spec may name: "stacked" keeps every island's shard
+# on one device (leading-axis batched launches), "mesh" lays one island per
+# device of a jax.Mesh (MeshBackend).
+PLACEMENTS = ("stacked", "mesh")
 
-    Returns (name, shard_count_or_None). Malformed specs fail here with
-    actionable messages — an empty name (``"@4"``), an empty or
-    non-integer count (``"pallas@"``, ``"numpy@one"``) raise KeyError
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    """Structured backend selection: ``name[@N][/placement]``, parsed.
+
+    The canonical form of every backend argument the drivers accept
+    (``--backend``, ``SystemSpec.backend``, ``REPRO_BACKEND``):
+    ``name`` is a registry key, ``n_shards`` the analytical-island count
+    (None defers to the session default / ``REPRO_SHARDS``), ``placement``
+    how islands are laid out (None defers to the session default /
+    ``REPRO_PLACEMENT``, normally "stacked"). Frozen and validated at
+    construction; `parse_backend_spec` builds one from the string grammar
+    and ``str()`` round-trips back to it.
+    """
+
+    name: str
+    n_shards: int | None = None
+    placement: str | None = None
+
+    def __post_init__(self):
+        if not self.name or not isinstance(self.name, str):
+            raise ValueError(
+                f"BackendSpec needs a non-empty backend name, got "
+                f"{self.name!r} (have {sorted(BACKENDS)})")
+        if self.n_shards is not None and int(self.n_shards) < 1:
+            raise ValueError(
+                f"n_shards must be >= 1, got {self.n_shards} "
+                f"(BackendSpec for {self.name!r})")
+        if self.placement is not None and self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"bad placement {self.placement!r} (BackendSpec for "
+                f"{self.name!r}); expected one of {list(PLACEMENTS)}")
+
+    def __str__(self) -> str:
+        s = self.name
+        if self.n_shards is not None:
+            s += f"@{self.n_shards}"
+        if self.placement is not None:
+            s += f"/{self.placement}"
+        return s
+
+
+def parse_backend_spec(spec: str | BackendSpec) -> BackendSpec:
+    """Validate a ``"name[@N][/placement]"`` backend spec early.
+
+    Returns a `BackendSpec` (instances pass through). Malformed specs fail
+    here with actionable messages — an empty name (``"@4"``), an empty or
+    non-integer count (``"pallas@"``, ``"numpy@one"``) and an unknown or
+    empty placement (``"pallas@4/ring"``, ``"pallas@4/"``) raise KeyError
     naming the expected form, and a non-positive count (``"pallas@0"``)
     raises ValueError — instead of surfacing as deep lookup errors.
     """
+    if isinstance(spec, BackendSpec):
+        return spec
     if not isinstance(spec, str) or not spec:
         raise KeyError(
-            f"empty backend spec {spec!r}; expected 'name' or 'name@N' "
-            f"with name in {sorted(BACKENDS)} and N >= 1")
-    name, sep, count = spec.partition("@")
+            f"empty backend spec {spec!r}; expected 'name', 'name@N' or "
+            f"'name@N/placement' with name in {sorted(BACKENDS)}, N >= 1 "
+            f"and placement in {list(PLACEMENTS)}")
+    base, psep, placement = spec.partition("/")
+    if psep and placement not in PLACEMENTS:
+        raise KeyError(
+            f"bad placement {placement!r} in backend spec {spec!r}: "
+            f"expected one of {list(PLACEMENTS)} (e.g. 'pallas@4/mesh')")
+    name, sep, count = base.partition("@")
     if not name:
         raise KeyError(
             f"backend spec {spec!r} has an empty backend name; expected "
-            f"'name' or 'name@N' with name in {sorted(BACKENDS)}")
+            f"'name', 'name@N' or 'name@N/placement' with name in "
+            f"{sorted(BACKENDS)}")
     if not sep:
-        return name, None
+        return BackendSpec(name, None, placement if psep else None)
     try:
         n = int(count)
     except ValueError:
@@ -858,13 +1033,24 @@ def parse_backend_spec(spec: str) -> tuple[str, int | None]:
     if n < 1:
         raise ValueError(
             f"n_shards must be >= 1, got {n} (backend spec {spec!r})")
-    return name, n
+    return BackendSpec(name, n, placement if psep else None)
 
 
 # Resolved lazily (like REPRO_BACKEND) so a bad REPRO_SHARDS value errors at
 # first backend resolution, not at import, and --shards/set_default_n_shards
 # can override it before it is ever read.
 _default_n_shards: int | None = None
+_default_placement: str | None = None
+
+
+def _placement_from_env() -> str:
+    raw = os.environ.get("REPRO_PLACEMENT", "stacked")
+    if raw not in PLACEMENTS:
+        raise ValueError(
+            f"REPRO_PLACEMENT must be one of {list(PLACEMENTS)}, got {raw!r} "
+            "(set e.g. REPRO_PLACEMENT=mesh, or pass a placement spec like "
+            "'pallas@4/mesh' instead)")
+    return raw
 
 
 def register_backend(name: str, backend: ExecutionBackend) -> None:
@@ -901,17 +1087,40 @@ def default_n_shards() -> int:
     return _default_n_shards
 
 
-def get_backend(spec: str | ExecutionBackend | None = None,
-                n_shards: int | None = None) -> ExecutionBackend:
+def set_default_placement(placement: str) -> None:
+    """Set the island placement applied when callers resolve a backend
+    without an explicit placement (see also the REPRO_PLACEMENT
+    environment variable)."""
+    global _default_placement
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"bad placement {placement!r}; expected one of "
+            f"{list(PLACEMENTS)}")
+    _default_placement = placement
+
+
+def default_placement() -> str:
+    global _default_placement
+    if _default_placement is None:
+        _default_placement = _placement_from_env()
+    return _default_placement
+
+
+def get_backend(spec: str | BackendSpec | ExecutionBackend | None = None,
+                n_shards: int | None = None,
+                placement: str | None = None) -> ExecutionBackend:
     """Resolve a backend argument: None -> session default, str -> registry.
 
     ``n_shards`` > 1 wraps the resolved backend in a `ShardedBackend`
-    (None defers to the session default, normally 1). Spec strings may
-    carry an explicit shard count as ``"name@N"`` (e.g. ``"pallas@4"``);
-    passing both a counted spec and a contradicting ``n_shards`` raises.
-    Already-constructed backend instances
-    pass through untouched — they are never re-wrapped, and an explicit
-    ``n_shards`` that contradicts the instance's island count raises
+    (None defers to the session default, normally 1), and
+    ``placement="mesh"`` lays those islands one per device of a jax mesh
+    (`MeshBackend`; None defers to the session default, normally
+    "stacked"). Specs may carry both: ``"name@N/placement"``
+    (e.g. ``"pallas@4/mesh"``), as a string or a `BackendSpec`. Passing a
+    counted/placed spec alongside a contradicting explicit ``n_shards`` /
+    ``placement`` raises. Already-constructed backend instances pass
+    through untouched — they are never re-wrapped, and an explicit
+    ``n_shards`` or ``placement`` that contradicts the instance raises
     rather than being silently dropped.
     """
     if isinstance(spec, ExecutionBackend):
@@ -922,22 +1131,37 @@ def get_backend(spec: str | ExecutionBackend | None = None,
                 f"{have} shard(s) but n_shards={n_shards} was requested; "
                 "pass the spec by name (e.g. 'pallas') to let n_shards "
                 "wrap it")
+        if placement is not None and placement != spec.placement:
+            raise ValueError(
+                f"backend instance {getattr(spec, 'name', spec)!r} uses "
+                f"the {spec.placement!r} placement but "
+                f"placement={placement!r} was requested; pass the spec by "
+                f"name (e.g. 'pallas@{have}/{placement}') to let "
+                "placement wrap it")
         return spec
     from_default = spec is None
     if from_default:
         spec = _default_backend
-    name, spec_shards = parse_backend_spec(spec)
-    if spec_shards is not None:
+    parsed = parse_backend_spec(spec)
+    name = parsed.name
+    if parsed.n_shards is not None:
         if n_shards is None:
-            n_shards = spec_shards
-        elif not from_default and int(n_shards) != spec_shards:
+            n_shards = parsed.n_shards
+        elif not from_default and int(n_shards) != parsed.n_shards:
             # a conflict is only meaningful when the caller passed the
             # counted spec itself; an explicit n_shards always overrides
             # the session default (e.g. fig10 sweeping shard counts while
             # REPRO_BACKEND=pallas@4 is set)
             raise ValueError(
-                f"backend spec {name!r}@{spec_shards} contradicts "
+                f"backend spec {name!r}@{parsed.n_shards} contradicts "
                 f"n_shards={n_shards}")
+    if parsed.placement is not None:
+        if placement is None:
+            placement = parsed.placement
+        elif not from_default and placement != parsed.placement:
+            raise ValueError(
+                f"backend spec {str(parsed)!r} contradicts "
+                f"placement={placement!r}")
     try:
         inner = BACKENDS[name]
     except KeyError:
@@ -952,6 +1176,35 @@ def get_backend(spec: str | ExecutionBackend | None = None,
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards} "
                          f"(backend spec/argument for {name!r})")
+    if placement is None:
+        placement = default_placement()
+    if placement not in PLACEMENTS:
+        raise ValueError(
+            f"bad placement {placement!r} (backend spec/argument for "
+            f"{name!r}); expected one of {list(PLACEMENTS)}")
+    if placement == "mesh":
+        # a 1-island mesh is legal (one device) — the launch still runs
+        # through shard_map, so placement semantics don't silently change
+        # with the island count
+        return _wrapped(inner, n_shards, "mesh")
     if n_shards > 1:
-        return ShardedBackend(inner, n_shards)
+        return _wrapped(inner, n_shards, "stacked")
     return inner
+
+
+# Wrapper backends are stateless (inner + shard count + mesh handle), so
+# equal resolutions share one instance — get_backend("pallas@4/mesh") is
+# get_backend("pallas@4/mesh"), matching the bare-name singletons. Keyed
+# by the inner's identity so register_backend replacements miss the cache.
+_wrapped_cache: dict[tuple[int, int, str], ExecutionBackend] = {}
+
+
+def _wrapped(inner: ExecutionBackend, n_shards: int,
+             placement: str) -> ExecutionBackend:
+    key = (id(inner), n_shards, placement)
+    be = _wrapped_cache.get(key)
+    if be is None:
+        cls = MeshBackend if placement == "mesh" else ShardedBackend
+        be = cls(inner, n_shards)
+        _wrapped_cache[key] = be
+    return be

@@ -93,6 +93,14 @@ class ConsistencyManager:
         self.snapshots_shared = 0
         self.views_built = 0
         self.views_shared = 0
+        self.views_resident = 0
+        # Phase-2 residency handoff (mesh placement): the freshly applied
+        # per-island shard columns, installed directly as a device-resident
+        # ShardedView by `on_update_shards` and adopted by the next pinned
+        # `read_scan` — so mesh islands keep their shards resident across
+        # rounds instead of round-tripping concat + re-shard through the
+        # host. One pending view per column; superseded by the next swap.
+        self._resident: dict[int, ShardedView] = {}
 
     # -- transactional side ----------------------------------------------
     def on_update(self, col_id: int, new_col: EncodedColumn) -> None:
@@ -107,6 +115,7 @@ class ConsistencyManager:
         """
         self.replica.columns[col_id] = new_col
         self.chains[col_id].dirty = True
+        self._resident.pop(col_id, None)  # superseded before adoption
         for v in self.chains[col_id].versions:
             if v.readers == 0:
                 v.drop_view(f"column {col_id} was swapped out by a Phase-2 "
@@ -131,6 +140,13 @@ class ConsistencyManager:
                 f"{len(shard_cols)} shards, backend has {expected} islands")
         new_col = concat_columns(shard_cols)  # rejects mixed-round shards
         self.on_update(col_id, new_col)
+        place = getattr(self.backend, "place_shards", None)
+        if place is not None:
+            # Mesh placement: the swap IS the residency install — each
+            # island's freshly applied shard is device_put to its own
+            # device here, and the next pinned read adopts the view
+            # (read_scan) instead of re-sharding through the host.
+            self._resident[col_id] = place(shard_cols)
 
     # -- analytical side ---------------------------------------------------
     def _snapshot(self, col_id: int) -> _Version:
@@ -192,12 +208,22 @@ class ConsistencyManager:
         single-replica backends it is `read` (the plain pinned column).
         """
         v = self._handles[handle][col_id]
-        if getattr(self.backend, "n_shards", 1) <= 1:
+        if (getattr(self.backend, "n_shards", 1) <= 1
+                and getattr(self.backend, "placement", "stacked") != "mesh"):
             return v.column
         if v.view is None or v.view.stale:
-            v.view = self.backend.shard_view(v.column,
-                                             snapshot_id=v.version_id)
-            self.views_built += 1
+            resident = self._resident.pop(col_id, None)
+            if (resident is not None and not resident.stale
+                    and resident.version == v.column.version):
+                # adopt the Phase-2 residency install (mesh placement):
+                # the islands' devices already hold these shards
+                resident.snapshot_id = v.version_id
+                v.view = resident
+                self.views_resident += 1
+            else:
+                v.view = self.backend.shard_view(v.column,
+                                                 snapshot_id=v.version_id)
+                self.views_built += 1
         else:
             self.views_shared += 1
         return v.view

@@ -313,6 +313,48 @@ def make_sharded_view(col: EncodedColumn, n_shards: int,
                        version=col.version, snapshot_id=snapshot_id)
 
 
+def stack_shard_columns(shard_cols: list[EncodedColumn],
+                        snapshot_id: int = -1) -> ShardedView:
+    """Adopt per-island shard columns as a ShardedView directly.
+
+    The Phase-2 sibling of `make_sharded_view`: update application
+    produces each island's freshly applied shard as its own
+    `EncodedColumn`, and on placements with per-island residency those
+    shards should become the next round's resident view *without* a
+    concat + re-split round trip through one flat column. Shards must
+    line up with `shard_bounds` (they do by construction — update routing
+    partitions by the same bounds) and must share a dictionary and
+    version, exactly `concat_columns`'s mixing check.
+    """
+    if not shard_cols:
+        raise ValueError("stack_shard_columns needs at least one shard")
+    head = shard_cols[0]
+    for s in shard_cols[1:]:
+        if s.version != head.version:
+            raise ValueError(
+                f"shard version mismatch: {s.version} != {head.version}")
+        if s.dictionary is not head.dictionary and not (
+                s.dictionary.shape == head.dictionary.shape
+                and bool(jnp.array_equal(s.dictionary, head.dictionary))):
+            raise ValueError("shard dictionary mismatch (different rounds?)")
+    sizes = [c.n_rows for c in shard_cols]
+    n_rows = sum(sizes)
+    bounds = shard_bounds(n_rows, len(shard_cols))
+    if [hi - lo for lo, hi in zip(bounds, bounds[1:])] != sizes:
+        raise ValueError(
+            f"shard sizes {sizes} do not match the shard_bounds partition "
+            f"of {n_rows} rows over {len(shard_cols)} islands")
+    width = max(sizes, default=0)
+    codes = np.zeros((len(shard_cols), width), dtype=np.int32)
+    valid = np.zeros((len(shard_cols), width), dtype=bool)
+    for s, col in enumerate(shard_cols):
+        codes[s, :col.n_rows] = np.asarray(col.codes)
+        valid[s, :col.n_rows] = np.asarray(col.valid)
+    return ShardedView(codes=codes, valid=valid,
+                       dictionary=head.dictionary, bounds=tuple(bounds),
+                       version=head.version, snapshot_id=snapshot_id)
+
+
 @dataclasses.dataclass
 class DSMReplica:
     """The analytical island's replica: one EncodedColumn per table column."""

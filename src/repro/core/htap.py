@@ -38,6 +38,7 @@ only the pricing changes (tests/test_timeline.py).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 from repro.core.hwmodel import (CostLog, HardwareModel, HardwareParams,
                                 HB_PARAMS, HMC_PARAMS)
@@ -196,16 +197,29 @@ def run_mixed_traffic(spec: SystemSpec, table, stream,
 
 
 # ---------------------------------------------------------------------------
-# Per-system wrappers (batch call sites; specs do the configuration)
+# Legacy per-system wrappers (DEPRECATED; specs do the configuration)
 # ---------------------------------------------------------------------------
+
+def _warn_legacy(wrapper: str, preset: str) -> None:
+    """Every legacy ``run_<system>`` wrapper funnels through the spec API;
+    point callers at the one surface that gets new capabilities (placement
+    specs, sessions, mixed traffic) instead of the frozen keyword shims."""
+    warnings.warn(
+        f"htap.{wrapper}() is deprecated; use "
+        f"htap.run_spec(SystemSpec.{preset}(...), ...) — or htap.run"
+        f"(name, ...) with a preset name — instead",
+        DeprecationWarning, stacklevel=3)
+
 
 def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
                   backend=None, n_shards: int | None = None,
                   timing: str | None = None) -> RunResult:
-    """Transactions alone: no analytics, zero-cost propagation/consistency.
+    """DEPRECATED: use ``run_spec(SystemSpec.ideal_txn(...), ...)``.
 
+    Transactions alone: no analytics, zero-cost propagation/consistency.
     `n_shards` is accepted for driver-API uniformity; with no analytical
     work there are no islands to shard."""
+    _warn_legacy("run_ideal_txn", "ideal_txn")
     return run_spec(SystemSpec.ideal_txn(hw=hw, backend=backend,
                                          n_shards=n_shards, timing=timing),
                     table, stream)
@@ -214,7 +228,10 @@ def run_ideal_txn(table, stream, hw: HardwareParams = HMC_PARAMS,
 def run_ana_only(table, queries, hw: HardwareParams = HMC_PARAMS,
                  backend=None, n_shards: int | None = None,
                  timing: str | None = None) -> RunResult:
-    """Analytics alone on the multicore CPU over a DSM replica."""
+    """DEPRECATED: use ``run_spec(SystemSpec.ana_only(...), ...)``.
+
+    Analytics alone on the multicore CPU over a DSM replica."""
+    _warn_legacy("run_ana_only", "ana_only")
     return run_spec(SystemSpec.ana_only(hw=hw, backend=backend,
                                         n_shards=n_shards, timing=timing),
                     table, queries=queries)
@@ -224,7 +241,9 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
               n_rounds: int = 8, zero_cost_snapshot: bool = False,
               backend=None, n_shards: int | None = None,
               timing: str | None = None) -> RunResult:
-    """Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
+    """DEPRECATED: use ``run_spec(SystemSpec.si_ss(...), ...)``.
+
+    Single-Instance-Snapshot: full-table memcpy snapshots, NSM analytics.
 
     zero_cost_snapshot: the paper's normalization baseline — identical run,
     snapshot creation costs nothing (Fig. 1-right / Fig. 8-right).
@@ -232,6 +251,7 @@ def run_si_ss(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     `n_shards` is accepted for driver-API uniformity; a single instance has
     no analytical islands to shard (that's the point of the baseline).
     """
+    _warn_legacy("run_si_ss", "si_ss")
     return run_spec(SystemSpec.si_ss(hw=hw,
                                      zero_cost_snapshot=zero_cost_snapshot,
                                      backend=backend, n_shards=n_shards,
@@ -243,7 +263,9 @@ def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
                 n_rounds: int = 8, zero_cost_mvcc: bool = False,
                 backend=None, n_shards: int | None = None,
                 timing: str | None = None) -> RunResult:
-    """Single-Instance-MVCC: version chains; analytics traverse chains.
+    """DEPRECATED: use ``run_spec(SystemSpec.si_mvcc(...), ...)``.
+
+    Single-Instance-MVCC: version chains; analytics traverse chains.
 
     zero_cost_mvcc: identical run, chain traversal costs nothing (the
     paper's Fig. 1-left normalization baseline).
@@ -253,13 +275,14 @@ def run_si_mvcc(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
     PIM-analog kernels nor the island sharding model — the numpy path
     always executes on the single instance.
     """
+    _warn_legacy("run_si_mvcc", "si_mvcc")
     return run_spec(SystemSpec.si_mvcc(hw=hw, zero_cost_mvcc=zero_cost_mvcc,
                                        backend=backend, n_shards=n_shards,
                                        timing=timing),
                     table, stream, queries, n_rounds=n_rounds)
 
 
-def run_multi_instance(
+def _run_multi_instance(
     table, stream, queries,
     hw: HardwareParams = HMC_PARAMS,
     name: str = "MI+SW",
@@ -272,12 +295,10 @@ def run_multi_instance(
     zero_cost_propagation: bool = False,  # Fig. 2/7 "Ideal" baseline
     backend=None,
     n_shards: int | None = None,
+    placement: str | None = None,
     timing: str | None = None,
     async_propagation: bool = False,
 ) -> RunResult:
-    """Shared driver for the MI family (MI+SW / MI+SW+HB / PIM-Only /
-    Polynesia) — the keyword surface over ``SystemSpec(kind=
-    "multi_instance")``; prefer the presets for new call sites."""
     spec = SystemSpec(name=name, kind="multi_instance", hw=hw,
                       propagation_on_pim=propagation_on_pim,
                       analytics_on_pim=analytics_on_pim,
@@ -285,27 +306,47 @@ def run_multi_instance(
                       optimized_application=optimized_application,
                       shipping_only=shipping_only,
                       zero_cost_propagation=zero_cost_propagation,
-                      backend=backend, n_shards=n_shards, timing=timing,
+                      backend=backend, n_shards=n_shards,
+                      placement=placement, timing=timing,
                       async_propagation=async_propagation)
     return run_spec(spec, table, stream, queries, n_rounds=n_rounds)
 
 
+def run_multi_instance(table, stream, queries, hw: HardwareParams = HMC_PARAMS,
+                       **kw) -> RunResult:
+    """DEPRECATED: use ``run_spec`` with an MI-family `SystemSpec` preset.
+
+    The keyword surface over ``SystemSpec(kind="multi_instance")`` shared
+    by the MI family (MI+SW / MI+SW+HB / PIM-Only / Polynesia)."""
+    _warn_legacy("run_multi_instance", "mi_sw")
+    return _run_multi_instance(table, stream, queries, hw, **kw)
+
+
 def run_mi_sw(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
-    return run_multi_instance(table, stream, queries, hw, name="MI+SW", **kw)
+    """DEPRECATED: use ``run_spec(SystemSpec.mi_sw(...), ...)``."""
+    _warn_legacy("run_mi_sw", "mi_sw")
+    return _run_multi_instance(table, stream, queries, hw, name="MI+SW",
+                               **kw)
 
 
 def run_mi_sw_hb(table, stream, queries, **kw) -> RunResult:
-    return run_multi_instance(table, stream, queries, HB_PARAMS,
-                              name="MI+SW+HB", **kw)
+    """DEPRECATED: use ``run_spec(SystemSpec.mi_sw_hb(...), ...)``."""
+    _warn_legacy("run_mi_sw_hb", "mi_sw_hb")
+    return _run_multi_instance(table, stream, queries, HB_PARAMS,
+                               name="MI+SW+HB", **kw)
 
 
 def run_pim_only(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
-    return run_multi_instance(table, stream, queries, hw, name="PIM-Only",
-                              propagation_on_pim=True, analytics_on_pim=True,
-                              txn_on_pim=True, **kw)
+    """DEPRECATED: use ``run_spec(SystemSpec.pim_only(...), ...)``."""
+    _warn_legacy("run_pim_only", "pim_only")
+    return _run_multi_instance(table, stream, queries, hw, name="PIM-Only",
+                               propagation_on_pim=True, analytics_on_pim=True,
+                               txn_on_pim=True, **kw)
 
 
 def run_polynesia(table, stream, queries, hw=HMC_PARAMS, **kw) -> RunResult:
-    return run_multi_instance(table, stream, queries, hw, name="Polynesia",
-                              propagation_on_pim=True, analytics_on_pim=True,
-                              **kw)
+    """DEPRECATED: use ``run_spec(SystemSpec.polynesia(...), ...)``."""
+    _warn_legacy("run_polynesia", "polynesia")
+    return _run_multi_instance(table, stream, queries, hw, name="Polynesia",
+                               propagation_on_pim=True, analytics_on_pim=True,
+                               **kw)

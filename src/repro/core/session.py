@@ -78,9 +78,13 @@ class SystemSpec:
     ``SystemSpec.polynesia(backend="pallas", n_shards=4,
     timing="timeline", async_propagation=True)``.
 
-    ``backend``/``n_shards``/``timing`` of ``None`` defer to the session
-    defaults (REPRO_BACKEND / REPRO_SHARDS / REPRO_TIMING), exactly like
-    the old driver kwargs.
+    ``backend``/``n_shards``/``placement``/``timing`` of ``None`` defer to
+    the session defaults (REPRO_BACKEND / REPRO_SHARDS / REPRO_PLACEMENT /
+    REPRO_TIMING), exactly like the old driver kwargs. ``placement``
+    selects how analytical islands are laid out: ``"stacked"`` batches
+    every island on one device, ``"mesh"`` lays one island per device of a
+    jax mesh (see `core.backend.MeshBackend`); backend specs may carry it
+    inline (``backend="pallas@4/mesh"``).
     """
 
     name: str
@@ -99,6 +103,7 @@ class SystemSpec:
     # -- execution substrate ----------------------------------------------
     backend: str | ExecutionBackend | None = None
     n_shards: int | None = None
+    placement: str | None = None
     timing: str | None = None
     async_propagation: bool = False
 
@@ -189,13 +194,14 @@ def resolve_spec(system: str | SystemSpec, **overrides) -> SystemSpec:
     return factory(**overrides)
 
 
-def _resolve_islands(backend, n_shards, hw: HardwareParams):
-    """Resolve the execution backend (wrapping in ShardedBackend when
-    n_shards/REPRO_SHARDS asks for islands) and scale the hardware model to
-    the island count — each analytical island brings its own stack of
-    in-memory hardware (§4), so `hw.n_ana_islands` follows the shard count
-    unless the caller already set it."""
-    be = get_backend(backend, n_shards=n_shards)
+def _resolve_islands(backend, n_shards, placement, hw: HardwareParams):
+    """Resolve the execution backend (wrapping in Sharded/MeshBackend when
+    n_shards/REPRO_SHARDS and placement/REPRO_PLACEMENT ask for islands)
+    and scale the hardware model to the island count — each analytical
+    island brings its own stack of in-memory hardware (§4), so
+    `hw.n_ana_islands` follows the shard count unless the caller already
+    set it."""
+    be = get_backend(backend, n_shards=n_shards, placement=placement)
     islands = getattr(be, "n_shards", 1)
     if islands > 1 and hw.n_ana_islands == 1:
         hw = dataclasses.replace(hw, n_ana_islands=islands)
@@ -253,14 +259,22 @@ class HTAPSession:
         hw = spec.hw
         kind = spec.kind
         if kind in ("multi_instance", "ana_only"):
-            self.be, hw = _resolve_islands(spec.backend, spec.n_shards, hw)
+            self.be, hw = _resolve_islands(spec.backend, spec.n_shards,
+                                           spec.placement, hw)
         else:
             # single-instance kinds: resolve once for validation and thread
             # the *resolved object* through per-query calls (no per-call
             # re-resolution of the backend spec)
-            self.be = get_backend(spec.backend, n_shards=spec.n_shards)
+            self.be = get_backend(spec.backend, n_shards=spec.n_shards,
+                                  placement=spec.placement)
         self.hw = hw
         self.islands = getattr(self.be, "n_shards", 1)
+        if getattr(self.be, "placement", "stacked") == "mesh":
+            # make the islands' device mesh the process-global context, so
+            # ad-hoc get_backend("...@N/mesh") calls elsewhere in the
+            # process resolve onto the same devices
+            from repro.distributed import install_island_mesh
+            install_island_mesh(self.be.mesh)
         if kind == "multi_instance":
             self.store = RowStore(table)
             self.replica = DSMReplica.from_table(table)
@@ -331,8 +345,10 @@ class HTAPSession:
                      "snapshots": self.cons.snapshots_created,
                      "shared": self.cons.snapshots_shared,
                      "islands": self.islands,
+                     "placement": getattr(self.be, "placement", "stacked"),
                      "sharded_views": self.cons.views_built,
-                     "views_shared": self.cons.views_shared}
+                     "views_shared": self.cons.views_shared,
+                     "views_resident": self.cons.views_resident}
         elif spec.kind == "si_ss":
             stats = {"snapshots": self.snap.snapshots_taken}
         elif spec.kind == "si_mvcc":
@@ -441,7 +457,8 @@ class HTAPSession:
             apply_node = f"{ship_node}:c{col_id}"
             with self.cost.tagged(apply_node, "apply", round=self.round,
                                   deps=(ship_node,), col=col_id):
-                if spec.optimized_application and self.islands > 1:
+                mesh = getattr(self.be, "placement", "stacked") == "mesh"
+                if spec.optimized_application and (self.islands > 1 or mesh):
                     # each island applies its own row range; the round
                     # becomes visible only as a complete shard set
                     # (all-or-none Phase-2 swap)

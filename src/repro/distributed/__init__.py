@@ -1,5 +1,11 @@
-"""Distribution layer: sharding rules (DP/TP/EP/SP + FSDP), collective
-helpers, elastic re-meshing, and the sharded decode combine."""
+"""Distribution layer for the HTAP mesh plane: island/replicated placement
+rules (`sharding`) and the process-global island-mesh context (`context`)
+installed by `HTAPSession` and consumed by `core.backend.MeshBackend`."""
 
-from repro.distributed.sharding import (param_shardings, batch_spec,
-                                        cache_shardings, MeshRules)
+from repro.distributed.context import (clear_island_mesh,  # noqa: F401
+                                       current_island_mesh,
+                                       install_island_mesh, island_mesh)
+from repro.distributed.sharding import (ISLAND_AXIS,  # noqa: F401
+                                        island_sharding, island_spec,
+                                        place_shard_arrays,
+                                        replicated_sharding, replicated_spec)

@@ -1,16 +1,100 @@
-"""Process-global partitioning context.
+"""Process-global island-mesh context for the HTAP plane.
 
-Model code is mesh-agnostic; the launcher installs the axis names here and
-layers apply `with_sharding_constraint` only when a context is set (smoke
-tests on 1 device run without). This is how the MoE dispatch tensors get
-their (experts=model, capacity=data) sharding — without the constraint the
-SPMD partitioner keeps global-capacity buffers unsharded (observed 587
-GB/device on kimi-k2; EXPERIMENTS.md §Dry-run).
+The mesh placement tier (``core.backend.MeshBackend``) needs one 1-D
+`jax.Mesh` over ``sharding.ISLAND_AXIS`` per island count. `HTAPSession`
+installs its backend's mesh here when the session opens, so every later
+backend resolution in the same process (ad-hoc `get_backend` calls,
+nested drivers) reuses the installed mesh instead of re-deriving device
+assignments — one process, one island→device mapping.
+
+``island_mesh(n)`` is the resolution entry point: it returns the
+installed mesh when the axis size matches, else builds (and caches) a
+mesh over the first ``n`` local devices. Fewer than ``n`` devices is an
+actionable error naming the CPU emulation escape hatch
+(``XLA_FLAGS=--xla_force_host_platform_device_count=N``, or
+``REPRO_HOST_DEVICES=N`` through ``benchmarks/run.sh``) — a mesh axis
+cannot be larger than the device count.
+
+The module also keeps the layer-level ``constrain`` partitioning hook
+(used by the neural layers under ``repro.nn``/``repro.models``): model
+code stays mesh-agnostic and applies ``with_sharding_constraint`` only
+when a partitioning context is installed.
 """
 
 from __future__ import annotations
 
 import contextlib
+
+import jax
+
+from repro.distributed.sharding import ISLAND_AXIS
+
+# ---------------------------------------------------------------------------
+# Island mesh (HTAP plane)
+# ---------------------------------------------------------------------------
+
+_ISLAND_MESH = None                 # installed by HTAPSession
+_mesh_cache: dict[int, object] = {}  # built meshes by island count
+
+
+def install_island_mesh(mesh) -> None:
+    """Install `mesh` as the process's island mesh (HTAPSession does this).
+
+    The mesh must carry exactly the ``ISLAND_AXIS`` axis — installing an
+    arbitrary LM-style mesh here would silently misplace shard arrays.
+    """
+    if tuple(mesh.axis_names) != (ISLAND_AXIS,):
+        raise ValueError(
+            f"island mesh must have exactly one axis {ISLAND_AXIS!r}, got "
+            f"axes {tuple(mesh.axis_names)}")
+    global _ISLAND_MESH
+    _ISLAND_MESH = mesh
+
+
+def current_island_mesh():
+    """The installed island mesh, or None."""
+    return _ISLAND_MESH
+
+
+def clear_island_mesh() -> None:
+    global _ISLAND_MESH
+    _ISLAND_MESH = None
+
+
+def island_mesh(n_islands: int):
+    """Resolve the mesh for `n_islands` analytical islands.
+
+    Prefers the installed process mesh when its island axis matches;
+    otherwise builds a 1-D mesh over the first `n_islands` devices and
+    caches it (meshes are immutable and hashable — every backend with the
+    same island count shares one).
+    """
+    n_islands = int(n_islands)
+    if n_islands < 1:
+        raise ValueError(f"n_islands must be >= 1, got {n_islands}")
+    if (_ISLAND_MESH is not None
+            and _ISLAND_MESH.shape[ISLAND_AXIS] == n_islands):
+        return _ISLAND_MESH
+    mesh = _mesh_cache.get(n_islands)
+    if mesh is None:
+        have = jax.device_count()
+        if have < n_islands:
+            raise RuntimeError(
+                f"mesh placement needs {n_islands} devices (one per "
+                f"analytical island) but this process has {have}; run on "
+                f"real multi-device hardware, or emulate on CPU with "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count="
+                f"{n_islands} set before jax imports (benchmarks/run.sh "
+                f"does this via REPRO_HOST_DEVICES={n_islands}), or use "
+                f"the stacked placement (e.g. 'pallas@{n_islands}')")
+        mesh = jax.make_mesh((n_islands,), (ISLAND_AXIS,))
+        _mesh_cache[n_islands] = mesh
+    return mesh
+
+
+# ---------------------------------------------------------------------------
+# Layer-level partitioning hook (neural layers; mesh-agnostic model code)
+# ---------------------------------------------------------------------------
 
 _CTX: dict | None = None
 
@@ -42,7 +126,6 @@ def constrain(x, *spec):
     if _CTX is None:
         return x
     from jax.sharding import NamedSharding, PartitionSpec as P
-    import jax
     mesh = _CTX["mesh"]
     resolved = []
     for s in spec:

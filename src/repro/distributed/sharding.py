@@ -1,194 +1,71 @@
-"""Sharding rules: DP / TP / EP / SP / FSDP over the production mesh.
+"""Placement rules for the HTAP mesh plane: island-sharded vs replicated.
 
-Axes: "data" (+ "pod" in multi-pod) carry the batch (DP); "model" carries
-tensor parallelism (attention heads, d_ff), expert parallelism (MoE expert
-axis) and — for long-context decode — the KV sequence (SP).
+Polynesia's analytical plane is N *physically separate* islands (§4,
+Fig. 5). On the mesh placement tier (``core.backend.MeshBackend``) those
+islands are real devices of a 1-D `jax.Mesh` over the ``ISLAND_AXIS``
+axis, and every array the scan plane touches falls into exactly one of
+two placement classes:
 
-FSDP (ZeRO-3): parameters additionally shard a non-TP dimension over
-"data"; XLA SPMD inserts the per-layer all-gathers (prefetched one period
-ahead inside lax.scan by the latency-hiding scheduler). Across pods,
-parameters are replicated (all-gathering weights over DCN every step would
-dominate); gradients all-reduce over ("pod","data").
+* **island-sharded** — the stacked ``(n_shards, width)`` shard arrays of a
+  `dsm.ShardedView` (codes, valid): the leading axis is the island axis,
+  so device *s* holds island *s*'s resident shard and nothing else.
+* **replicated** — the order-preserving dictionary, the query bounds and
+  the join build-side histogram: broadcast to every island, exactly like
+  the paper replicates the dictionary across islands.
 
-Vault-group rule (the paper's Strategy 3, DESIGN.md §3): big tables
-(embeddings, expert weights) are partitioned across the device group while
-small, hot state (routers, norms, dictionaries) is replicated everywhere.
-
-Param-path pattern -> PartitionSpec. Stacked period params get a leading
-None for the scan axis automatically (rank-based).
+The rules are PartitionSpecs so they compose with both ``device_put``
+(residency: shards stay on their island across query rounds) and
+``shard_map`` ``in_specs``/``out_specs`` (execution: one launch runs every
+island's scan on its own device, and the split-accumulator reduction is an
+integer ``psum`` over ``ISLAND_AXIS``).
 """
 
 from __future__ import annotations
 
-import dataclasses
-import re
-
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-
-@dataclasses.dataclass(frozen=True)
-class MeshRules:
-    """Resolved axis names for a mesh (single- or multi-pod)."""
-
-    data_axes: tuple          # batch axes, e.g. ("data",) or ("pod", "data")
-    model_axis: str = "model"
-    fsdp_axis: str | None = "data"   # ZeRO-3 param shard axis (None = off)
-
-    @classmethod
-    def for_mesh(cls, mesh: Mesh, fsdp: bool = True):
-        axes = mesh.axis_names
-        data_axes = tuple(a for a in axes if a in ("pod", "data"))
-        return cls(data_axes=data_axes,
-                   fsdp_axis="data" if fsdp else None)
+# The one mesh axis of the HTAP plane: island s == device s.
+ISLAND_AXIS = "island"
 
 
-# (path regex, spec builder). `d` = fsdp axis or None, `m` = model axis.
-# Specs are for the UNSTACKED param; a leading scan axis gets None prepended.
-def _rules(r: MeshRules):
-    m, d = r.model_axis, r.fsdp_axis
-    return [
-        # embeddings / head: vocab on model (vault-group partition rule)
-        (re.compile(r"embed/table$"), P(m, d)),
-        (re.compile(r"head/w$"), P(d, m)),
-        # attention
-        (re.compile(r"attn/wq/w$|attn/wk/w$|attn/wv/w$"), P(d, m)),
-        (re.compile(r"attn/wq/b$|attn/wk/b$|attn/wv/b$"), P(m)),
-        (re.compile(r"attn/wo/w$"), P(m, d)),
-        (re.compile(r"xattn/wq/w$|xattn/wk/w$|xattn/wv/w$"), P(d, m)),
-        (re.compile(r"xattn/wo/w$"), P(m, d)),
-        # dense mlp
-        (re.compile(r"(mlp|shared)/w_gate/w$|(mlp|shared)/w_up/w$"), P(d, m)),
-        (re.compile(r"(mlp|shared)/w_down/w$"), P(m, d)),
-        # moe: experts over model (EP); router replicated (dictionary rule)
-        (re.compile(r"moe/router/w$"), P(None, None)),
-        (re.compile(r"moe/w_gate$|moe/w_up$"), P(m, d, None)),
-        (re.compile(r"moe/w_down$"), P(m, None, d)),
-        # mamba
-        (re.compile(r"mamba/in_proj/w$"), P(d, m)),
-        (re.compile(r"mamba/conv_w$"), P(None, m)),
-        (re.compile(r"mamba/conv_b$"), P(m)),
-        (re.compile(r"mamba/x_proj/w$"), P(m, None)),
-        (re.compile(r"mamba/dt_proj/w$"), P(None, m)),
-        (re.compile(r"mamba/dt_proj/b$"), P(m)),
-        (re.compile(r"mamba/a_log$"), P(m, None)),
-        (re.compile(r"mamba/d_skip$"), P(m)),
-        (re.compile(r"mamba/out_proj/w$"), P(m, d)),
-        # norms & everything small: replicated
-        (re.compile(r"scale$|/b$"), P()),
-    ]
+def island_spec(ndim: int = 2) -> P:
+    """Spec for island-owned arrays: leading axis sharded over islands.
 
-
-def _path_str(path) -> str:
-    parts = []
-    for p in path:
-        if isinstance(p, jax.tree_util.DictKey):
-            parts.append(str(p.key))
-        elif isinstance(p, jax.tree_util.SequenceKey):
-            parts.append(str(p.idx))
-        else:
-            parts.append(str(p))
-    return "/".join(parts)
-
-
-def _spec_for(path_s: str, leaf_ndim: int, rules, mesh: Mesh) -> P:
-    for rx, spec in rules:
-        if rx.search(path_s):
-            spec_t = tuple(spec)
-            # stacked scan axis (and vmap-stacked init): left-pad with None
-            if len(spec_t) < leaf_ndim:
-                spec_t = (None,) * (leaf_ndim - len(spec_t)) + spec_t
-            # drop axes that don't divide the dim: replicate those dims
-            return P(*spec_t)
-    return P()  # default: replicated
-
-
-def _divisible(spec: P, shape, mesh: Mesh) -> P:
-    """Replace axis assignments that don't divide the dimension with None.
-
-    (e.g. phi3's kv=10 heads over model=16 -> replicated KV projections;
-    the roofline notes the padding alternative.)
+    ``ndim=2`` covers the stacked ShardedView arrays ``(n_shards, width)``;
+    higher ranks (e.g. per-island partial stacks) keep trailing axes
+    replicated.
     """
-    out = []
-    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
-        if ax is None:
-            out.append(None)
-            continue
-        axes = ax if isinstance(ax, tuple) else (ax,)
-        size = 1
-        for a in axes:
-            size *= mesh.shape[a]
-        out.append(ax if dim % size == 0 else None)
-    return P(*out)
+    if ndim < 1:
+        raise ValueError(f"island-sharded arrays need ndim >= 1, got {ndim}")
+    return P(ISLAND_AXIS, *(None,) * (ndim - 1))
 
 
-def param_shardings(params_shape, mesh: Mesh, fsdp: bool = True):
-    """Abstract param pytree (ShapeDtypeStruct leaves) -> NamedSharding tree."""
-    r = MeshRules.for_mesh(mesh, fsdp=fsdp)
-    rules = _rules(r)
-
-    def one(path, leaf):
-        s = _path_str(path)
-        spec = _spec_for(s, leaf.ndim, rules, mesh)
-        spec = _divisible(spec, leaf.shape, mesh)
-        return NamedSharding(mesh, spec)
-
-    return jax.tree_util.tree_map_with_path(one, params_shape)
+def replicated_spec() -> P:
+    """Spec for dictionary-class arrays: every island holds a full copy."""
+    return P()
 
 
-def batch_spec(mesh: Mesh, seq_sharded: bool = False) -> P:
-    """Spec for (B, S) token batches: batch over DP axes; long-context
-    single-sequence shapes shard S instead (SP)."""
-    r = MeshRules.for_mesh(mesh)
-    dp = r.data_axes if len(r.data_axes) > 1 else r.data_axes[0]
-    if seq_sharded:
-        return P(None, dp)
-    return P(dp, None)
+def island_sharding(mesh: Mesh, ndim: int = 2) -> NamedSharding:
+    """NamedSharding laying the leading axis one-island-per-device."""
+    return NamedSharding(mesh, island_spec(ndim))
 
 
-def cache_shardings(cache_shape, mesh: Mesh, batch: int):
-    """KV/SSM cache shardings for decode.
+def replicated_sharding(mesh: Mesh) -> NamedSharding:
+    """NamedSharding replicating an array onto every island device."""
+    return NamedSharding(mesh, replicated_spec())
 
-    KV caches (B, S, Hkv, hd): batch over DP if it divides, else SP: shard
-    the sequence dim over ("data","model") — the flash-decode split-KV
-    layout. Mamba conv (B, K, D) / ssm (B, D, N) states shard D over model.
+
+def place_shard_arrays(mesh: Mesh, codes, valid):
+    """Device_put a view's stacked shard arrays under the island rule.
+
+    This is the mesh tier's residency primitive: the ``(n_shards, width)``
+    codes/valid stacks land one-island-per-device, so repeated scans of a
+    pinned view (and Phase-2 installs of freshly applied shards) move no
+    rows. Dictionary-class arrays are NOT placed here — they stay host
+    numpy and ride each jitted dispatch under `replicated_spec`, exactly
+    like the stacked tier (a dispatch converts an np argument cheaply, and
+    the host-side `code_range`/histogram reads stay transfer-free).
     """
-    r = MeshRules.for_mesh(mesh)
-    dp_axes = r.data_axes
-    dp_size = 1
-    for a in dp_axes:
-        dp_size *= mesh.shape[a]
-    batch_ok = batch % dp_size == 0
-    dp = dp_axes if len(dp_axes) > 1 else dp_axes[0]
-    m = r.model_axis
-
-    def one(path, leaf):
-        s = _path_str(path)
-        # base spec over the TRAILING dims (caches may carry a stacked
-        # period axis in front: (n_periods, B, ...)).
-        if s.endswith("/k") or s.endswith("/v") or "cross_kv" in s:
-            # (B, S, Hkv, hd)
-            trailing = leaf.shape[-4:]
-            if batch_ok:
-                base = (dp, m if trailing[1] % mesh.shape[m] == 0 else None,
-                        None, None)
-            else:
-                seq_axes = tuple(list(dp_axes) + [m])
-                size = dp_size * mesh.shape[m]
-                base = (None,
-                        seq_axes if trailing[1] % size == 0 else None,
-                        None, None)
-        elif "conv" in s:                       # (B, K, D)
-            trailing = leaf.shape[-3:]
-            base = (dp if batch_ok else None, None,
-                    m if trailing[2] % mesh.shape[m] == 0 else None)
-        elif "ssm" in s:                        # (B, D, N)
-            trailing = leaf.shape[-3:]
-            base = (dp if batch_ok else None,
-                    m if trailing[1] % mesh.shape[m] == 0 else None, None)
-        else:
-            base = ()
-        spec = P(*((None,) * (leaf.ndim - len(base)) + tuple(base)))
-        return NamedSharding(mesh, spec)
-
-    return jax.tree_util.tree_map_with_path(one, cache_shape)
+    sh = island_sharding(mesh)
+    return jax.device_put(codes, sh), jax.device_put(valid, sh)

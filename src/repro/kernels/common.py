@@ -31,6 +31,7 @@ import functools
 import os
 
 import jax
+import numpy as np
 
 VALID_INTERPRET_SPECS = ("0", "1", "auto")
 
@@ -107,6 +108,32 @@ def next_pow2(n: int) -> int:
     while p < n:
         p <<= 1
     return p
+
+
+# ---------------------------------------------------------------------------
+# Mesh-placement reduction lanes (core/backend.MeshBackend)
+# ---------------------------------------------------------------------------
+#
+# On the mesh tier the cross-island reduction of split-accumulator partials
+# runs ON the device mesh as an integer psum. Per-block int32 partials are
+# each bounded by block * 0xFFFF < 2^31, but summing them across islands in
+# int32 could overflow (and x64 is disabled), so every partial is psum'd as
+# two 16-bit lanes: lane values stay < n_islands * 0xFFFF, exact for any
+# realistic island count, and the host reassembles int64 from the lanes.
+
+def psum_split16(partials, axis_name: str):
+    """Traced: psum nonnegative int32 `partials` over `axis_name` as
+    (lo, hi) 16-bit int32 lanes — exact where a direct int32 psum could
+    overflow. Callers reassemble with `lanes_to_int64`."""
+    lo = jax.lax.psum(partials & 0xFFFF, axis_name)
+    hi = jax.lax.psum(partials >> 16, axis_name)
+    return lo, hi
+
+
+def lanes_to_int64(lo, hi) -> np.ndarray:
+    """Host: recombine `psum_split16` lanes into exact int64 values."""
+    return (np.asarray(lo).astype(np.int64)
+            + (np.asarray(hi).astype(np.int64) << np.int64(16)))
 
 
 # ---------------------------------------------------------------------------

@@ -1,3 +1,4 @@
 from repro.kernels.dict_ops.ops import (scan_filter_agg,
                                         scan_filter_agg_batch,
+                                        scan_filter_agg_mesh,
                                         scan_filter_agg_sharded)

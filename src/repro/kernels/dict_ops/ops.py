@@ -16,15 +16,24 @@ dictionary and query-count axes are pow2-bucketed here on the host.
 
 from __future__ import annotations
 
+import functools
+
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.kernels.common import kernel_mode, next_pow2
+from repro.distributed.sharding import (ISLAND_AXIS, island_spec,
+                                        replicated_spec)
+from repro.kernels.common import (instrumented_jit, kernel_mode,
+                                  lanes_to_int64, next_pow2, psum_split16)
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
                                              scan_filter_agg_kernel,
                                              scan_filter_agg_sharded_kernel)
-from repro.kernels.dict_ops.lowered import (scan_exact_lowered,
+from repro.kernels.dict_ops.lowered import (pad_rows_sharded,
+                                            scan_exact_lowered,
                                             scan_exact_sharded_lowered,
+                                            scan_exact_sharded_partials,
                                             scan_float_lowered)
 from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
                                         scan_filter_agg_ref,
@@ -197,3 +206,78 @@ def scan_filter_agg_sharded(fcodes, acodes, valid, dictionary, bounds,
     sums, counts = assemble_exact(lo16, hi16, cnt, neg, axis=1)
     return [[(int(sums[s, q]), int(counts[s, q])) for q in range(nq)]
             for s in range(n_shards)]
+
+
+# ---------------------------------------------------------------------------
+# Mesh placement: one shard_map launch, per-island kernels, psum reduction
+# ---------------------------------------------------------------------------
+
+def assemble_psum_lanes(lanes):
+    """Reassemble exact int64 (sums, counts) from mesh-psum'd lane pairs.
+
+    `lanes` is the 8-tuple a mesh scan returns: each of the four
+    split-accumulator components (lo16, hi16, cnt, neg) psum'd across the
+    island axis as a `common.psum_split16` (lo, hi) lane pair of shape
+    (nb, Q). Recombining the lanes into int64 and then reducing the block
+    axis is the same math as `assemble_exact` with the cross-island sum
+    folded in — bit-identical by integer associativity.
+    """
+    lo16, hi16, cnt, neg = (lanes_to_int64(lanes[i], lanes[i + 1]).sum(axis=0)
+                            for i in range(0, 8, 2))
+    sums = lo16 + (hi16 << np.int64(16)) - (neg << np.int64(32))
+    return sums, cnt
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_scan_call(mesh, block: int, mode: str):
+    """Build (and cache) the jitted shard_map scan for one (mesh, block,
+    mode) combination. Inside the map each island device sees its own
+    (1, width) resident shard; the dictionary and bounds ride in
+    replicated. The per-block partials are psum'd over ``ISLAND_AXIS`` as
+    16-bit lanes (see `common.psum_split16`), so the launch's outputs are
+    already cross-island totals — O(1) host work regardless of islands.
+    """
+    def body(fcodes, acodes, valid, dictionary, bounds):
+        fc, ac, v = pad_rows_sharded(fcodes, acodes, valid, block)
+        if mode == "lowered":
+            parts = scan_exact_sharded_partials(fc, ac, v, dictionary,
+                                                bounds, block)
+        else:
+            parts = scan_filter_agg_sharded_kernel(
+                fc, ac, v, dictionary, bounds, block=block,
+                interpret=(mode == "interpret"))
+        out = []
+        for p in parts:          # local (1, nb, Q) -> psum'd (nb, Q) lanes
+            out.extend(psum_split16(p[0], ISLAND_AXIS))
+        return tuple(out)
+
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(island_spec(), island_spec(), island_spec(),
+                  replicated_spec(), replicated_spec()),
+        out_specs=(P(None, None),) * 8,
+        check_rep=False)  # pallas_call has no replication rule
+    return instrumented_jit(smapped, name="scan_exact_mesh")
+
+
+def scan_filter_agg_mesh(fcodes, acodes, valid, dictionary, bounds, mesh,
+                         block: int = 4096):
+    """Every island's fused scan in ONE launch on its OWN device.
+
+    The mesh-placement sibling of `scan_filter_agg_sharded`: arrays are the
+    same stacked (n_shards, width) resident shards, but laid one island per
+    device of `mesh` (see ``distributed.sharding``), and the cross-island
+    reduction happens ON the mesh as an integer psum instead of on the
+    host. Returns the already-reduced ``[(sum, count)] * Q`` exact python
+    ints — bit-identical to reducing the stacked tier's per-island partials.
+    """
+    n_shards, width = fcodes.shape
+    nq = len(bounds)
+    if width == 0 or nq == 0:
+        return [(0, 0)] * nq
+    block = min(block, next_pow2(width))
+    lanes = _mesh_scan_call(mesh, block, kernel_mode())(
+        fcodes, acodes, valid, pad_dictionary_pow2(dictionary),
+        pad_bounds_pow2(bounds))
+    sums, counts = assemble_psum_lanes(lanes)
+    return [(int(sums[q]), int(counts[q])) for q in range(nq)]

@@ -20,13 +20,19 @@ import functools
 
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
-from repro.kernels.common import (instrumented_jit, kernel_mode, next_pow2)
+from repro.distributed.sharding import (ISLAND_AXIS, island_spec,
+                                        replicated_spec)
+from repro.kernels.common import (instrumented_jit, kernel_mode, next_pow2,
+                                  psum_split16)
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
                                              scan_filter_agg_sharded_kernel)
 from repro.kernels.dict_ops.lowered import (scan_exact_partials,
                                             scan_exact_sharded_partials)
-from repro.kernels.dict_ops.ops import (assemble_exact, pad_bounds_pow2,
+from repro.kernels.dict_ops.ops import (assemble_exact, assemble_psum_lanes,
+                                        pad_bounds_pow2,
                                         pad_dictionary_pow2)
 from repro.kernels.hash_probe.hash_probe import (EMPTY, probe_table,
                                                  probe_table_sharded)
@@ -304,3 +310,65 @@ def scan_filter_agg_join_sharded(fcodes, acodes, jcodes, fvalid, jvalid,
     jsums, _ = assemble_exact(*parts[4:], axis=1)
     return [[(int(sums[s, q]), int(counts[s, q]), int(jsums[s, q]))
              for q in range(nq)] for s in range(n_shards)]
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh_join_call(mesh, block: int, mode: str):
+    """Jitted shard_map join-group scan for one (mesh, block, mode): each
+    island device runs its own aggregate + join scans over its resident
+    (1, width) shard, and all eight split-accumulator components come back
+    psum'd over ``ISLAND_AXIS`` as 16-bit lane pairs (exact — see
+    `common.psum_split16`)."""
+    def body(fcodes, acodes, jcodes, fvalid, jvalid, adict, rcount, bounds):
+        fc, ac, jc, fv, jv = _pad_join_width(
+            fcodes, acodes, jcodes, fvalid, jvalid, block)
+        if mode == "lowered":
+            agg = scan_exact_sharded_partials(fc, ac, fv, adict, bounds,
+                                              block)
+            join = scan_exact_sharded_partials(fc, jc, fv * jv, rcount,
+                                               bounds, block)
+        else:
+            agg = scan_filter_agg_sharded_kernel(
+                fc, ac, fv, adict, bounds, block=block,
+                interpret=(mode == "interpret"))
+            join = scan_filter_agg_sharded_kernel(
+                fc, jc, fv * jv, rcount, bounds, block=block,
+                interpret=(mode == "interpret"))
+        out = []
+        for p in agg + join:     # local (1, nb, Q) -> psum'd (nb, Q) lanes
+            out.extend(psum_split16(p[0], ISLAND_AXIS))
+        return tuple(out)
+
+    smapped = shard_map(
+        body, mesh=mesh,
+        in_specs=(island_spec(),) * 5 + (replicated_spec(),) * 3,
+        out_specs=(P(None, None),) * 16,
+        check_rep=False)  # pallas_call has no replication rule
+    return instrumented_jit(smapped, name="scan_exact_join_mesh")
+
+
+def scan_filter_agg_join_mesh(fcodes, acodes, jcodes, fvalid, jvalid,
+                              adict, rcount, bounds, mesh,
+                              block: int = 4096):
+    """Every island's join-query group in ONE launch on its OWN device.
+
+    Mesh-placement sibling of `scan_filter_agg_join_sharded`: same stacked
+    resident shards laid one island per device of `mesh`, same GLOBAL
+    build-side histogram `rcount` (replicated to every island, like the
+    dictionary), but the cross-island reduction happens ON the mesh as an
+    integer psum. Returns the already-reduced
+    ``[(sum, count, join_count)] * Q`` exact python ints.
+    """
+    n_shards, width = fcodes.shape
+    nq = len(bounds)
+    if width == 0 or nq == 0:
+        return [(0, 0, 0)] * nq
+    block = min(block, next_pow2(width))
+    lanes = _mesh_join_call(mesh, block, kernel_mode())(
+        fcodes, acodes, jcodes, fvalid, jvalid,
+        pad_dictionary_pow2(adict), pad_dictionary_pow2(rcount),
+        pad_bounds_pow2(bounds))
+    sums, counts = assemble_psum_lanes(lanes[:8])
+    jsums, _ = assemble_psum_lanes(lanes[8:])
+    return [(int(sums[q]), int(counts[q]), int(jsums[q]))
+            for q in range(nq)]

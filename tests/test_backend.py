@@ -71,12 +71,18 @@ def test_cross_backend_identical_answers(runs, system):
 
 
 def test_numpy_backend_matches_default(workload):
-    """backend=None must be the numpy reference unless reconfigured."""
+    """backend=None must answer exactly like the numpy reference, whatever
+    the session default resolves to (the CI matrix sets REPRO_BACKEND to
+    sharded/mesh specs); island-count-dependent stats only have to match
+    when the default is the plain unsharded tier."""
     table, stream, queries = workload
-    a = htap.run_polynesia(table, stream, queries, n_rounds=4)
-    b = htap.run_polynesia(table, stream, queries, n_rounds=4,
-                           backend="numpy")
-    assert a.results == b.results and a.stats == b.stats
+    a = htap.run("Polynesia", table, stream, queries, n_rounds=4)
+    b = htap.run("Polynesia", table, stream, queries, n_rounds=4,
+                 backend="numpy", n_shards=1)
+    assert a.results == b.results
+    be = get_backend(None)
+    if getattr(be, "n_shards", 1) == 1 and be.placement == "stacked":
+        assert a.stats == b.stats
 
 
 # ---------------------------------------------------------------------------

@@ -1,104 +1,84 @@
-"""Distribution layer: sharding rules + a real multi-device jit execution
-(8 forced host devices, subprocess-isolated so other tests see 1 device)."""
+"""Island distribution layer: partition rules + the process-global mesh
+context that MeshBackend hangs analytical shards on.
 
-import json
-import subprocess
-import sys
-import textwrap
+Everything here runs on the default single host device — real multi-device
+mesh execution is covered subprocess-style in test_mesh_backend.py.
+"""
 
 import jax
+import numpy as np
 import pytest
+from jax.sharding import NamedSharding, PartitionSpec
 
-# multi-minute 8-host-device subprocess runs: opt-in via `pytest -m slow`
-pytestmark = pytest.mark.slow
-
-from repro.configs import ARCH_NAMES, get_config
-from repro.launch.steps import abstract_params, pad_for_mesh
-from repro.models.config import ModelConfig
-
-
-def test_flattened_head_dims_divide_model_axis():
-    """The TP sharding contract: H*hd and Hkv*hd divide 16 for every arch."""
-    for name in ARCH_NAMES:
-        cfg = get_config(name)
-        if cfg.name.startswith("falcon"):
-            continue  # attn-free
-        assert (cfg.n_heads * cfg.head_dim_) % 16 == 0, name
-        assert (cfg.n_kv_heads * cfg.head_dim_) % 16 == 0, name
-        assert cfg.d_ff % 16 == 0 or cfg.d_ff == 0, name
+from repro.distributed import (ISLAND_AXIS, clear_island_mesh,
+                               current_island_mesh, install_island_mesh,
+                               island_mesh, island_sharding, island_spec,
+                               place_shard_arrays, replicated_sharding,
+                               replicated_spec)
 
 
-def test_vocab_padding():
-    cfg = get_config("internvl2-26b")
-    padded = pad_for_mesh(cfg)
-    assert padded.vocab_size % 256 == 0
-    assert padded.vocab_size >= cfg.vocab_size
-    # already-divisible vocabs unchanged
-    cfg2 = get_config("kimi-k2-1t-a32b")
-    assert pad_for_mesh(cfg2).vocab_size == cfg2.vocab_size
+@pytest.fixture(autouse=True)
+def _clean_mesh_context():
+    clear_island_mesh()
+    yield
+    clear_island_mesh()
 
 
-_SUBPROCESS_PROG = textwrap.dedent("""
-    import os
-    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import jax, jax.numpy as jnp, numpy as np, json
-    from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.configs import get_smoke_config
-    from repro.distributed.sharding import param_shardings, batch_spec
-    from repro.distributed.context import set_partitioning
-    from repro.launch.steps import make_train_step
-    from repro.models import init_lm
-    from repro.optim import get_optimizer
-
-    mesh = jax.make_mesh((2, 4), ("data", "model"))
-    set_partitioning(mesh, ("data",))
-    cfg = get_smoke_config("gemma2-9b")
-    params = init_lm(jax.random.PRNGKey(0), cfg)
-    p_sh = param_shardings(jax.eval_shape(lambda: params), mesh)
-    params = jax.device_put(params, p_sh)
-    opt = get_optimizer("adamw", lr=1e-3)
-    opt_state = jax.jit(opt[0], out_shardings=None)(params)
-    step_fn = make_train_step(cfg, opt)
-    toks = jnp.zeros((4, 16), jnp.int32)
-    batch = {"tokens": toks, "labels": toks}
-    bs = NamedSharding(mesh, batch_spec(mesh))
-    batch = jax.device_put(batch, {"tokens": bs, "labels": bs})
-    jitted = jax.jit(step_fn, in_shardings=(p_sh, None, None,
-                                            {"tokens": bs, "labels": bs}))
-    p2, o2, metrics = jitted(params, opt_state, jnp.int32(0), batch)
-    # run a second step on the sharded outputs (round trip)
-    p3, o3, metrics2 = jitted(p2, o2, jnp.int32(1), batch)
-    assert np.isfinite(float(metrics["loss"]))
-    assert np.isfinite(float(metrics2["loss"]))
-    assert float(metrics2["loss"]) < float(metrics["loss"]) + 1.0
-    print(json.dumps({"ok": True, "loss": float(metrics["loss"])}))
-""")
+def test_island_spec_shards_leading_axis_only():
+    assert island_spec() == PartitionSpec(ISLAND_AXIS, None)
+    assert island_spec(ndim=1) == PartitionSpec(ISLAND_AXIS)
+    assert island_spec(ndim=3) == PartitionSpec(ISLAND_AXIS, None, None)
 
 
-def test_multidevice_train_step_executes():
-    """Real 8-device SPMD execution of a sharded train step (gemma2 smoke)."""
-    out = subprocess.run([sys.executable, "-c", _SUBPROCESS_PROG],
-                         capture_output=True, text=True, timeout=600,
-                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
-    assert out.returncode == 0, out.stderr[-2000:]
-    payload = json.loads(out.stdout.strip().splitlines()[-1])
-    assert payload["ok"]
+def test_replicated_spec_is_empty():
+    assert replicated_spec() == PartitionSpec()
 
 
-def test_hlo_analyzer_counts_loop_trips():
-    """Trip-count-aware accounting on a toy scan (the §Roofline source)."""
-    import jax.numpy as jnp
-    from repro.launch.hlo_analysis import analyze_hlo
+def test_island_mesh_single_device():
+    mesh = island_mesh(1)
+    assert mesh.axis_names == (ISLAND_AXIS,)
+    assert mesh.devices.size == 1
+    # cached: same object on repeat calls
+    assert island_mesh(1) is mesh
 
-    def step(w, x):
-        def body(h, wl):
-            return jnp.tanh(h @ wl), None
-        h, _ = jax.lax.scan(body, x, w)
-        return h.sum()
 
-    w = jax.ShapeDtypeStruct((13, 64, 64), jnp.float32)
-    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
-    compiled = jax.jit(jax.grad(step)).lower(w, x).compile()
-    res = analyze_hlo(compiled.as_text())
-    expect = 3 * 13 * 2 * 4 * 64 * 64  # fwd + dgrad + wgrad, 13 trips
-    assert 0.9 * expect <= res["flops"] <= 1.2 * expect
+def test_island_mesh_too_many_devices_is_actionable():
+    want = jax.device_count() + 1
+    with pytest.raises(RuntimeError, match="xla_force_host_platform_device_count"):
+        island_mesh(want)
+
+
+def test_mesh_context_install_and_clear():
+    assert current_island_mesh() is None
+    mesh = island_mesh(1)
+    install_island_mesh(mesh)
+    assert current_island_mesh() is mesh
+    # island_mesh() prefers the installed mesh when sizes match
+    assert island_mesh(1) is mesh
+    clear_island_mesh()
+    assert current_island_mesh() is None
+
+
+def test_install_rejects_foreign_mesh():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="island"):
+        install_island_mesh(mesh)
+
+
+def test_shardings_name_the_island_axis():
+    mesh = island_mesh(1)
+    sh = island_sharding(mesh)
+    assert isinstance(sh, NamedSharding)
+    assert sh.spec == PartitionSpec(ISLAND_AXIS, None)
+    assert replicated_sharding(mesh).spec == PartitionSpec()
+
+
+def test_place_shard_arrays_round_trips():
+    mesh = island_mesh(1)
+    codes = np.arange(12, dtype=np.int32).reshape(1, 12)
+    valid = np.ones((1, 12), dtype=bool)
+    dcodes, dvalid = place_shard_arrays(mesh, codes, valid)
+    assert dcodes.shape == codes.shape and dvalid.shape == valid.shape
+    assert dcodes.sharding.spec == PartitionSpec(ISLAND_AXIS, None)
+    np.testing.assert_array_equal(np.asarray(dcodes), codes)
+    np.testing.assert_array_equal(np.asarray(dvalid), valid)

@@ -1,0 +1,209 @@
+"""Mesh placement tier: one analytical island per device of a jax mesh.
+
+The equality suite runs in a subprocess with ``XLA_FLAGS`` forcing 4 host
+platform devices (the flag must be set before jax imports, and must not
+leak into the rest of the suite). In-process tests cover the BackendSpec
+grammar, placement resolution and the actionable failure modes — all of
+which are device-count independent or legal on a single device.
+"""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.backend import (BackendSpec, MeshBackend, PLACEMENTS,
+                                ShardedBackend, get_backend,
+                                parse_backend_spec)
+
+_REPO = pathlib.Path(__file__).parent.parent
+
+
+# ---------------------------------------------------------------------------
+# spec grammar / placement resolution (single device is enough)
+# ---------------------------------------------------------------------------
+
+def test_mesh_spec_resolves_to_mesh_backend():
+    """'pallas@1/mesh' is a legal 1-island mesh on any machine."""
+    be = get_backend("pallas@1/mesh")
+    assert isinstance(be, MeshBackend)
+    assert be.placement == "mesh" and be.n_shards == 1
+    assert be.name == "pallas@1/mesh"
+    assert be.mesh.axis_names == ("island",)
+    # explicit stacked placement stays on the batched tier
+    st = get_backend("pallas@4/stacked")
+    assert isinstance(st, ShardedBackend) and not isinstance(st, MeshBackend)
+    assert st.placement == "stacked"
+
+
+def test_single_island_mesh_matches_numpy(small_workload):
+    """End to end on ONE device: pallas@1/mesh answers == numpy@1 golden."""
+    from repro.core import htap
+    table, stream, queries = small_workload
+    ref = htap.run("Polynesia", table, stream, queries, n_rounds=4,
+                   backend="numpy", n_shards=1)
+    mesh = htap.run("Polynesia", table, stream, queries, n_rounds=4,
+                    backend="pallas@1/mesh")
+    assert [int(a) for a in mesh.results] == [int(a) for a in ref.results]
+    assert mesh.stats["placement"] == "mesh"
+    # Phase-2 residency: swapped-in shard views are adopted device-resident,
+    # never re-sharded through the host
+    assert mesh.stats["views_resident"] > 0
+    assert mesh.stats["sharded_views"] == 0
+
+
+def test_mesh_requires_pallas_inner():
+    with pytest.raises(ValueError, match="mesh placement"):
+        get_backend("numpy@1/mesh")
+    with pytest.raises(ValueError, match="pallas@2/mesh"):
+        get_backend("numpy@2/mesh")
+
+
+def test_mesh_insufficient_devices_is_actionable():
+    want = jax.device_count() + 1
+    with pytest.raises(RuntimeError,
+                       match="xla_force_host_platform_device_count"):
+        get_backend(f"pallas@{want}/mesh")
+
+
+def test_placement_argument_and_contradictions():
+    # placement= argument is equivalent to the /placement spec suffix
+    be = get_backend("pallas@1", placement="mesh")
+    assert isinstance(be, MeshBackend)
+    # instance passthrough: matching placement fine, contradiction raises
+    assert get_backend(be, placement="mesh") is be
+    with pytest.raises(ValueError, match="was requested"):
+        get_backend(be, placement="stacked")
+    with pytest.raises(ValueError, match="was requested"):
+        get_backend(get_backend("pallas@2"), placement="mesh")
+    # an explicitly placed spec contradicting the argument raises too
+    with pytest.raises(ValueError):
+        get_backend("pallas@1/mesh", placement="stacked")
+
+
+def test_placement_env_validation(monkeypatch):
+    from repro.core.backend import _placement_from_env
+    monkeypatch.setenv("REPRO_PLACEMENT", "mesh")
+    assert _placement_from_env() == "mesh"
+    monkeypatch.delenv("REPRO_PLACEMENT")
+    assert _placement_from_env() == "stacked"
+    monkeypatch.setenv("REPRO_PLACEMENT", "ring")
+    with pytest.raises(ValueError, match="REPRO_PLACEMENT"):
+        _placement_from_env()
+
+
+def test_property_backend_spec_roundtrip():
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(name=st.sampled_from(["numpy", "pallas"]),
+           n=st.one_of(st.none(), st.integers(1, 64)),
+           p=st.one_of(st.none(), st.sampled_from(PLACEMENTS)))
+    def prop(name, n, p):
+        spec = BackendSpec(name, n, p)
+        assert parse_backend_spec(str(spec)) == spec
+        assert str(parse_backend_spec(str(spec))) == str(spec)
+
+    prop()
+
+
+def test_malformed_placement_specs_rejected():
+    for bad in ("@4", "", "pallas@", "pallas@4.0", "pallas@4/ring",
+                "pallas/", "pallas@4/MESH", "/mesh"):
+        with pytest.raises(KeyError):
+            parse_backend_spec(bad)
+    for bad in ("pallas@0/mesh", "numpy@-2/stacked"):
+        with pytest.raises(ValueError):
+            parse_backend_spec(bad)
+    with pytest.raises(ValueError):
+        BackendSpec("pallas", 4, "ring")
+
+
+# ---------------------------------------------------------------------------
+# the real thing: 4 forced host devices, subprocess-isolated
+# ---------------------------------------------------------------------------
+
+_PROG = textwrap.dedent("""
+    import json
+
+    import jax
+    import numpy as np
+
+    from repro.core import engine, htap, schema
+    from repro.core.backend import counting_kernel_calls
+
+    assert jax.device_count() == 4, jax.devices()
+
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", 3, 32)
+    table = schema.gen_table(rng, sch, 600)
+    stream = schema.gen_update_stream(rng, sch, 600, 1500, write_ratio=0.5)
+    queries = engine.gen_queries(rng, 6, 3)
+
+    def run(name, backend):
+        return htap.run(name, table, stream, queries, n_rounds=4,
+                        backend=backend)
+
+    # every driver: mesh answers AND modeled throughput == stacked == golden
+    for name in htap.PRESETS:
+        ref = run(name, "numpy@1")
+        stacked = run(name, "pallas@4")
+        mesh = run(name, "pallas@4/mesh")
+        a = [int(x) for x in mesh.results]
+        assert a == [int(x) for x in ref.results], name
+        assert a == [int(x) for x in stacked.results], name
+        assert mesh.txn_throughput == stacked.txn_throughput, name
+        assert mesh.ana_throughput == stacked.ana_throughput, name
+
+    # a mesh smaller than the device count is legal too
+    m2 = run("Polynesia", "pallas@2/mesh")
+    s2 = run("Polynesia", "pallas@2")
+    assert [int(x) for x in m2.results] == [int(x) for x in s2.results]
+
+    # O(1) kernel launches in the island count: the mesh run must not
+    # dispatch more kernels than an unsharded pallas run, and the scan
+    # plane must actually ride the shard_map entry points
+    with counting_kernel_calls() as c1:
+        run("Polynesia", "pallas@1")
+    with counting_kernel_calls() as cm:
+        p = run("Polynesia", "pallas@4/mesh")
+    assert sum(cm.values()) <= sum(c1.values()), (dict(cm), dict(c1))
+    assert cm.get("scan_filter_agg_mesh", 0) > 0, dict(cm)
+    assert cm.get("scan_filter_agg_join_mesh", 0) > 0, dict(cm)
+    assert cm.get("scan_filter_agg_sharded", 0) == 0, dict(cm)
+
+    # Phase-2 swaps install device-resident views; the host re-shard
+    # path stays cold
+    assert p.stats["placement"] == "mesh"
+    assert p.stats["views_resident"] > 0
+    assert p.stats["sharded_views"] == 0
+
+    print(json.dumps({"ok": True, "devices": jax.device_count(),
+                      "launches": sum(cm.values()),
+                      "resident": p.stats["views_resident"]}))
+""")
+
+
+def test_mesh_equality_with_four_host_devices():
+    """pallas@{2,4}/mesh must be bit-identical (answers + modeled
+    throughput) to the stacked placement and the numpy@1 golden for every
+    HTAP driver, in O(1) kernel launches, with Phase-2 residency."""
+    env = {**os.environ,
+           "PYTHONPATH": str(_REPO / "src"),
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=4",
+           "REPRO_PALLAS_INTERPRET": "auto"}
+    out = subprocess.run([sys.executable, "-c", _PROG], cwd=_REPO,
+                         capture_output=True, text=True, timeout=600,
+                         env=env)
+    assert out.returncode == 0, out.stderr[-3000:]
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["ok"] and payload["devices"] == 4

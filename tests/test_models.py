@@ -13,10 +13,32 @@ from repro.models import (encdec_apply, init_encdec, init_encdec_cache,
                           init_lm, init_lm_cache, lm_apply, lm_decode_step)
 from repro.models.encdec import (encdec_decode_step, encode,
                                  precompute_cross_kv)
+from repro.launch.steps import pad_for_mesh
 from repro.models.lm import lm_loss
 
 RNG = jax.random.PRNGKey(0)
 B, S = 2, 16
+
+
+def test_flattened_head_dims_divide_model_axis():
+    """The TP sharding contract: H*hd and Hkv*hd divide 16 for every arch."""
+    for name in ARCH_NAMES:
+        cfg = get_config(name)
+        if cfg.name.startswith("falcon"):
+            continue  # attn-free
+        assert (cfg.n_heads * cfg.head_dim_) % 16 == 0, name
+        assert (cfg.n_kv_heads * cfg.head_dim_) % 16 == 0, name
+        assert cfg.d_ff % 16 == 0 or cfg.d_ff == 0, name
+
+
+def test_vocab_padding():
+    cfg = get_config("internvl2-26b")
+    padded = pad_for_mesh(cfg)
+    assert padded.vocab_size % 256 == 0
+    assert padded.vocab_size >= cfg.vocab_size
+    # already-divisible vocabs unchanged
+    cfg2 = get_config("kimi-k2-1t-a32b")
+    assert pad_for_mesh(cfg2).vocab_size == cfg2.vocab_size
 
 
 @pytest.mark.parametrize("name", ARCH_NAMES)
@@ -122,3 +144,21 @@ def test_long_500k_applicability_rules():
     for a in ARCH_NAMES:
         assert shape_applicable(a, "train_4k")[0]
         assert shape_applicable(a, "decode_32k")[0]
+
+
+def test_hlo_analyzer_counts_loop_trips():
+    """Trip-count-aware accounting on a toy scan (the §Roofline source)."""
+    from repro.launch.hlo_analysis import analyze_hlo
+
+    def step(w, x):
+        def body(h, wl):
+            return jnp.tanh(h @ wl), None
+        h, _ = jax.lax.scan(body, x, w)
+        return h.sum()
+
+    w = jax.ShapeDtypeStruct((13, 64, 64), jnp.float32)
+    x = jax.ShapeDtypeStruct((4, 64), jnp.float32)
+    compiled = jax.jit(jax.grad(step)).lower(w, x).compile()
+    res = analyze_hlo(compiled.as_text())
+    expect = 3 * 13 * 2 * 4 * 64 * 64  # fwd + dgrad + wgrad, 13 trips
+    assert 0.9 * expect <= res["flops"] <= 1.2 * expect

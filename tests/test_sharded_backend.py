@@ -474,9 +474,13 @@ def test_backend_spec_parsing():
 def test_malformed_specs_fail_early_with_actionable_errors():
     """Bad specs error at parse time with the expected form in the
     message, not as deep lookup errors ("@4", "pallas@", non-integers)."""
-    from repro.core.backend import parse_backend_spec
-    assert parse_backend_spec("pallas") == ("pallas", None)
-    assert parse_backend_spec("numpy@4") == ("numpy", 4)
+    from repro.core.backend import BackendSpec, parse_backend_spec
+    assert parse_backend_spec("pallas") == BackendSpec("pallas")
+    assert parse_backend_spec("numpy@4") == BackendSpec("numpy", 4)
+    assert parse_backend_spec("pallas@4/mesh") == \
+        BackendSpec("pallas", 4, "mesh")
+    assert parse_backend_spec("pallas/stacked") == \
+        BackendSpec("pallas", None, "stacked")
     with pytest.raises(KeyError, match="empty backend name"):
         get_backend("@4")
     with pytest.raises(KeyError, match="empty backend spec"):

@@ -16,8 +16,9 @@ larger must ship with a regenerated baseline
 (``python -m benchmarks.run ci --json=benchmarks/baseline.json``).
 
 Two machine-independent gates cover the sharded snapshot plane: the
-kernel-dispatch count of pallas@4 must not exceed pallas@1 (one vmapped
-launch per scan group, however many islands), and the measured warm
+kernel-dispatch counts of pallas@4 and (when its combo ran) pallas@4/mesh
+must not exceed pallas@1 (one vmapped/shard_map launch per scan group,
+however many islands or devices), and the measured warm
 wall-clock *ratio* pallas@4/pallas@1 — both halves from the same run —
 may exceed the baseline's ratio by at most 30%. Absolute wall_s is
 printed for the record but not gated (it doesn't port across machines).
@@ -137,16 +138,22 @@ def _sharded_plane_gates(cur: dict, base: dict) -> list[str]:
     (2) Wall clock: the pallas@4 / pallas@1 warm wall ratio (same run,
     same machine) may exceed the baseline's ratio by at most
     WALL_RATIO_BUDGET.
+    The launch-count gate also covers the mesh placement tier when its
+    combo ran: pallas@4/mesh distributes the same islands over devices
+    through one shard_map dispatch per scan group, so its launch count
+    is held to the same O(1)-in-islands bound.
     """
     failures = []
     l1 = cur.get("pallas@1", {}).get("kernel_launches")
-    l4 = cur.get("pallas@4", {}).get("kernel_launches")
-    if l1 is not None and l4 is not None:
-        status = "FAIL" if l4 > l1 else "ok"
-        print(f"  kernel_launches pallas@4={l4} <= pallas@1={l1} {status}")
-        if l4 > l1:
+    for combo in ("pallas@4", "pallas@4/mesh"):
+        ln = cur.get(combo, {}).get("kernel_launches")
+        if l1 is None or ln is None:
+            continue
+        status = "FAIL" if ln > l1 else "ok"
+        print(f"  kernel_launches {combo}={ln} <= pallas@1={l1} {status}")
+        if ln > l1:
             failures.append(
-                f"kernel_launches: pallas@4 dispatched {l4} kernels > "
+                f"kernel_launches: {combo} dispatched {ln} kernels > "
                 f"pallas@1's {l1} — the island fan-out is not batching")
     w1 = cur.get("pallas@1", {}).get("wall_s")
     w4 = cur.get("pallas@4", {}).get("wall_s")

@@ -50,6 +50,14 @@ CI_MATRIX = [
           async_propagation=True)),
     ("numpy@1+session-chunked",
      dict(backend="numpy", n_shards=1, session_chunked=True)),
+    # delta-store update plane vs the eager Phase-2 swap, both on the sync
+    # timeline so freshness is measured: answers must be bit-identical
+    # (enforced against the whole matrix below) and check_bench holds the
+    # delta combo's txn throughput and freshness to the eager row
+    ("pallas@1+timeline", dict(backend="pallas", n_shards=1,
+                               timing="timeline")),
+    ("pallas@1+delta", dict(backend="pallas", n_shards=1,
+                            timing="timeline", delta_store=True)),
 ]
 
 

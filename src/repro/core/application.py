@@ -28,15 +28,19 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core.backend import ShardedBackend, get_backend
-from repro.core.dsm import EncodedColumn, shard_bounds
+from repro.core.backend import PallasBackend, ShardedBackend, get_backend
+from repro.core.dsm import ColumnDelta, EncodedColumn, shard_bounds
 from repro.core.hwmodel import CostLog
+from repro.core.nsm import UPDATE_DTYPE
 from repro.core.schema import VALUE_BYTES
+from repro.kernels.merge_runs import merge_sorted_runs
 
 # software (CPU) costs for the same steps, for the MI baseline
 CPU_CYCLES_PER_CMP = 8.0
 CPU_CYCLES_PER_LOOKUP = 30.0   # random dictionary access (cache-missing)
 CPU_CYCLES_PER_SCAN_ITEM = 3.0
+# One delta-overlay entry: row id (8) + value (4) + cid (8) + valid/pad (4)
+DELTA_ENTRY_BYTES = 24
 # Soft partitioning (§5.1, [49,51,62]): columns are partitioned so the
 # dictionary/hash-table working set stays bounded; an update batch touches
 # only the partitions containing its rows, so (de)compression cost scales
@@ -177,31 +181,34 @@ def route_updates(updates: np.ndarray, bounds: list[int]) -> np.ndarray:
 
 def _optimized_apply_cost(cost: CostLog, on_pim: bool, m: int, n: int,
                           k_old: int, k_new: int, n_update_dict: int,
-                          bit_width: int) -> None:
+                          bit_width: int, phase: str = "apply") -> None:
     """Cost events for the optimized two-stage application (shared by the
     unsharded and sharded paths). The sharded path emits the same events:
     the dictionary stages (sorter/merge/hash) are replicated per island so
     their modeled latency is island-independent, while the stage-3
     re-encode bytes are row-partitioned and ride the island-scaled copy/
-    bandwidth rates (see hwmodel.phase_time)."""
+    bandwidth rates (see hwmodel.phase_time). `phase` distinguishes the
+    foreground swap ("apply") from background delta compaction ("compact"):
+    same events, different timeline node — freshness counts only the
+    former."""
     # timeline metadata: applied-update count on this node's Phase-2 swap
     cost.annotate_add(n_applied=int(m))
     # soft partitioning: updates touch at most m partitions
     n_eff = min(n, max(1, min(m, n // PARTITION_ROWS + 1)) * PARTITION_ROWS)
     enc_eff = n_eff * bit_width / 8.0
     if on_pim:
-        cost.add(phase="apply", island="ana", resource="sorter", items=m)
-        cost.add(phase="apply", island="ana", resource="merge",
+        cost.add(phase=phase, island="ana", resource="sorter", items=m)
+        cost.add(phase=phase, island="ana", resource="merge",
                  items=k_old + n_update_dict,
                  bytes_local=(k_old + k_new) * VALUE_BYTES)
         # index-based re-encode: one sequential pass (index fits in VMEM/SRAM)
-        cost.add(phase="apply", island="ana", resource="copy",
+        cost.add(phase=phase, island="ana", resource="copy",
                  bytes_local=2 * enc_eff)
-        cost.add(phase="apply", island="ana", resource="hash",
+        cost.add(phase=phase, island="ana", resource="hash",
                  items=m, bytes_local=m * 16)
     else:
         cost.add(
-            phase="apply", island="txn", resource="cpu",
+            phase=phase, island="txn", resource="cpu",
             cycles=m * np.log2(max(m, 2)) * CPU_CYCLES_PER_CMP        # sort updates
             + (k_old + k_new) * CPU_CYCLES_PER_SCAN_ITEM              # dict merge
             + n_eff * 8.0                                             # unpack+reindex+pack
@@ -217,6 +224,7 @@ def apply_updates(
     on_pim: bool = True,
     backend=None,
     staged=None,
+    phase: str = "apply",
 ) -> EncodedColumn:
     """Optimized two-stage update application (the paper's contribution).
 
@@ -237,7 +245,8 @@ def apply_updates(
         from repro.core.dsm import concat_columns
         return concat_columns(apply_updates_shards(col, updates, cost,
                                                    on_pim, be,
-                                                   staged=staged))
+                                                   staged=staged,
+                                                   phase=phase))
     old_codes = np.asarray(col.codes)
     old_dict = np.asarray(col.dictionary)
     valid = np.array(col.valid, copy=True)
@@ -266,7 +275,7 @@ def apply_updates(
 
     if cost is not None and m:
         _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
-                              len(update_dict), col.bit_width)
+                              len(update_dict), col.bit_width, phase=phase)
 
     # columns stay host numpy: the jitted kernels convert at dispatch,
     # which is far cheaper than an eager device_put per column per round
@@ -285,6 +294,7 @@ def apply_updates_shards(
     on_pim: bool = True,
     backend=None,
     staged=None,
+    phase: str = "apply",
 ) -> list[EncodedColumn]:
     """Update application across N analytical islands (row-wise shards).
 
@@ -358,7 +368,7 @@ def apply_updates_shards(
 
     if cost is not None and m:
         _optimized_apply_cost(cost, on_pim, m, n, k_old, len(new_dict),
-                              len(update_dict), col.bit_width)
+                              len(update_dict), col.bit_width, phase=phase)
 
     shared_dict = np.asarray(new_dict)  # one replicated dictionary object
     return [
@@ -372,6 +382,7 @@ def apply_updates_naive(
     col: EncodedColumn,
     updates: np.ndarray,
     cost: CostLog | None = None,
+    phase: str = "apply",
 ) -> EncodedColumn:
     """The paper's initial algorithm (§5.2), costed as CPU software.
 
@@ -418,7 +429,7 @@ def apply_updates_naive(
         # SIMD-friendly in-cache sort: ~1 cycle/item/pass, log2(P) passes.
         logp = np.log2(max(PARTITION_ROWS, 2))
         cost.add(
-            phase="apply", island="txn", resource="cpu",
+            phase=phase, island="txn", resource="cpu",
             cycles=n_eff * 3.0                                       # decompress
             + m * CPU_CYCLES_PER_SCAN_ITEM                           # apply
             + n_eff * logp * 1.0                                     # sort passes
@@ -436,3 +447,209 @@ def apply_updates_naive(
         valid=np.asarray(valid),
         version=col.version + 1,
     )
+
+
+# ---------------------------------------------------------------------------
+# Delta-store update plane: append-only overlay + background compaction
+# ---------------------------------------------------------------------------
+
+def delta_eligible(updates: np.ndarray, n_base: int) -> bool:
+    """A batch can ride the delta overlay iff it only modifies/deletes
+    EXISTING base rows. Inserts (op 2) and writes past the base row count
+    would change the column length, which the overlay algebra deliberately
+    does not model — those batches fall back to compact-then-eager-apply
+    (session workloads never emit them)."""
+    if len(updates) == 0:
+        return True
+    if np.any(updates["op"] == 2):
+        return False
+    return int(updates["row"].max()) < n_base
+
+
+def apply_updates_delta(
+    col: EncodedColumn,
+    delta: ColumnDelta,
+    updates: np.ndarray,
+    cost: CostLog | None = None,
+    on_pim: bool = True,
+    backend=None,
+) -> ColumnDelta:
+    """Append a shipped update batch to the column's delta overlay.
+
+    The delta-store fast path: instead of the two-stage rebuild
+    (`apply_updates` — dictionary merge + full soft-partition re-encode),
+    the batch collapses to one overlay entry per touched row
+    (last-writer-wins, reproducing `_apply_row_ops`'s writes-then-deletes
+    batch semantics) and merges into the existing sorted overlay as a
+    sorted-run merge keyed by row id (merge unit; the same int64-lane
+    `kernels/merge_runs` machinery the dictionary merge rides). Work is
+    O(m + d), never O(n) — the base column is untouched, which is exactly
+    why append visibility is cheap and freshness improves at high commit
+    rates. Scans see the batch via the query-time base+overlay merge
+    (engine.run_query_group_dsm) and compaction later folds the overlay
+    back into the base (`compaction_entries` -> the standard apply).
+
+    Requires `delta_eligible(updates, delta.n_base)`; raises ValueError
+    otherwise. Returns the NEW overlay (functional update — the caller
+    swaps the pointer, mirroring the Phase-2 contract).
+    """
+    if not delta_eligible(updates, delta.n_base):
+        raise ValueError(
+            "update batch has inserts or rows past the overlay's base row "
+            "count; compact the overlay and use the eager apply instead")
+    m = len(updates)
+    if m == 0:
+        return delta
+    be = get_backend(backend)
+    inner = be.inner if isinstance(be, ShardedBackend) else be
+
+    mods = updates[updates["op"] == 1]
+    dels = updates[updates["op"] == 3]
+    # commit order within the batch (ship buffers are commit-ordered per
+    # column already; sort defensively, same as _sorted_write_ops)
+    if len(mods):
+        mods = mods[np.argsort(mods["commit_id"], kind="stable")]
+    if len(dels):
+        dels = dels[np.argsort(dels["commit_id"], kind="stable")]
+
+    rows_b = np.unique(np.concatenate([mods["row"], dels["row"]])
+                       ).astype(np.int64)
+    d_batch = len(rows_b)
+    if d_batch == 0:  # read-only batch: state-neutral, still priced below
+        new = ColumnDelta(rows=delta.rows, values=delta.values,
+                          valid=delta.valid, cids=delta.cids,
+                          n_base=delta.n_base,
+                          n_entries=delta.n_entries + m)
+        _delta_append_cost(cost, on_pim, m, delta.n_overlay, 0,
+                           new.n_overlay)
+        return new
+
+    # Per-row batch state, matching the eager batch semantics exactly:
+    # ALL writes land in commit order (last one wins), then deletes clear
+    # validity — a written+deleted row keeps its written value.
+    has_w = np.zeros(d_batch, dtype=bool)
+    last_val = np.zeros(d_batch, dtype=np.int32)
+    if len(mods):
+        wi = np.searchsorted(rows_b, mods["row"].astype(np.int64))
+        has_w[wi] = True
+        last_val[wi] = mods["value"]          # in-order scatter: last wins
+    has_d = np.zeros(d_batch, dtype=bool)
+    if len(dels):
+        has_d[np.searchsorted(rows_b, dels["row"].astype(np.int64))] = True
+    valid_b = has_w & ~has_d
+    # delete-only rows carry the row's CURRENT effective value (the eager
+    # path keeps a deleted row's code, and f-selected aggregates still read
+    # it) — previous overlay value if the row is overlayed, else base value
+    value_b = last_val.copy()
+    carry = ~has_w
+    if carry.any():
+        rows_c = rows_b[carry]
+        vals_c = np.asarray(col.dictionary)[
+            np.asarray(col.codes)[rows_c]].astype(np.int32)
+        if delta.n_overlay:
+            oi = np.searchsorted(delta.rows, rows_c)
+            oic = np.minimum(oi, delta.n_overlay - 1)
+            hit = delta.rows[oic] == rows_c
+            vals_c = np.where(hit, delta.values[oic], vals_c)
+        value_b[carry] = vals_c
+    cid_b = np.zeros(d_batch, dtype=np.int64)
+    touch = np.concatenate([mods, dels]) if len(dels) else mods
+    if len(touch):
+        touch = touch[np.argsort(touch["commit_id"], kind="stable")]
+        cid_b[np.searchsorted(rows_b, touch["row"].astype(np.int64))] = \
+            touch["commit_id"]                # in-order scatter: latest wins
+
+    # Merge old overlay + batch rows (sorted-run merge on the merge unit
+    # when both runs exist); normalize to keep-LAST per key with the batch
+    # winning, independent of the merge mode's tie order.
+    d_old = delta.n_overlay
+    if d_old == 0:
+        keys_sorted, sel = rows_b, np.arange(d_batch, dtype=np.int64)
+    else:
+        if isinstance(inner, PallasBackend) and d_batch:
+            merged_keys, src = merge_sorted_runs([delta.rows, rows_b])
+            keys, src = np.asarray(merged_keys), np.asarray(src)
+            live = src >= 0           # defensive: sentinel-trimmed already
+            keys, src = keys[live], src[live]
+        else:
+            keys = np.concatenate([delta.rows, rows_b])
+            src = np.arange(d_old + d_batch, dtype=np.int64)
+        order = np.lexsort((src, keys))
+        keys_sorted, sel = keys[order], src[order]
+        keep = np.append(keys_sorted[1:] != keys_sorted[:-1], True)
+        keys_sorted, sel = keys_sorted[keep], sel[keep]
+    cat_vals = np.concatenate([delta.values, value_b])
+    cat_valid = np.concatenate([delta.valid, valid_b])
+    cat_cids = np.concatenate([delta.cids, cid_b])
+    new = ColumnDelta(rows=keys_sorted.astype(np.int64),
+                      values=cat_vals[sel], valid=cat_valid[sel],
+                      cids=cat_cids[sel], n_base=delta.n_base,
+                      n_entries=delta.n_entries + m)
+    _delta_append_cost(cost, on_pim, m, d_old, d_batch, new.n_overlay)
+    return new
+
+
+def _delta_append_cost(cost: CostLog | None, on_pim: bool, m: int,
+                       d_old: int, d_batch: int, d_new: int) -> None:
+    """Cost events for one overlay append, priced as the hardware delta
+    plane maintains it: collapse the batch to per-row state (sorter),
+    write the collapsed run into the overlay's run list (copy unit), and
+    the amortized run-list bookkeeping (merge unit — total merge work over
+    an overlay's lifetime is O(entries appended), charged incrementally
+    per batch). Crucially there is NO O(n) re-encode term and NO O(d_old)
+    overlay-rewrite term: appends stay O(batch), which is the whole
+    freshness win over `apply_updates`. The deferred work does not vanish
+    — every scan pays the base+overlay merge (engine's correction pass)
+    and the full fold into the base is paid at compaction, so the model
+    stays honest about where the delta plane moves the cycles."""
+    if cost is None or m == 0:
+        return
+    cost.annotate_add(n_applied=int(m))
+    if on_pim:
+        cost.add(phase="apply", island="ana", resource="sorter", items=m)
+        cost.add(phase="apply", island="ana", resource="merge",
+                 items=d_batch, bytes_local=d_batch * DELTA_ENTRY_BYTES)
+        cost.add(phase="apply", island="ana", resource="copy",
+                 bytes_local=2 * d_batch * DELTA_ENTRY_BYTES)
+    else:
+        cost.add(
+            phase="apply", island="txn", resource="cpu",
+            cycles=m * np.log2(max(m, 2)) * CPU_CYCLES_PER_CMP
+            + m * CPU_CYCLES_PER_SCAN_ITEM
+            + m * CPU_CYCLES_PER_LOOKUP,
+            bytes_offchip=2 * d_batch * DELTA_ENTRY_BYTES,
+        )
+
+
+def compaction_entries(delta: ColumnDelta, col_id: int = 0) -> np.ndarray:
+    """Synthesize the update batch that folds an overlay into the base.
+
+    One write per overlay row (every row carries a defined value — see
+    `ColumnDelta.values` — so a deleted row's last value lands in the base
+    codes exactly as the eager path would have left it) plus a delete for
+    each invalid row, all stamped with the overlay's stored commit ids and
+    sorted back into commit order. Feeding this through the standard
+    `apply_updates` family reproduces the eager end state bit-for-bit,
+    modulo a possibly SMALLER dictionary (the eager path keeps overwritten
+    values in its dictionary; both dictionaries are sorted supersets of
+    the live values, so every code range maps to the same value range and
+    answers are unchanged).
+    """
+    d = delta.n_overlay
+    writes = np.zeros(d, dtype=UPDATE_DTYPE)
+    writes["commit_id"] = delta.cids
+    writes["op"] = 1
+    writes["value"] = delta.values
+    writes["row"] = delta.rows
+    writes["col"] = col_id
+    invalid = ~delta.valid
+    dels = np.zeros(int(invalid.sum()), dtype=UPDATE_DTYPE)
+    dels["commit_id"] = delta.cids[invalid]
+    dels["op"] = 3
+    dels["value"] = delta.values[invalid]
+    dels["row"] = delta.rows[invalid]
+    dels["col"] = col_id
+    cat = np.concatenate([writes, dels])
+    # stable: a row's delete sorts after its equal-cid write, reproducing
+    # the eager writes-then-deletes batch order
+    return cat[np.argsort(cat["commit_id"], kind="stable")]

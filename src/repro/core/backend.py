@@ -59,7 +59,7 @@ from repro.distributed import island_mesh, place_shard_arrays
 from repro.kernels.bitonic_sort import sort_1024, sort_rows
 from repro.kernels.dict_ops import (scan_filter_agg, scan_filter_agg_batch,
                                     scan_filter_agg_mesh,
-                                    scan_filter_agg_sharded)
+                                    scan_filter_agg_sharded, scan_values_agg)
 from repro.kernels.hash_probe import (EMPTY_KEY, build_table, probe,
                                       probe_sharded, scan_filter_agg_join,
                                       scan_filter_agg_join_mesh,
@@ -81,7 +81,7 @@ KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch",
                        "scan_filter_agg_join_mesh", "probe",
                        "probe_sharded", "build_table", "merge_sorted_runs",
                        "merge_sorted_pairs", "sort_1024", "sort_rows",
-                       "snapshot_copy")
+                       "snapshot_copy", "scan_values_agg")
 
 
 @contextlib.contextmanager
@@ -163,11 +163,18 @@ class ExecutionBackend(abc.ABC):
 
     def filter_agg_join_batch(self, fcol: EncodedColumn, acol: EncodedColumn,
                               jcol: EncodedColumn,
-                              bounds: Sequence[tuple[int, int]]
+                              bounds: Sequence[tuple[int, int]],
+                              rcount: np.ndarray | None = None
                               ) -> list[tuple[int, int, int]]:
         """Fused join-query group: for every (lo, hi) predicate return the
         exact ``(sum, count, self_join_count)`` triple, where the join count
         is ``|jcol JOIN jcol|`` restricted to the predicate's row mask.
+
+        ``rcount`` overrides the build-side per-code occurrence histogram
+        (the delta-merged read passes the overlay-corrected histogram; the
+        probe side is corrected separately in the engine). The identity
+        ``hash_join_count(j, j, mask) == sum(rcount[jcodes[mask & jvalid]])``
+        makes the override exact.
 
         This default is the original per-query host path (mask-producing
         scan + dictionary-level hash join), kept as the reference; the
@@ -175,10 +182,32 @@ class ExecutionBackend(abc.ABC):
         group (the join reduces to a second exact scan against the build
         side's occurrence histogram — see kernels/hash_probe)."""
         out = []
+        rc = None if rcount is None else np.asarray(rcount, dtype=np.int64)
         for lo, hi in bounds:
             s, c, mask = self.filter_agg_mask(fcol, acol, lo, hi)
-            j = self.hash_join_count(jcol, jcol, left_mask=mask)
+            if rc is None:
+                j = self.hash_join_count(jcol, jcol, left_mask=mask)
+            else:
+                keep = mask & np.asarray(jcol.valid)
+                j = int(rc[np.asarray(jcol.codes)[keep]].sum())
             out.append((s, c, j))
+        return out
+
+    def filter_agg_values_batch(self, fvals, avals, valid,
+                                bounds: Sequence[tuple[int, int]]
+                                ) -> list[tuple[int, int]]:
+        """Fused multi-query scan over RAW (decoded) rows — the delta-store
+        correction pass. bounds are INCLUSIVE value ranges (the overlay
+        carries values, so there is no dictionary to push predicates into);
+        returns exact [(sum, count), ...]. This default is the numpy
+        reference; PallasBackend dispatches the split-accumulator kernel."""
+        fvals = np.asarray(fvals)
+        valid = np.asarray(valid) != 0
+        avals = np.asarray(avals, dtype=np.int64)
+        out = []
+        for lo, hi in bounds:
+            mask = (fvals >= lo) & (fvals <= hi) & valid
+            out.append((int(avals[mask].sum()), int(mask.sum())))
         return out
 
     def scan_view(self, fview: ShardedView, aview: ShardedView,
@@ -213,16 +242,18 @@ class ExecutionBackend(abc.ABC):
 
     def scan_view_join(self, fview: ShardedView, aview: ShardedView,
                        jview: ShardedView,
-                       code_bounds: Sequence[tuple[int, int]]
+                       code_bounds: Sequence[tuple[int, int]],
+                       rcount: np.ndarray | None = None
                        ) -> list[list[tuple[int, int, int]]]:
         """Every island's fused join-group scan over resident shards.
 
         Like `scan_view` but each predicate also yields the island's partial
         self-join count: its resident probe-side rows against the GLOBAL
         build-side histogram (``jview.dict_counts()`` — the replicated
-        dictionary's occurrence counts over ALL islands), so the cross-shard
-        reduction is a plain exact sum. This default is the serial per-shard
-        numpy reference; PallasBackend overrides it with ONE batched launch.
+        dictionary's occurrence counts over ALL islands, overridable via
+        ``rcount`` for the delta-merged read), so the cross-shard reduction
+        is a plain exact sum. This default is the serial per-shard numpy
+        reference; PallasBackend overrides it with ONE batched launch.
         """
         fview.require_fresh()
         aview.require_fresh()
@@ -233,7 +264,8 @@ class ExecutionBackend(abc.ABC):
         adict = np.asarray(aview.dictionary, dtype=np.int64)
         jcodes = np.asarray(jview.codes)
         jvalid = np.asarray(jview.valid)
-        rcount = jview.dict_counts()
+        rcount = (jview.dict_counts() if rcount is None
+                  else np.asarray(rcount, dtype=np.int64))
         out = []
         for s, size in enumerate(fview.sizes):
             fc, va, ac = fcodes[s, :size], fvalid[s, :size], acodes[s, :size]
@@ -446,29 +478,40 @@ class PallasBackend(NumpyBackend):
         return scan_filter_agg_sharded(fview.codes, aview.codes, fview.valid,
                                        aview.dictionary, code_bounds)
 
-    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds, rcount=None):
         # the whole join group in ONE fused device call: the self-join is a
         # second exact scan with the build side's occurrence histogram as
         # the dictionary (counts <= n_rows keep it int32-exact); the host
         # contributes only the build-side bincount, once per group.
         code_bounds = [self.code_range(fcol, lo, hi) for lo, hi in bounds]
-        rcount = np.bincount(np.asarray(jcol.codes)[np.asarray(jcol.valid)],
-                             minlength=jcol.dict_size).astype(np.int32)
+        if rcount is None:
+            rcount = np.bincount(
+                np.asarray(jcol.codes)[np.asarray(jcol.valid)],
+                minlength=jcol.dict_size)
+        rcount = np.asarray(rcount).astype(np.int32)
         return scan_filter_agg_join(fcol.codes, acol.codes, jcol.codes,
                                     fcol.valid, jcol.valid, acol.dictionary,
                                     rcount, code_bounds)
 
-    def scan_view_join(self, fview, aview, jview, code_bounds):
+    def scan_view_join(self, fview, aview, jview, code_bounds, rcount=None):
         # every island's join group in the same single launch; the build
-        # side is the view's cached global histogram (dict_counts), so the
-        # per-island partial join counts sum exactly across shards
+        # side is the view's cached global histogram (dict_counts, or the
+        # delta-corrected override), so the per-island partial join counts
+        # sum exactly across shards
         fview.require_fresh()
         aview.require_fresh()
         jview.require_fresh()
-        rcount = jview.dict_counts().astype(np.int32)
+        rcount = (jview.dict_counts() if rcount is None
+                  else np.asarray(rcount)).astype(np.int32)
         return scan_filter_agg_join_sharded(
             fview.codes, aview.codes, jview.codes, fview.valid, jview.valid,
             aview.dictionary, rcount, code_bounds)
+
+    def filter_agg_values_batch(self, fvals, avals, valid, bounds):
+        # raw-value correction scan on the same split-accumulator machinery
+        # (kernels/dict_ops.scan_values_agg) — the overlay is flat host
+        # data, small relative to the base column, one launch per call
+        return scan_values_agg(fvals, avals, valid, bounds)
 
     def _join_match(self, lv, rv, lcount, rcount):
         if (len(rv) == 0 or len(lv) == 0
@@ -737,17 +780,24 @@ class ShardedBackend(ExecutionBackend):
                  reduce_partials("count", [p[q][1] for p in per_shard]))
                 for q in range(len(bounds))]
 
-    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds, rcount=None):
         # one scan_view_join covers every island's aggregate AND join scans;
         # the per-island (sum, count, join) partials all reduce as exact sums
         fv, av, jv = self._as_view(fcol), self._as_view(acol), \
             self._as_view(jcol)
         code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
-        per_shard = self.inner.scan_view_join(fv, av, jv, code_bounds)
+        per_shard = self.inner.scan_view_join(fv, av, jv, code_bounds,
+                                              rcount=rcount)
         return [(reduce_partials("sum", [p[q][0] for p in per_shard]),
                  reduce_partials("count", [p[q][1] for p in per_shard]),
                  reduce_partials("sum", [p[q][2] for p in per_shard]))
                 for q in range(len(bounds))]
+
+    def filter_agg_values_batch(self, fvals, avals, valid, bounds):
+        # the correction scan runs over the flat overlay union, which is not
+        # row-partitioned across islands (overlays are tiny relative to the
+        # base shards) — delegate to the inner backend's single launch
+        return self.inner.filter_agg_values_batch(fvals, avals, valid, bounds)
 
     def hash_join_count(self, left, right, left_mask=None):
         # Each island histograms only its own resident probe-side shard;
@@ -907,15 +957,17 @@ class MeshBackend(ShardedBackend):
                                for i, size in enumerate(fv.sizes)])
         return s, c, mask
 
-    def filter_agg_join_batch(self, fcol, acol, jcol, bounds):
+    def filter_agg_join_batch(self, fcol, acol, jcol, bounds, rcount=None):
         # the whole join group in the same single shard_map launch; the
         # build side stays the view's cached GLOBAL histogram (replicated
-        # to every island, like the dictionary), so the on-mesh psum of
-        # the per-island partial join counts is the exact total
+        # to every island, like the dictionary, or the delta-corrected
+        # override), so the on-mesh psum of the per-island partial join
+        # counts is the exact total
         fv, av, jv = self._as_view(fcol), self._as_view(acol), \
             self._as_view(jcol)
         code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
-        rcount = jv.dict_counts().astype(np.int32)
+        rcount = (jv.dict_counts() if rcount is None
+                  else np.asarray(rcount)).astype(np.int32)
         return scan_filter_agg_join_mesh(fv.codes, av.codes, jv.codes,
                                          fv.valid, jv.valid, av.dictionary,
                                          rcount, code_bounds, self.mesh)

@@ -61,12 +61,19 @@ class SnapshotChain:
         return self.versions[-1] if self.versions else None
 
     def gc(self) -> int:
-        """Drop versions with no readers, keeping the chain head. Returns #freed."""
-        keep = self.versions[-1:] if self.versions else []
+        """Drop versions with no readers, keeping the chain head. Returns #freed.
+
+        Ordering: the head survives unconditionally (it is the share target
+        for the next query), every older version survives only while
+        pinned, and the kept versions are re-sorted by version id so the
+        chain stays oldest-to-newest — `head` must remain the most recent
+        snapshot regardless of the order readers finished in.
+        """
+        keep = self.versions[-1:]
         freed = 0
         for v in self.versions[:-1]:
             if v.readers > 0:
-                keep.insert(-1 if keep else 0, v)
+                keep.append(v)
             else:
                 freed += 1
                 v.drop_view(f"snapshot {v.version_id} of column "

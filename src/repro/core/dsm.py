@@ -105,6 +105,55 @@ def value_range_to_code_range(col: EncodedColumn, lo: int, hi: int):
 
 
 # ---------------------------------------------------------------------------
+# Delta store: sorted per-column overlay of not-yet-compacted updates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ColumnDelta:
+    """Sorted row-keyed overlay of updates not yet folded into the base.
+
+    The delta-store update plane appends shipped updates here instead of
+    rebuilding the column (no dictionary merge, no full re-encode); scans
+    merge base + overlay on the fly and a background compaction folds the
+    overlay into the base column once `n_entries` crosses the capacity
+    threshold. One entry per touched row (last-writer-wins within and
+    across batches):
+
+    rows:      (d,) int64 sorted unique row ids, all < n_base
+    values:    (d,) int32 the row's current raw value — the last written
+               value, or the base value carried over for delete-only rows
+               (deletes keep the row's value, matching the eager path's
+               code retention; aggregates still read it when f-selected)
+    valid:     (d,) bool  row validity after the overlayed ops
+    cids:      (d,) int64 latest commit id touching the row (compaction
+               replays entries in this order)
+    n_base:    base-column row count the overlay is relative to
+    n_entries: RAW appended entry count since the last compaction — the
+               capacity trigger (overlay rows dedupe, work done doesn't)
+    """
+
+    rows: np.ndarray
+    values: np.ndarray
+    valid: np.ndarray
+    cids: np.ndarray
+    n_base: int
+    n_entries: int = 0
+
+    @property
+    def n_overlay(self) -> int:
+        return int(self.rows.shape[0])
+
+
+def empty_delta(col: EncodedColumn) -> ColumnDelta:
+    """Fresh (empty) overlay relative to `col`'s current row count."""
+    return ColumnDelta(rows=np.empty(0, dtype=np.int64),
+                       values=np.empty(0, dtype=np.int32),
+                       valid=np.empty(0, dtype=bool),
+                       cids=np.empty(0, dtype=np.int64),
+                       n_base=col.n_rows, n_entries=0)
+
+
+# ---------------------------------------------------------------------------
 # Row-wise sharding (§4's multiple analytical islands, one DSM shard each)
 # ---------------------------------------------------------------------------
 

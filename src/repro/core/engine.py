@@ -23,7 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro.core.backend import get_backend
-from repro.core.dsm import DSMReplica, EncodedColumn
+from repro.core.dsm import ColumnDelta, DSMReplica, EncodedColumn
 from repro.core.hwmodel import CostLog
 from repro.core.placement import Placement
 from repro.core.schema import VALUE_BYTES
@@ -176,6 +176,160 @@ def group_queries(queries: list[Query]) -> list[list[Query]]:
     return list(groups.values())
 
 
+def _live_delta(deltas, col_id) -> ColumnDelta | None:
+    """The column's overlay, or None when absent/empty (no correction)."""
+    if deltas is None or col_id is None:
+        return None
+    d = deltas.get(col_id)
+    return d if d is not None and d.n_overlay else None
+
+
+def _union_rows(*ds: ColumnDelta | None) -> np.ndarray | None:
+    """Sorted union of the overlays' touched rows (None when all empty)."""
+    parts = [d.rows for d in ds if d is not None and d.n_overlay]
+    if not parts:
+        return None
+    return parts[0] if len(parts) == 1 else np.unique(np.concatenate(parts))
+
+
+def _row_state(col: EncodedColumn, rows: np.ndarray):
+    """Base-column (value, valid) state of the given rows."""
+    codes = np.asarray(col.codes)[rows]
+    vals = np.asarray(col.dictionary)[codes].astype(np.int32)
+    return vals, np.asarray(col.valid)[rows]
+
+
+def _overlayed(vals, valid, delta: ColumnDelta | None, rows):
+    """Effective (value, valid) state: base overridden where overlayed."""
+    if delta is None or delta.n_overlay == 0:
+        return vals, valid
+    idx = np.searchsorted(delta.rows, rows)
+    idxc = np.minimum(idx, delta.n_overlay - 1)
+    hit = delta.rows[idxc] == rows
+    return (np.where(hit, delta.values[idxc], vals).astype(np.int32),
+            np.where(hit, delta.valid[idxc], valid))
+
+
+def _agg_correction(be, bf, ba, df, da, bounds):
+    """Exact per-bound (Δsum, Δcount) the overlays contribute to a fused
+    filter+aggregate scan over the base. Only rows touched by the filter or
+    aggregate overlay can change; for those rows the effective contribution
+    replaces the base contribution, so the correction is the difference of
+    two raw-value scans (filter_agg_values_batch) over the touched-row
+    union — everything else cancels exactly in integer arithmetic. The
+    aggregate reads a row's value regardless of the aggregate column's own
+    validity (matching the eager scan), hence valid=True on the agg side.
+    """
+    rows = _union_rows(df, da)
+    if rows is None:
+        return None
+    fv_b, fvalid_b = _row_state(bf, rows)
+    av_b = np.asarray(ba.dictionary)[
+        np.asarray(ba.codes)[rows]].astype(np.int32)
+    fv_e, fvalid_e = _overlayed(fv_b, fvalid_b, df, rows)
+    av_e, _ = _overlayed(av_b, np.ones(len(rows), bool), da, rows)
+    eff = be.filter_agg_values_batch(fv_e, av_e, fvalid_e, bounds)
+    base = be.filter_agg_values_batch(fv_b, av_b, fvalid_b, bounds)
+    return ([e[0] - b[0] for e, b in zip(eff, base)],
+            [e[1] - b[1] for e, b in zip(eff, base)], len(rows))
+
+
+def _join_eff_histogram(bj: EncodedColumn, dj: ColumnDelta | None):
+    """(rcount_eff, c_eff): the delta-merged self-join build side.
+
+    rcount_eff[c] is the EFFECTIVE occurrence count of base dictionary
+    value c — the base histogram adjusted by the join overlay's removals
+    (overlay rows' base contributions) and additions (overlay rows' valid
+    effective values). Nonnegative by construction (a true histogram), so
+    it is safe as the int32 kernel rcount override. `c_eff(vals)` evaluates
+    the same effective histogram at arbitrary raw values, including values
+    absent from the base dictionary (freshly written ones).
+    """
+    jdict = np.asarray(bj.dictionary)
+    jcodes = np.asarray(bj.codes)
+    jvalid = np.asarray(bj.valid)
+    bc = np.bincount(jcodes[jvalid], minlength=bj.dict_size).astype(np.int64)
+    if dj is None or dj.n_overlay == 0:
+        dvals = np.empty(0, dtype=np.int64)
+        dcnt = np.empty(0, dtype=np.int64)
+        rc = bc
+    else:
+        rows = dj.rows
+        base_codes_d = jcodes[rows]
+        rem = jdict[base_codes_d[jvalid[rows]]].astype(np.int64)
+        add = dj.values[dj.valid].astype(np.int64)
+        allv = np.concatenate([rem, add])
+        sign = np.concatenate([np.full(len(rem), -1, dtype=np.int64),
+                               np.ones(len(add), dtype=np.int64)])
+        dvals, inv = np.unique(allv, return_inverse=True)
+        dcnt = np.zeros(len(dvals), dtype=np.int64)
+        np.add.at(dcnt, inv, sign)
+        rc = bc.copy()
+        di = np.searchsorted(jdict, dvals)
+        dic = np.minimum(di, max(len(jdict) - 1, 0))
+        hit = (jdict[dic] == dvals) if len(jdict) else np.zeros(len(dvals),
+                                                               bool)
+        np.add.at(rc, dic[hit], dcnt[hit])
+
+    def c_eff(vals):
+        vals = np.asarray(vals, dtype=np.int64)
+        if len(jdict):
+            i = np.searchsorted(jdict, vals)
+            ic = np.minimum(i, len(jdict) - 1)
+            out = np.where(jdict[ic] == vals, bc[ic], 0)
+        else:
+            out = np.zeros(len(vals), dtype=np.int64)
+        if len(dvals):
+            k = np.searchsorted(dvals, vals)
+            kc = np.minimum(k, len(dvals) - 1)
+            out = out + np.where(dvals[kc] == vals, dcnt[kc], 0)
+        return out
+
+    return rc, c_eff
+
+
+def _join_correction(be, bf, bj, df, dj, c_eff, bounds):
+    """Exact per-bound Δ of the self-join term. The fused base scan (with
+    the rcount_eff override) already counts every BASE-state probe row
+    against the effective build side; rows whose filter or join state the
+    overlays changed are swapped out by subtracting their base-state
+    contribution and adding their effective-state contribution — two
+    weighted raw-value scans over the touched-row union, weights =
+    effective build-side counts of each row's join value."""
+    rows = _union_rows(df, dj)
+    if rows is None:
+        return None
+    fv_b, fvalid_b = _row_state(bf, rows)
+    jv_b, jvalid_b = _row_state(bj, rows)
+    fv_e, fvalid_e = _overlayed(fv_b, fvalid_b, df, rows)
+    jv_e, jvalid_e = _overlayed(jv_b, jvalid_b, dj, rows)
+    w_b = np.where(jvalid_b, c_eff(jv_b), 0).astype(np.int32)
+    w_e = np.where(jvalid_e, c_eff(jv_e), 0).astype(np.int32)
+    add = be.filter_agg_values_batch(fv_e, w_e, fvalid_e, bounds)
+    sub = be.filter_agg_values_batch(fv_b, w_b, fvalid_b, bounds)
+    return [a[0] - s[0] for a, s in zip(add, sub)], len(rows)
+
+
+def _correction_cost(cost: CostLog | None, on_pim: bool,
+                     n_rows_scanned: int, n_rows_touched: int) -> None:
+    """Correction-pass traffic: the overlay unions are tiny relative to the
+    base column, so this prices a few short raw-value scans (value + weight
+    + validity per row), not another column pass. Memory traffic is per
+    TOUCHED row (the gathered row state is fetched once and stays cache/
+    scratchpad resident across the group's short scans); compute cycles are
+    per scanned row."""
+    if cost is None or n_rows_scanned == 0:
+        return
+    if on_pim:
+        cost.add(phase="ana", island="ana", resource="pim",
+                 cycles=n_rows_scanned * PIM_CYCLES_PER_ROW,
+                 bytes_local=n_rows_touched * 12.0)
+    else:
+        cost.add(phase="ana", island="ana", resource="cpu",
+                 cycles=n_rows_scanned * CPU_CYCLES_PER_ROW * 2.0,
+                 bytes_offchip=n_rows_touched * 12.0 * ANA_MISS_FRACTION)
+
+
 def run_query_group_dsm(
     view: dict[int, EncodedColumn],
     queries: list[Query],
@@ -184,6 +338,8 @@ def run_query_group_dsm(
     on_pim: bool = True,
     backend=None,
     n_shards: int | None = None,
+    deltas: dict[int, ColumnDelta] | None = None,
+    base_cols: dict[int, EncodedColumn] | None = None,
 ) -> list[int]:
     """Execute a same-column-set query group as one fused multi-query scan.
 
@@ -194,6 +350,16 @@ def run_query_group_dsm(
     over its own DSM shard and the partial aggregates reduce exactly. Cost
     events stay per-query, so modeled throughput matches unbatched
     execution.
+
+    ``deltas`` enables the delta-merged read: the fused base scan runs
+    unchanged over the pinned snapshot, then exact overlay corrections are
+    added — an aggregate correction over the filter/agg overlays' touched
+    rows and, for join groups, an effective build-side histogram override
+    plus a weighted probe-row correction (see the `_agg_correction` /
+    `_join_correction` algebra). ``base_cols`` must then map the involved
+    columns to the base EncodedColumns the overlays are relative to (the
+    pinned snapshot shares state with them — appends never dirty snapshot
+    chains). Answers are bit-identical to eagerly applying the overlays.
     """
     if not queries:
         return []
@@ -206,15 +372,57 @@ def run_query_group_dsm(
     # per-query mask/bincount host glue now runs inside the backend)
     no_join = [q for q in queries if q.join_col is None]
     joins = [q for q in queries if q.join_col is not None]
+    df = _live_delta(deltas, q0.filter_col)
+    da = _live_delta(deltas, q0.agg_col)
+    dj = _live_delta(deltas, q0.join_col)
+    if (df or da or dj) and base_cols is None:
+        raise ValueError("delta-merged reads need base_cols (the columns "
+                         "the overlays are relative to)")
+    corr_rows = corr_touched = corr_calls = 0
     answers: dict[int, tuple] = {}
     if no_join:
-        fused = be.filter_agg_batch(fcol, acol,
-                                    [(q.lo, q.hi) for q in no_join])
+        bounds = [(q.lo, q.hi) for q in no_join]
+        fused = be.filter_agg_batch(fcol, acol, bounds)
+        corr = _agg_correction(be, base_cols[q0.filter_col],
+                               base_cols[q0.agg_col], df, da,
+                               bounds) if (df or da) else None
+        if corr is not None:
+            ds, dc, nr = corr
+            fused = [(s + ds[i], c + dc[i])
+                     for i, (s, c) in enumerate(fused)]
+            corr_rows += 2 * nr
+            corr_touched += nr
+            corr_calls += 2
         for q, sc in zip(no_join, fused):
             answers[id(q)] = sc
     if joins:
-        fused_j = be.filter_agg_join_batch(fcol, acol, view[joins[0].join_col],
-                                           [(q.lo, q.hi) for q in joins])
+        bounds = [(q.lo, q.hi) for q in joins]
+        jcol_v = view[q0.join_col]
+        if df or da or dj:
+            bf, ba = base_cols[q0.filter_col], base_cols[q0.agg_col]
+            bj = base_cols[q0.join_col]
+            rc, c_eff = _join_eff_histogram(bj, dj)
+            fused_j = be.filter_agg_join_batch(fcol, acol, jcol_v, bounds,
+                                               rcount=rc)
+            acorr = _agg_correction(be, bf, ba, df, da, bounds)
+            ds = dc = None
+            if acorr is not None:
+                ds, dc, nr = acorr
+                corr_rows += 2 * nr
+                corr_touched += nr
+                corr_calls += 2
+            jcorr = _join_correction(be, bf, bj, df, dj, c_eff, bounds)
+            dj_sums = None
+            if jcorr is not None:
+                dj_sums, nr = jcorr
+                corr_rows += 2 * nr
+                corr_touched += nr
+                corr_calls += 2
+            fused_j = [(s + (ds[i] if ds else 0), c + (dc[i] if dc else 0),
+                        j + (dj_sums[i] if dj_sums else 0))
+                       for i, (s, c, j) in enumerate(fused_j)]
+        else:
+            fused_j = be.filter_agg_join_batch(fcol, acol, jcol_v, bounds)
         for q, scj in zip(joins, fused_j):
             answers[id(q)] = scj
     out = []
@@ -231,10 +439,13 @@ def run_query_group_dsm(
         out.append(result)
     if cost is not None:
         # launch amortization: one fused launch answers every join-free
-        # predicate in the group (for all islands at once), and one fused
-        # scan+join launch answers every join predicate
+        # predicate in the group (for all islands at once), one fused
+        # scan+join launch answers every join predicate, and each delta
+        # correction pass adds its own (short) launches
         _launch_cost(cost, on_pim,
-                     (1 if no_join else 0) + (1 if joins else 0))
+                     (1 if no_join else 0) + (1 if joins else 0)
+                     + corr_calls)
+        _correction_cost(cost, on_pim, corr_rows, corr_touched)
     return out
 
 

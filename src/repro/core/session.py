@@ -37,17 +37,19 @@ mid-round — something the closed batch API could not express.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Callable
 
 import numpy as np
 
 from repro.core import engine
-from repro.core.application import (apply_updates, apply_updates_naive,
-                                    apply_updates_shards,
-                                    precompute_apply_stages)
+from repro.core.application import (apply_updates, apply_updates_delta,
+                                    apply_updates_naive,
+                                    apply_updates_shards, compaction_entries,
+                                    delta_eligible, precompute_apply_stages)
 from repro.core.backend import ExecutionBackend, get_backend
 from repro.core.consistency import ConsistencyManager
-from repro.core.dsm import DSMReplica
+from repro.core.dsm import ColumnDelta, DSMReplica, empty_delta
 from repro.core.hwmodel import (CostLog, HardwareParams, HB_PARAMS,
                                 HMC_PARAMS)
 from repro.core.mvcc import MVCCStore
@@ -61,6 +63,33 @@ from repro.core.timeline import resolve_timing
 # PIM-Only calibration: OLTP on in-order PIM cores pays extra cycles (no OoO
 # ILP for pointer-heavy txn code) even though more threads are available.
 PIM_TXN_CYCLE_FACTOR = 1.4
+
+# Delta-store compaction trigger: raw overlay entries appended to a column
+# before a background compaction folds the overlay into the base (§5.3's
+# capacity-triggered maintenance shape; the overlay stays small enough that
+# query-time base+overlay merges remain cheap).
+DELTA_CAPACITY_DEFAULT = 4096
+
+
+def _resolve_delta(spec: "SystemSpec") -> tuple[bool, int]:
+    """(enabled, capacity) for a spec, with env fallbacks.
+
+    ``delta_store=None`` defers to REPRO_DELTA (session default, like the
+    backend/shards/timing env knobs); the env knob is silently ignored for
+    non-MI kinds — only an *explicit* ``delta_store=True`` on those raises
+    (in ``SystemSpec.__post_init__``), so a REPRO_DELTA=1 tier-1 run can
+    still drive the single-instance baselines.
+    """
+    if spec.kind != "multi_instance":
+        return False, DELTA_CAPACITY_DEFAULT
+    enabled = spec.delta_store
+    if enabled is None:
+        enabled = os.environ.get("REPRO_DELTA", "") not in ("", "0")
+    cap = spec.delta_capacity
+    if cap is None:
+        cap = int(os.environ.get("REPRO_DELTA_CAPACITY",
+                                 DELTA_CAPACITY_DEFAULT))
+    return bool(enabled), int(cap)
 
 # System compositions a spec can name. "multi_instance" covers the MI
 # family (MI+SW / MI+SW+HB / PIM-Only / Polynesia — the placement flags
@@ -85,6 +114,14 @@ class SystemSpec:
     every island on one device, ``"mesh"`` lays one island per device of a
     jax mesh (see `core.backend.MeshBackend`); backend specs may carry it
     inline (``backend="pallas@4/mesh"``).
+
+    ``delta_store`` (MI family only) switches Phase 2 of update
+    propagation from the eager two-stage column rebuild to the delta
+    overlay plane: batches append to per-column sorted overlays, scans
+    merge base+overlay, and a background compaction folds overlays into
+    the base every ``delta_capacity`` appended entries. Answers are
+    bit-identical to the eager path; ``None`` defers to REPRO_DELTA /
+    REPRO_DELTA_CAPACITY.
     """
 
     name: str
@@ -106,11 +143,22 @@ class SystemSpec:
     placement: str | None = None
     timing: str | None = None
     async_propagation: bool = False
+    # -- delta-store update plane (multi_instance family) ------------------
+    # None defers to REPRO_DELTA / REPRO_DELTA_CAPACITY (session defaults)
+    delta_store: bool | None = None
+    delta_capacity: int | None = None
 
     def __post_init__(self):
         if self.kind not in KINDS:
             raise ValueError(f"unknown system kind {self.kind!r}; "
                              f"have {KINDS}")
+        if self.delta_store and self.kind != "multi_instance":
+            raise ValueError(
+                f"delta_store is a multiple-instance mechanism (there is "
+                f"no DSM replica to overlay); kind {self.kind!r} cannot "
+                f"enable it")
+        if self.delta_capacity is not None and self.delta_capacity <= 0:
+            raise ValueError("delta_capacity must be a positive entry count")
 
     def replace(self, **overrides) -> "SystemSpec":
         """A copy with fields overridden (specs are frozen)."""
@@ -269,12 +317,19 @@ class HTAPSession:
                                   placement=spec.placement)
         self.hw = hw
         self.islands = getattr(self.be, "n_shards", 1)
+        self._installed_mesh = False
+        self._prev_mesh = None
         if getattr(self.be, "placement", "stacked") == "mesh":
             # make the islands' device mesh the process-global context, so
             # ad-hoc get_backend("...@N/mesh") calls elsewhere in the
-            # process resolve onto the same devices
-            from repro.distributed import install_island_mesh
+            # process resolve onto the same devices; finish() restores the
+            # previous context, so a later session in the same process with
+            # a different island count never sees this session's stale mesh
+            from repro.distributed import (current_island_mesh,
+                                           install_island_mesh)
+            self._prev_mesh = current_island_mesh()
             install_island_mesh(self.be.mesh)
+            self._installed_mesh = True
         if kind == "multi_instance":
             self.store = RowStore(table)
             self.replica = DSMReplica.from_table(table)
@@ -287,6 +342,10 @@ class HTAPSession:
             self._vis_node: dict[int, str] = {}    # col -> last Phase-2 node
             self._round_prop: list[str] = []       # this round's apply nodes
             self._prev_round_prop: tuple[str, ...] = ()
+            self.delta_enabled, self.delta_capacity = _resolve_delta(spec)
+            self._deltas: dict[int, ColumnDelta] = {}  # col -> live overlay
+            self.delta_appends = 0
+            self.compactions = 0
         elif kind == "si_ss":
             self.store = RowStore(table)
             self.snap = SnapshotStore(table)
@@ -336,6 +395,17 @@ class HTAPSession:
         """Price the accumulated cost log -> RunResult (closes the session)."""
         self._check_open()
         self._finished = True
+        if self._installed_mesh:
+            # release the process-global mesh context installed in
+            # __init__: restore whatever was there before (another live
+            # session's mesh) or clear it, so a later session with a
+            # different island count resolves fresh devices
+            from repro.distributed import (clear_island_mesh,
+                                           install_island_mesh)
+            if self._prev_mesh is not None:
+                install_island_mesh(self._prev_mesh)
+            else:
+                clear_island_mesh()
         from repro.core import htap
         spec = self.spec
         stats: dict = {}
@@ -349,6 +419,11 @@ class HTAPSession:
                      "sharded_views": self.cons.views_built,
                      "views_shared": self.cons.views_shared,
                      "views_resident": self.cons.views_resident}
+            if self.delta_enabled:
+                stats["delta_appends"] = self.delta_appends
+                stats["compactions"] = self.compactions
+                stats["delta_live_entries"] = sum(
+                    d.n_overlay for d in self._deltas.values())
         elif spec.kind == "si_ss":
             stats = {"snapshots": self.snap.snapshots_taken}
         elif spec.kind == "si_mvcc":
@@ -434,51 +509,145 @@ class HTAPSession:
             limit=FINAL_LOG_CAPACITY if spec.propagation_on_pim else None)
         ship_node = f"r{self.round}:ship{self._ship_i}"
         self._ship_i += 1
-        ship_cost = None if spec.zero_cost_propagation else self.cost
         # in sync timing the batch waits for the txn execution that filled
         # it; async releases it at its last update's commit time
         sync_deps = (self._prev_txn,) if self._prev_txn else ()
         with self.cost.tagged(ship_node, "ship", round=self.round,
                               sync_deps=sync_deps):
-            buffers = ship_updates(logs, self.store.n_cols, ship_cost,
+            # the batch's commit-id span and size are annotated on the tag
+            # even when the Ideal baseline suppresses pricing — freshness
+            # and async release times are metadata, not cost
+            buffers = ship_updates(logs, self.store.n_cols, self.cost,
                                    on_pim=spec.propagation_on_pim,
-                                   backend=self.be)
+                                   backend=self.be,
+                                   price=not spec.zero_cost_propagation)
         # The whole batch's dictionary stages ride one sorter dispatch and
         # one merge dispatch (cost events stay per column below — tags are
-        # structural, and the cost model is analytic, not measured).
+        # structural, and the cost model is analytic, not measured). The
+        # delta plane skips the precompute: eligible batches never touch
+        # the dictionary, and the rare fallback stages its own merge.
         staged = (precompute_apply_stages(self.replica.columns, buffers,
                                           backend=self.be)
-                  if spec.optimized_application and len(buffers) > 1 else {})
+                  if spec.optimized_application and len(buffers) > 1
+                  and not self.delta_enabled else {})
+        app_cost = (None if (spec.shipping_only
+                             or spec.zero_cost_propagation)
+                    else self.cost)
         for col_id, entries in buffers.items():
-            old = self.replica.columns[col_id]
-            app_cost = (None if (spec.shipping_only
-                                 or spec.zero_cost_propagation)
-                        else self.cost)
-            apply_node = f"{ship_node}:c{col_id}"
+            if self.delta_enabled:
+                self._apply_column_delta(col_id, entries, ship_node,
+                                         app_cost)
+            else:
+                apply_node = f"{ship_node}:c{col_id}"
+                self._apply_column_eager(col_id, entries, apply_node,
+                                         app_cost, staged.get(col_id),
+                                         deps=(ship_node,))
+                self._vis_node[col_id] = apply_node
+                self._round_prop.append(apply_node)
+                self.applications += 1
+
+    def _apply_column_eager(self, col_id: int, entries: np.ndarray,
+                            node: str, app_cost, staged_col, deps,
+                            kind: str = "apply",
+                            phase: str = "apply") -> None:
+        """One column's batch through the standard two-stage apply (Phase-2
+        swap via the consistency manager). Also the compaction executor:
+        kind/phase "compact" reuses the exact same machinery, so the folded
+        base is bit-identical to what eager application would have built."""
+        spec = self.spec
+        old = self.replica.columns[col_id]
+        with self.cost.tagged(node, kind, round=self.round, deps=deps,
+                              col=col_id):
+            mesh = getattr(self.be, "placement", "stacked") == "mesh"
+            if spec.optimized_application and (self.islands > 1 or mesh):
+                # each island applies its own row range; the round
+                # becomes visible only as a complete shard set
+                # (all-or-none Phase-2 swap)
+                shards = apply_updates_shards(
+                    old, entries, app_cost,
+                    on_pim=spec.propagation_on_pim, backend=self.be,
+                    staged=staged_col, phase=phase)
+                self.cons.on_update_shards(col_id, shards)
+            elif spec.optimized_application:
+                self.cons.on_update(col_id, apply_updates(
+                    old, entries, app_cost,
+                    on_pim=spec.propagation_on_pim, backend=self.be,
+                    staged=staged_col, phase=phase))
+            else:
+                # the naive software baseline rebuilds a whole column
+                self.cons.on_update(col_id, apply_updates_naive(
+                    old, entries, app_cost, phase=phase))
+
+    def _apply_column_delta(self, col_id: int, entries: np.ndarray,
+                            ship_node: str, app_cost) -> None:
+        """Delta-plane Phase 2: append the batch to the column's overlay.
+
+        The append is O(batch + overlay) — the base column is untouched —
+        so the apply node the next round's transactions stall on is cheap:
+        that is the freshness/throughput win at high commit rates. When the
+        overlay's raw entry count crosses the capacity threshold, a
+        background compaction node (kind "compact", priced on the
+        analytical island's accelerators, so it overlaps analytics and
+        never joins the sync stall set) folds it into the base through the
+        standard apply path and resets the overlay.
+        """
+        old = self.replica.columns[col_id]
+        delta = self._deltas.get(col_id)
+        if delta is None or delta.n_base != old.n_rows:
+            delta = empty_delta(old)
+        apply_node = f"{ship_node}:c{col_id}"
+        if not delta_eligible(entries, old.n_rows):
+            # inserts / out-of-range writes resize the column, which the
+            # overlay algebra does not model: fold the overlay first
+            # (commit order), then eager-apply the batch
+            deps = (ship_node,)
+            if delta.n_overlay:
+                comp = self._compact_column(col_id, delta, deps=deps,
+                                            ship_node=ship_node)
+                deps = (ship_node, comp)
+            self._apply_column_eager(col_id, entries, apply_node, app_cost,
+                                     None, deps=deps)
+            self._deltas[col_id] = empty_delta(self.replica.columns[col_id])
+        else:
             with self.cost.tagged(apply_node, "apply", round=self.round,
                                   deps=(ship_node,), col=col_id):
-                mesh = getattr(self.be, "placement", "stacked") == "mesh"
-                if spec.optimized_application and (self.islands > 1 or mesh):
-                    # each island applies its own row range; the round
-                    # becomes visible only as a complete shard set
-                    # (all-or-none Phase-2 swap)
-                    shards = apply_updates_shards(
-                        old, entries, app_cost,
-                        on_pim=spec.propagation_on_pim, backend=self.be,
-                        staged=staged.get(col_id))
-                    self.cons.on_update_shards(col_id, shards)
-                elif spec.optimized_application:
-                    self.cons.on_update(col_id, apply_updates(
-                        old, entries, app_cost,
-                        on_pim=spec.propagation_on_pim, backend=self.be,
-                        staged=staged.get(col_id)))
-                else:
-                    # the naive software baseline rebuilds a whole column
-                    self.cons.on_update(col_id, apply_updates_naive(
-                        old, entries, app_cost))
-            self._vis_node[col_id] = apply_node
-            self._round_prop.append(apply_node)
-            self.applications += 1
+                delta = apply_updates_delta(
+                    old, delta, entries, app_cost,
+                    on_pim=self.spec.propagation_on_pim, backend=self.be)
+            self._deltas[col_id] = delta
+            self.delta_appends += 1
+        self._vis_node[col_id] = apply_node
+        self._round_prop.append(apply_node)
+        self.applications += 1
+        delta = self._deltas[col_id]
+        if delta.n_entries >= self.delta_capacity and delta.n_overlay:
+            self._compact_column(col_id, delta, deps=(apply_node,),
+                                 ship_node=ship_node)
+
+    def _compact_column(self, col_id: int, delta: ColumnDelta, deps,
+                        ship_node: str) -> str:
+        """Fold a column's overlay into its base (background compaction).
+
+        Synthesizes the overlay's write/delete entries (commit-id ordered)
+        and runs them through the standard two-stage apply, so the
+        compacted base goes through the usual Phase-2 snapshot-chain swap.
+        The node is deliberately NOT added to ``_round_prop``: compaction
+        is priced on the accel lane and overlaps analytics instead of
+        stalling the next round's transactions. Queries still wait for it
+        (``_vis_node``) — they read the compacted base.
+        """
+        spec = self.spec
+        app_cost = (None if (spec.shipping_only
+                             or spec.zero_cost_propagation)
+                    else self.cost)
+        node = f"{ship_node}:compact{col_id}"
+        entries = compaction_entries(delta, col_id)
+        self._apply_column_eager(col_id, entries, node, app_cost, None,
+                                 deps=deps, kind="compact", phase="compact")
+        self._deltas[col_id] = empty_delta(self.replica.columns[col_id])
+        self._vis_node[col_id] = node
+        self.compactions += 1
+        return node
 
     def flush_updates(self) -> None:
         """Ship and apply the entire pending update backlog now.
@@ -548,9 +717,15 @@ class HTAPSession:
                     [q.columns for q in group])
             with self.cost.tagged(f"r{self.round}:ana{g}", "ana",
                                   round=self.round, deps=(snap_node,)):
+                # delta plane: scans merge the pinned base with each
+                # column's live overlay (appends never dirty the snapshot
+                # chain, so the pinned base IS the overlay's base)
                 group_answers = engine.run_query_group_dsm(
                     view, group, self.cost, self.placement,
-                    on_pim=self.spec.analytics_on_pim, backend=self.be)
+                    on_pim=self.spec.analytics_on_pim, backend=self.be,
+                    deltas=self._deltas if self.delta_enabled else None,
+                    base_cols=(self.replica.columns
+                               if self.delta_enabled else None))
             for q, a in zip(group, group_answers):
                 batch_results[id(q)] = a
             for h in handles:

@@ -64,12 +64,19 @@ def ship_updates(
     cost: CostLog | None = None,
     on_pim: bool = True,
     backend=None,
+    price: bool = True,
 ) -> dict[int, np.ndarray]:
     """Run all three shipping stages; returns {col_id: commit-ordered entries}.
 
     Stage 1's k-way merge runs on the selected execution backend (the
     PallasBackend dispatches to kernels/merge_runs, the comparator-tree
     analog); stages 2-3 are host-side grouping either way.
+
+    ``price=False`` suppresses the CostEvents (the Ideal baselines' free
+    propagation) but still annotates the batch's timeline metadata — the
+    commit-id span and update count exist physically regardless of what
+    shipping costs, and the freshness metric / async release clock
+    (core/timeline.py) need them on every driver.
     """
     merged = get_backend(backend).merge_update_logs(per_thread_logs)
     n = len(merged)
@@ -94,6 +101,7 @@ def ship_updates(
         cost.annotate(n_updates=int(n),
                       cid_lo=int(merged["commit_id"][0]),
                       cid_hi=int(merged["commit_id"][-1]))
+    if cost is not None and n and price:
         log_bytes = n * LOG_ENTRY_BYTES
         if on_pim:
             # Merge unit streams entries from DRAM through FIFO queues.

@@ -140,14 +140,27 @@ class _CommitClock:
             self._spans.append((int(lo), int(hi), start, finish))
 
     def time_of(self, cid: int) -> float:
+        # Max over every span's contribution, where a span contributes its
+        # interpolated time for ids inside it, its finish for ids past it
+        # and nothing for ids before it. Each contribution is monotone in
+        # cid, so the max is monotone too — for ANY span list, including
+        # out-of-order or overlapping observations (chunked sessions can
+        # emit spans whose scheduled times interleave). Ids in inter-span
+        # gaps clamp to the enclosing boundary (the previous span's
+        # finish); ids before every span map to 0.0 (committed before the
+        # simulation started).
         t = 0.0
         for lo, hi, start, finish in self._spans:
             if cid < lo:
-                return max(t, start) if t == 0.0 else t
-            if cid <= hi:
+                continue
+            if cid >= hi:
+                # exact at the boundary: start + 1.0 * (finish - start) can
+                # land one ulp past `finish`, which would make the last id
+                # of a span later than the first id after it
+                t = max(t, finish)
+            else:
                 frac = (cid - lo + 1) / (hi - lo + 1)
-                return start + frac * (finish - start)
-            t = finish  # past this span: at least its end
+                t = max(t, start + frac * (finish - start))
         return t
 
 

@@ -1,4 +1,5 @@
 from repro.kernels.dict_ops.ops import (scan_filter_agg,
                                         scan_filter_agg_batch,
                                         scan_filter_agg_mesh,
-                                        scan_filter_agg_sharded)
+                                        scan_filter_agg_sharded,
+                                        scan_values_agg)

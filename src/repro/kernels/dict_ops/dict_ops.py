@@ -137,6 +137,60 @@ def scan_filter_agg_sharded_kernel(fcodes, acodes, valid, dictionary, bounds,
     )(fcodes, acodes, valid, dictionary, bounds)
 
 
+def _scan_values_kernel(fvals_ref, avals_ref, valid_ref, bounds_ref,
+                        lo_ref, hi_ref, cnt_ref, neg_ref):
+    """Raw-value correction scan: the delta-overlay pass of a merged read.
+
+    Same multi-query split-16-bit accumulation as `_scan_exact_kernel`, but
+    the filter column holds raw VALUES (overlay rows are decoded at append
+    time, so the dictionary pushdown does not apply) — bounds are therefore
+    INCLUSIVE value ranges — and the aggregate column is summed directly
+    with no dictionary take.
+    """
+    f = fvals_ref[...]                       # (block,)
+    a = avals_ref[...]
+    valid = valid_ref[...]
+    b = bounds_ref[...]                      # (Q, 2) inclusive value ranges
+    lo = b[:, 0][:, None]
+    hi = b[:, 1][:, None]
+    mask = (f[None, :] >= lo) & (f[None, :] <= hi) & (valid[None, :] != 0)
+    m = mask.astype(jnp.int32)               # (Q, block)
+    lo16 = (a & 0xFFFF)[None, :]
+    hi16 = ((a >> 16) & 0xFFFF)[None, :]
+    lo_ref[...] = jnp.sum(m * lo16, axis=1, keepdims=True).T
+    hi_ref[...] = jnp.sum(m * hi16, axis=1, keepdims=True).T
+    cnt_ref[...] = jnp.sum(m, axis=1, keepdims=True).T
+    neg_ref[...] = jnp.sum(m * (a < 0)[None, :].astype(jnp.int32),
+                           axis=1, keepdims=True).T
+
+
+@functools.partial(instrumented_jit, static_argnames=("block", "interpret"))
+def scan_values_agg_exact_kernel(fvals, avals, valid, bounds,
+                                 block: int = 4096, interpret: bool = True):
+    """Per-block split-sum partials for Q raw-value queries; host-combined."""
+    (n,) = fvals.shape
+    assert n % block == 0
+    n_blocks = n // block
+    q = bounds.shape[0]
+    part = jax.ShapeDtypeStruct((n_blocks, q), jnp.int32)
+    return pl.pallas_call(
+        _scan_values_kernel,
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((q, 2), lambda i: (0, 0)),
+        ],
+        out_specs=(pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0)),
+                   pl.BlockSpec((1, q), lambda i: (i, 0))),
+        out_shape=(part, part, part, part),
+        interpret=interpret,
+    )(fvals, avals, valid, bounds)
+
+
 def _scan_kernel(fcodes_ref, acodes_ref, valid_ref, dict_ref, bounds_ref,
                  sum_ref, cnt_ref):
     @pl.when(pl.program_id(0) == 0)

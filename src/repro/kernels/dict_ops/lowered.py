@@ -67,6 +67,32 @@ def scan_exact_sharded_partials(fcodes, acodes, valid, dictionary, bounds,
             move(jnp.sum(m * neg, axis=3)))
 
 
+def scan_values_partials(fvals, avals, valid, bounds, block):
+    """Traceable body: raw-value correction-scan partials, (nb, Q).
+
+    Mirrors ``dict_ops._scan_values_kernel`` exactly: bounds are INCLUSIVE
+    value ranges and the aggregate sums `avals` directly (no dictionary
+    take) — the delta-overlay correction pass. Same split-16-bit int32
+    partials, each bounded by block * 0xFFFF < 2^31.
+    """
+    n = fvals.shape[0]
+    nb = n // block
+    f = fvals.reshape(nb, block)
+    a = avals.reshape(nb, block)
+    v = valid.reshape(nb, block)
+    lo = bounds[:, 0][:, None, None]
+    hi = bounds[:, 1][:, None, None]
+    mask = (f[None] >= lo) & (f[None] <= hi) & (v[None] != 0)
+    m = mask.astype(jnp.int32)                    # (Q, nb, block)
+    lo16 = (a & 0xFFFF)[None]
+    hi16 = ((a >> 16) & 0xFFFF)[None]
+    neg = (a < 0).astype(jnp.int32)[None]
+    return (jnp.sum(m * lo16, axis=2).T,          # (nb, Q) each
+            jnp.sum(m * hi16, axis=2).T,
+            jnp.sum(m, axis=2).T,
+            jnp.sum(m * neg, axis=2).T)
+
+
 def pad_rows_flat(fcodes, acodes, valid, block):
     """In-trace row padding to a block multiple (valid=0 scan identity;
     fcodes get int32.max so no code range matches). Traced shapes key on
@@ -109,6 +135,15 @@ def scan_exact_sharded_lowered(fcodes, acodes, valid, dictionary, bounds,
     fcodes, acodes, v = pad_rows_sharded(fcodes, acodes, valid, block)
     return scan_exact_sharded_partials(fcodes, acodes, v, dictionary,
                                        bounds, block)
+
+
+@functools.partial(instrumented_jit, static_argnames=("block",))
+def scan_values_lowered(fvals, avals, valid, bounds, block: int = 4096):
+    """Jitted raw-value correction scan; callers pre-pad rows to a block
+    multiple on the host (overlay sizes vary per query group, so pow2
+    bucketing happens there to bound the traced shapes)."""
+    return scan_values_partials(fvals, avals, valid.astype(jnp.int32),
+                                bounds, block)
 
 
 @functools.partial(instrumented_jit, static_argnames=("block",))

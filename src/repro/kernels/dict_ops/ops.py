@@ -29,15 +29,18 @@ from repro.kernels.common import (instrumented_jit, kernel_mode,
                                   lanes_to_int64, next_pow2, psum_split16)
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
                                              scan_filter_agg_kernel,
-                                             scan_filter_agg_sharded_kernel)
+                                             scan_filter_agg_sharded_kernel,
+                                             scan_values_agg_exact_kernel)
 from repro.kernels.dict_ops.lowered import (pad_rows_sharded,
                                             scan_exact_lowered,
                                             scan_exact_sharded_lowered,
                                             scan_exact_sharded_partials,
-                                            scan_float_lowered)
+                                            scan_float_lowered,
+                                            scan_values_lowered)
 from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
                                         scan_filter_agg_ref,
-                                        scan_filter_agg_sharded_ref)
+                                        scan_filter_agg_sharded_ref,
+                                        scan_values_agg_ref)
 
 _I32_MAX = np.iinfo(np.int32).max
 
@@ -206,6 +209,44 @@ def scan_filter_agg_sharded(fcodes, acodes, valid, dictionary, bounds,
     sums, counts = assemble_exact(lo16, hi16, cnt, neg, axis=1)
     return [[(int(sums[s, q]), int(counts[s, q])) for q in range(nq)]
             for s in range(n_shards)]
+
+
+def scan_values_agg(fvals, avals, valid, bounds, use_pallas: bool = True,
+                    block: int = 4096):
+    """One fused pass answering Q INCLUSIVE value-range queries over raw
+    (decoded) overlay rows — the delta-store correction scan.
+
+    fvals/avals: int32 raw values (no dictionary); valid: overlay validity.
+    Returns [(sum, count), ...] exact python ints. Overlay lengths vary per
+    query group, so rows are pow2-bucketed and padded HERE on the host
+    (valid=0 pad is the scan identity for any pad value of fvals/avals) —
+    keeping the traced shape count logarithmic in overlay size.
+    """
+    if not use_pallas:
+        return scan_values_agg_ref(fvals, avals, valid, bounds)
+    n = int(np.asarray(fvals).shape[0])
+    nq = len(bounds)
+    if n == 0 or nq == 0:
+        return [(0, 0) for _ in bounds]
+    block = min(block, next_pow2(n))
+    pad = (-n) % block
+    f = np.asarray(fvals, dtype=np.int32)
+    a = np.asarray(avals, dtype=np.int32)
+    v = np.asarray(valid).astype(np.int32)
+    if pad:
+        f = np.pad(f, (0, pad))
+        a = np.pad(a, (0, pad))
+        v = np.pad(v, (0, pad))
+    barr = pad_bounds_pow2(bounds)
+    mode = kernel_mode()
+    if mode == "lowered":
+        parts = scan_values_lowered(f, a, v, barr, block=block)
+    else:
+        parts = scan_values_agg_exact_kernel(
+            jnp.asarray(f), jnp.asarray(a), jnp.asarray(v),
+            jnp.asarray(barr), block=block, interpret=(mode == "interpret"))
+    sums, counts = assemble_exact(*parts, axis=0)
+    return [(int(s), int(c)) for s, c in zip(sums[:nq], counts[:nq])]
 
 
 # ---------------------------------------------------------------------------

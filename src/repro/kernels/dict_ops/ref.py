@@ -31,3 +31,22 @@ def scan_filter_agg_batch_ref(fcodes, acodes, valid, dictionary, bounds):
         mask = (fcodes >= code_lo) & (fcodes < code_hi) & valid
         out.append((int(vals[mask].sum()), int(mask.sum())))
     return out
+
+
+def scan_values_agg_ref(fvals, avals, valid, bounds):
+    """Exact int64 oracle for the raw-value correction scan (numpy).
+
+    Unlike the code-space scans above, bounds here are INCLUSIVE value
+    ranges (lo <= value <= hi) and the aggregate sums `avals` directly —
+    no dictionary decode. This is the delta-overlay correction pass: the
+    overlay stores raw values, so predicates cannot be pushed down to
+    codes.
+    """
+    fvals = np.asarray(fvals)
+    valid = np.asarray(valid) != 0
+    avals = np.asarray(avals, dtype=np.int64)
+    out = []
+    for lo, hi in bounds:
+        mask = (fvals >= lo) & (fvals <= hi) & valid
+        out.append((int(avals[mask].sum()), int(mask.sum())))
+    return out

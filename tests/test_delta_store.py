@@ -1,0 +1,269 @@
+"""Delta-store update plane (core/application.py + core/session.py).
+
+The load-bearing contract: switching Phase 2 of update propagation from
+the eager two-stage column rebuild to commit-ordered overlay appends with
+background compaction must not change a single query answer — for every
+MI preset, backend, island count and placement, at every compaction
+cadence. The sweep here pins that bit-identity, the capacity boundary
+(compaction fires at exactly ``n_entries >= delta_capacity``, never one
+entry earlier), the golden-answer checksum, and the spec guards.
+"""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import engine, htap, schema
+from repro.core.application import (apply_updates_delta, compaction_entries,
+                                    delta_eligible)
+from repro.core.session import HTAPSession, SystemSpec
+from repro.core.workload import split_queries, split_stream
+
+N_ROUNDS = 3
+MI_FAMILY = ("MI+SW", "MI+SW+HB", "PIM-Only", "Polynesia")
+GOLDEN_PATH = pathlib.Path(__file__).parent / "golden_answers.json"
+
+
+@pytest.fixture(scope="module")
+def tiny_workload():
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", 3, 32)
+    table = schema.gen_table(rng, sch, 600)
+    stream = schema.gen_update_stream(rng, sch, 600, 1500, write_ratio=0.5)
+    queries = engine.gen_queries(rng, 6, 3)
+    return table, stream, queries
+
+
+def _pair(name, table, stream, queries, **kw):
+    """Run the eager and delta planes on identical inputs."""
+    eager = htap.run(name, table, stream, queries, n_rounds=N_ROUNDS,
+                     delta_store=False, **kw)
+    delta = htap.run(name, table, stream, queries, n_rounds=N_ROUNDS,
+                     delta_store=True, **kw)
+    return eager, delta
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: every MI preset x backend x island count x placement
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["numpy", "pallas"])
+@pytest.mark.parametrize("name", MI_FAMILY)
+def test_delta_matches_eager_presets_backends(tiny_workload, name, backend):
+    table, stream, queries = tiny_workload
+    eager, delta = _pair(name, table, stream, queries, backend=backend)
+    assert delta.results == eager.results
+    assert delta.stats["delta_appends"] > 0
+    assert "delta_appends" not in eager.stats
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+def test_delta_matches_eager_sharded(tiny_workload, n_shards):
+    """Stacked placement: shard-resident apply path under the overlay."""
+    table, stream, queries = tiny_workload
+    eager, delta = _pair("Polynesia", table, stream, queries,
+                         backend="pallas", n_shards=n_shards)
+    assert delta.results == eager.results
+
+
+def test_delta_matches_eager_mesh(tiny_workload):
+    """Mesh placement on a single device (pallas@1/mesh is always legal)."""
+    table, stream, queries = tiny_workload
+    eager, delta = _pair("Polynesia", table, stream, queries,
+                         backend="pallas@1/mesh")
+    assert delta.results == eager.results
+    assert delta.stats["placement"] == "mesh"
+
+
+def test_delta_matches_eager_timeline(tiny_workload):
+    """Discrete-event timing must not perturb answers, and the delta run
+    must report freshness like any other timeline run."""
+    table, stream, queries = tiny_workload
+    eager, delta = _pair("Polynesia", table, stream, queries,
+                         timing="timeline")
+    assert delta.results == eager.results
+    assert delta.freshness_seconds and delta.freshness_seconds["mean"] > 0.0
+
+
+def test_delta_matches_golden_answers(small_workload):
+    """The delta plane answers the exact committed golden answers — a
+    systemic drift that moved eager and delta together would still trip
+    this pin (same role as test_golden_answers, delta plane edition)."""
+    table, stream, queries = small_workload
+    with open(GOLDEN_PATH) as f:
+        golden = json.load(f)["results"]["Polynesia"]
+    res = htap.run("Polynesia", table, stream, queries, delta_store=True)
+    assert [int(a) for a in res.results] == golden
+    # and the CI-bench checksum derived from those answers is unchanged
+    checksum = int(np.int64(sum(a % (1 << 31) for a in res.results)))
+    assert checksum == int(np.int64(sum(a % (1 << 31) for a in golden)))
+
+
+def test_property_delta_matches_eager_random_workloads():
+    """Hypothesis sweep: random write ratios, commit rates and compaction
+    cadences (delta_capacity down to 1 = compact on every append) on the
+    numpy reference. Answers must be bit-identical everywhere."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), write_pct=st.integers(10, 90),
+           n_txn=st.integers(200, 2000),
+           capacity=st.sampled_from([1, 7, 64, 4096]))
+    def prop(seed, write_pct, n_txn, capacity):
+        rng = np.random.default_rng(seed)
+        sch = schema.make_schema("t", 3, 32)
+        table = schema.gen_table(rng, sch, 500)
+        stream = schema.gen_update_stream(rng, sch, 500, n_txn,
+                                          write_ratio=write_pct / 100)
+        queries = engine.gen_queries(rng, 5, 3)
+        eager = htap.run("Polynesia", table, stream, queries,
+                         n_rounds=N_ROUNDS, backend="numpy")
+        delta = htap.run("Polynesia", table, stream, queries,
+                         n_rounds=N_ROUNDS, backend="numpy",
+                         delta_store=True, delta_capacity=capacity)
+        assert delta.results == eager.results
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# compaction-threshold boundary
+# ---------------------------------------------------------------------------
+
+def _drive_delta(table, stream, queries, **spec_kw):
+    spec = SystemSpec.polynesia(**spec_kw)
+    session = HTAPSession(spec, table)
+    for r, (txn_chunk, q_chunk) in enumerate(
+            zip(split_stream(stream, N_ROUNDS),
+                split_queries(queries, N_ROUNDS))):
+        if r:
+            session.advance_round()
+        session.execute(txn_chunk)
+        session.query_batch(q_chunk)
+    return session, session.finish()
+
+
+def test_compaction_capacity_boundary(tiny_workload):
+    """Compaction fires at exactly ``n_entries >= delta_capacity``. The
+    raw appended-entry count E per column is measured from an
+    unbounded-capacity run; capacity E must then fold the busiest column
+    (live overlay empty), capacity E+1 must not compact at all."""
+    table, stream, queries = tiny_workload
+    sess, res = _drive_delta(table, stream, queries, delta_store=True,
+                             delta_capacity=1 << 30)
+    assert res.stats["compactions"] == 0
+    raw = {c: d.n_entries for c, d in sess._deltas.items() if d.n_overlay}
+    assert raw, "workload must leave live overlay entries"
+    busiest, e = max(raw.items(), key=lambda kv: kv[1])
+    assert e > 1
+
+    at, res_at = _drive_delta(table, stream, queries, delta_store=True,
+                              delta_capacity=e)
+    assert res_at.stats["compactions"] >= 1
+    assert at._deltas[busiest].n_overlay == 0  # folded into base
+
+    over, res_over = _drive_delta(table, stream, queries, delta_store=True,
+                                  delta_capacity=e + 1)
+    assert res_over.stats["compactions"] == 0
+    assert over._deltas[busiest].n_entries == e
+    # and the boundary never costs correctness
+    assert res_at.results == res_over.results == res.results
+
+
+def test_compact_every_append_drains_overlay(tiny_workload):
+    """delta_capacity=1: every eligible append immediately folds, so the
+    session ends with zero live entries and answers still match eager."""
+    table, stream, queries = tiny_workload
+    eager, _ = _pair("Polynesia", table, stream, queries)
+    sess, res = _drive_delta(table, stream, queries, delta_store=True,
+                             delta_capacity=1)
+    assert res.results == eager.results
+    assert res.stats["compactions"] >= res.stats["delta_appends"] > 0
+    assert res.stats["delta_live_entries"] == 0
+
+
+def test_delta_stats_reported(tiny_workload):
+    table, stream, queries = tiny_workload
+    _, delta = _pair("Polynesia", table, stream, queries)
+    s = delta.stats
+    assert s["delta_appends"] > 0 and s["compactions"] >= 0
+    assert s["delta_live_entries"] >= 0
+
+
+# ---------------------------------------------------------------------------
+# unit level: eligibility + compaction algebra
+# ---------------------------------------------------------------------------
+
+def test_compaction_entries_fold_is_bit_exact():
+    """Appending a batch to the overlay and folding it back through the
+    standard apply path lands on the same decoded column as applying the
+    batch eagerly."""
+    from repro.core.application import apply_updates
+    from repro.core.dsm import empty_delta, encode_column
+    from repro.core.nsm import UPDATE_DTYPE
+
+    def decoded(col):
+        return np.asarray(col.dictionary)[np.asarray(col.codes)]
+
+    rng = np.random.default_rng(7)
+    for trial in range(5):
+        base = encode_column(rng.integers(0, 50, size=200).astype(np.int32))
+        m = int(rng.integers(5, 60))
+        entries = np.zeros(m, dtype=UPDATE_DTYPE)
+        entries["row"] = rng.integers(0, 200, size=m)
+        entries["value"] = rng.integers(0, 50, size=m)
+        entries["commit_id"] = np.arange(m)
+        entries["op"] = np.where(rng.random(m) < 0.15, 3, 1)
+        assert delta_eligible(entries, base.n_rows)
+
+        eager = apply_updates(base, entries)
+        delta = apply_updates_delta(base, empty_delta(base), entries)
+        folded = apply_updates(base, compaction_entries(delta, 0))
+        ev, fv = np.asarray(eager.valid), np.asarray(folded.valid)
+        np.testing.assert_array_equal(fv, ev)
+        np.testing.assert_array_equal(decoded(folded)[fv], decoded(eager)[ev])
+
+
+def test_delta_eligibility_rejects_inserts():
+    from repro.core.nsm import UPDATE_DTYPE
+    entries = np.zeros(3, dtype=UPDATE_DTYPE)
+    entries["op"] = 1
+    assert delta_eligible(entries, 10)
+    entries["op"][1] = 2  # insert grows the base — not an overlay op
+    assert not delta_eligible(entries, 10)
+    entries["op"][1] = 1
+    entries["row"][2] = 10  # out-of-base row == insert
+    assert not delta_eligible(entries, 10)
+
+
+# ---------------------------------------------------------------------------
+# spec guards + session defaults
+# ---------------------------------------------------------------------------
+
+def test_delta_store_requires_mi_family():
+    for factory in (SystemSpec.si_ss, SystemSpec.si_mvcc):
+        with pytest.raises(ValueError, match="multiple-instance"):
+            factory(delta_store=True)
+    with pytest.raises(ValueError, match="positive"):
+        SystemSpec.polynesia(delta_capacity=0)
+
+
+def test_repro_delta_env_default(tiny_workload, monkeypatch):
+    """delta_store=None defers to REPRO_DELTA, the session-wide default
+    the CI matrix row uses; an explicit False wins over the env."""
+    table, stream, queries = tiny_workload
+    monkeypatch.setenv("REPRO_DELTA", "1")
+    on = htap.run("Polynesia", table, stream, queries, n_rounds=N_ROUNDS)
+    assert on.stats["delta_appends"] > 0
+    off = htap.run("Polynesia", table, stream, queries, n_rounds=N_ROUNDS,
+                   delta_store=False)
+    assert "delta_appends" not in off.stats
+    monkeypatch.setenv("REPRO_DELTA", "0")
+    off2 = htap.run("Polynesia", table, stream, queries, n_rounds=N_ROUNDS)
+    assert "delta_appends" not in off2.stats
+    assert on.results == off.results == off2.results

@@ -286,3 +286,41 @@ def test_empty_query_batch_is_noop(tiny_workload):
     pending = session.store.pending_updates
     assert session.query_batch([]) == []
     assert session.store.pending_updates == pending
+
+
+def test_sequential_mesh_sessions_release_island_mesh(tiny_workload):
+    """A mesh session installs its island mesh as the process-global
+    context at construction; finish() must put back whatever was there
+    before, so a second session — or an ad-hoc get_backend("...@N/mesh")
+    with a different island count — never resolves against the first
+    session's stale mesh. Regression: finish() used to leave the mesh
+    installed."""
+    from repro.distributed import current_island_mesh
+    table, stream, queries = tiny_workload
+    prev = current_island_mesh()
+
+    s1, r1 = _drive("Polynesia", table, stream, queries,
+                    backend="pallas@1/mesh")
+    assert current_island_mesh() is prev  # released by finish()
+
+    s2, r2 = _drive("Polynesia", table, stream, queries,
+                    backend="pallas@1/mesh")
+    assert current_island_mesh() is prev
+    assert r1.results == r2.results
+    assert r1.stats["placement"] == r2.stats["placement"] == "mesh"
+
+
+def test_mesh_session_installs_mesh_for_its_lifetime(tiny_workload):
+    """While the session is live, its mesh IS the process-global context
+    (ad-hoc backend resolution inside the session sees it); finish()
+    restores the previous context even when one was already installed."""
+    from repro.distributed import current_island_mesh
+    table, _, _ = tiny_workload
+    outer = HTAPSession(SystemSpec.polynesia(backend="pallas@1/mesh"), table)
+    assert current_island_mesh() is outer.be.mesh
+    inner = HTAPSession(SystemSpec.polynesia(backend="pallas@1/mesh"), table)
+    assert current_island_mesh() is inner.be.mesh
+    inner.finish()
+    assert current_island_mesh() is outer.be.mesh  # restored, not cleared
+    outer.finish()
+    assert current_island_mesh() is None

@@ -304,3 +304,41 @@ def test_drain_logs_limit_preserves_commit_order():
     for b in seen:
         assert int(b["commit_id"].min()) > hi
         hi = int(b["commit_id"].max())
+
+
+# ---------------------------------------------------------------------------
+# commit clock: commit-id -> time map must be monotone for ANY span list
+# ---------------------------------------------------------------------------
+
+def test_commit_clock_monotone_property():
+    """`_CommitClock.time_of` must be monotone non-decreasing in commit id
+    for arbitrary span lists — including overlapping, out-of-order and
+    interleaved spans (chunked sessions emit txn nodes whose scheduled
+    intervals interleave). The old single-span-lookup form broke monotonicity
+    whenever a later-scheduled span covered earlier commit ids; the max-form
+    is monotone by construction, and this property pins that."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core.hwmodel import TimelineTag
+    from repro.core.timeline import _CommitClock
+
+    span = st.tuples(st.integers(0, 200), st.integers(0, 200),
+                     st.floats(0.0, 1e3), st.floats(0.0, 1e3))
+
+    @settings(max_examples=50, deadline=None)
+    @given(spans=st.lists(span, min_size=0, max_size=8))
+    def prop(spans):
+        clock = _CommitClock()
+        for lo, hi, a, b in spans:
+            tag = TimelineTag(node=f"n{len(clock._spans)}", kind="txn",
+                              meta={"cid_lo": min(lo, hi),
+                                    "cid_hi": max(lo, hi)})
+            clock.observe(tag, min(a, b), max(a, b))
+        times = [clock.time_of(c) for c in range(-5, 215)]
+        assert all(t0 <= t1 for t0, t1 in zip(times, times[1:]))
+        assert all(t >= 0.0 for t in times)
+
+    prop()

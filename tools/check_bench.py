@@ -126,6 +126,50 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
     for combo in sorted(set(cur) - set(base)):
         print(f"  {combo:12s} (new combo, not in baseline — not gated)")
     failures += _sharded_plane_gates(cur, base)
+    failures += _delta_plane_gates(cur)
+    return failures
+
+
+# Delta-store pairwise budget: the delta combo vs the eager sync-timeline
+# combo of the SAME run (both modeled -> deterministic). The CI workload is
+# tiny (the delta plane's wins grow with base size and commit rate — see
+# fig7's sweep), so the gate only insists the delta plane is not WORSE
+# than the eager swap beyond this slack, on both txn throughput and
+# freshness.
+DELTA_PLANE_BUDGET = 0.05
+
+
+def _delta_plane_gates(cur: dict) -> list[str]:
+    """Delta-store update plane vs eager Phase-2 swap, same run.
+
+    `pallas@1+delta` runs the very same workload/backend/timing as
+    `pallas@1+timeline` with only the spec's delta_store flag flipped;
+    answers are bit-identical (ci_bench enforces that before writing the
+    payload), so these gates hold the delta plane's modeled txn throughput
+    and commit-to-visibility freshness to within DELTA_PLANE_BUDGET of the
+    eager row."""
+    failures = []
+    eager = cur.get("pallas@1+timeline", {})
+    delta = cur.get("pallas@1+delta", {})
+    pairs = [("txn_tps", False), ("freshness_mean_s", True)]
+    for metric, lower_better in pairs:
+        e, d = eager.get(metric), delta.get(metric)
+        if e is None or d is None:
+            continue
+        if lower_better:
+            failed = d > e * (1.0 + DELTA_PLANE_BUDGET)
+            rel = f"<= eager*{1.0 + DELTA_PLANE_BUDGET:.2f}"
+        else:
+            failed = d < e * (1.0 - DELTA_PLANE_BUDGET)
+            rel = f">= eager*{1.0 - DELTA_PLANE_BUDGET:.2f}"
+        status = "FAIL" if failed else "ok"
+        print(f"  delta-plane {metric:16s} eager={e:.6e} delta={d:.6e} "
+              f"({rel}) {status}")
+        if failed:
+            failures.append(
+                f"delta-plane {metric}: pallas@1+delta = {d:.6e} vs "
+                f"pallas@1+timeline = {e:.6e} — the delta-store update "
+                f"plane regressed past the {DELTA_PLANE_BUDGET:.0%} budget")
     return failures
 
 

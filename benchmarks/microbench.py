@@ -49,7 +49,9 @@ def _families():
     import jax.numpy as jnp
 
     from repro.kernels.bitonic_sort import sort_rows
-    from repro.kernels.dict_ops import (scan_filter_agg_batch,
+    from repro.kernels.dict_ops import (apply_pipeline_batch,
+                                        scan_filter_agg_batch,
+                                        scan_filter_agg_group,
                                         scan_filter_agg_sharded)
     from repro.kernels.hash_probe import (build_table, probe, probe_sharded,
                                           scan_filter_agg_join,
@@ -91,6 +93,32 @@ def _families():
     prev = jnp.asarray(np.asarray(src))
     dirty = jnp.asarray((rng.random(8) < 0.5).astype(np.int32))
 
+    # fused query group: base scan + delta correction in one launch. The
+    # (6, nr) corr stack mirrors a CI-sized overlay: eff and base lanes of
+    # (filter value, agg value, validity) for nr touched rows.
+    nr = 256
+    corr = np.zeros((6, nr), dtype=np.int32)
+    corr[0] = rng.integers(0, 10**6, nr)          # fv_eff
+    corr[1] = rng.integers(0, 10**6, nr)          # av_eff
+    corr[2] = rng.random(nr) < 0.9                # valid_eff
+    corr[3] = rng.integers(0, 10**6, nr)          # fv_base
+    corr[4] = rng.integers(0, 10**6, nr)          # av_base
+    corr[5] = rng.random(nr) < 0.9                # valid_base
+    vbounds = [(0, 500_000 + 1000 * q) for q in range(N_QUERIES)]
+
+    # fused ship-batch apply: sorted old dictionaries + raw update values
+    # at CI-like widths (old 1024-bucket, values 256-bucket), int32.max
+    # sentinel pad
+    imax = np.iinfo(np.int32).max
+    apply_old = np.full((4, 1024), imax, dtype=np.int32)
+    apply_vals = np.full((4, 256), imax, dtype=np.int32)
+    for r in range(4):
+        no, nv = 700 + 50 * r, 200 + 10 * r
+        apply_old[r, :no] = np.unique(
+            rng.choice(np.arange(1, 10**6, dtype=np.int32), no,
+                       replace=False))
+        apply_vals[r, :nv] = rng.integers(0, 10**6, nv)
+
     return {
         "scan": lambda: scan_filter_agg_batch(fc, ac, valid, adict, bounds),
         "scan_sharded": lambda: scan_filter_agg_sharded(
@@ -104,6 +132,10 @@ def _families():
         "merge_runs": lambda: merge_sorted_runs(runs),
         "sort_rows": lambda: _sync(sort_rows(sort_in)),
         "snapshot_copy": lambda: _sync(snapshot_copy(src, prev, dirty)),
+        "query_group": lambda: scan_filter_agg_group(
+            fc, ac, valid, adict, bounds, corr, vbounds),
+        "apply_pipeline": lambda: apply_pipeline_batch(apply_old,
+                                                       apply_vals),
     }
 
 

@@ -109,6 +109,7 @@ def ci_bench(json_path: str) -> None:
     from benchmarks.common import ci_workload
 
     metrics = {}
+    traces = {}
     answers = None
     for label, kwargs in CI_MATRIX:
         need = _mesh_devices_missing(label)
@@ -161,6 +162,14 @@ def ci_bench(json_path: str) -> None:
         if res.freshness_seconds:
             metrics[label]["freshness_mean_s"] = res.freshness_seconds["mean"]
             metrics[label]["freshness_max_s"] = res.freshness_seconds["max"]
+        # per-session trace ledgers (RunResult.stats["traces"]): the cold
+        # pass carries every trace+compile; the last warm pass must be
+        # empty in steady state (pow2 bucketing -> pure cache hits). Kept
+        # out of the gated payload — shape-bucket counts are informational.
+        traces[label] = {
+            "cold": res.stats.get("traces", {}),
+            "warm_last": res2.stats.get("traces", {}),
+        }
     payload = {
         "workload": "ci_workload (seed 0): 4000 rows x 4 cols, 8000 txn, "
                     "12 queries, n_rounds=4, Polynesia",
@@ -171,6 +180,12 @@ def ci_bench(json_path: str) -> None:
         json.dump(payload, f, indent=2, sort_keys=True)
         f.write("\n")
     print(f"# wrote {json_path}")
+    traces_path = (json_path[:-5] if json_path.endswith(".json")
+                   else json_path) + "_traces.json"
+    with open(traces_path, "w") as f:
+        json.dump({"traces": traces}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {traces_path}")
     for combo, m in sorted(metrics.items()):
         print(f"ci_{combo},{m['wall_s'] * 1e6:.1f},"
               f"txn_tps={m['txn_tps']:.6e};ana_qps={m['ana_qps']:.6e};"

@@ -118,24 +118,15 @@ def _merge_dictionary_stages_batch(be, per_column):
     old->new index is a positional byproduct of the merge — both
     dictionaries are sorted and every old value survives into the merged
     one, so each old entry's new code is its position there (the paper's
-    merge unit emits the mapping during the merge pass; the hash unit
-    encodes the *update* values). All the batching is safe because sorts
-    and merges are exact and item-independent — grouping them cannot
-    change any individual result.
+    merge unit emits the mapping during the merge pass; the staged encoder
+    binary-searches the *update* values, which are all present in the
+    merged dictionary by construction). All the batching is safe because
+    sorts and merges are exact and item-independent — grouping them cannot
+    change any individual result. The whole pipeline now lives on the
+    backend (`ExecutionBackend.apply_stages_batch`): the accelerator
+    backend fuses sort + merge into ONE donated-buffer launch per batch.
     """
-    upd: list = [None] * len(per_column)
-    nonempty = [i for i, (_, wv) in enumerate(per_column) if len(wv)]
-    for i, u in zip(nonempty, be.sort_unique_batch(
-            [per_column[i][1] for i in nonempty])):
-        upd[i] = u
-    for i in range(len(per_column)):
-        if upd[i] is None:
-            upd[i] = np.empty(0, np.int32)
-    new_dicts = be.merge_dictionaries_batch(
-        [(old, u) for (old, _), u in zip(per_column, upd)])
-    return [(u, nd, be.make_encoder(nd),
-             np.searchsorted(nd, old).astype(np.int64))
-            for u, nd, (old, _) in zip(upd, new_dicts, per_column)]
+    return be.apply_stages_batch(per_column)
 
 
 def _merge_dictionary_stages(be, old_dict: np.ndarray, write_vals: np.ndarray):

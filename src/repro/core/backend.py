@@ -57,11 +57,17 @@ from repro.core.dsm import (EncodedColumn, ShardedView, make_sharded_view,
 from repro.core.nsm import UPDATE_DTYPE
 from repro.distributed import island_mesh, place_shard_arrays
 from repro.kernels.bitonic_sort import sort_1024, sort_rows
-from repro.kernels.dict_ops import (scan_filter_agg, scan_filter_agg_batch,
+from repro.kernels.common import width_bucket
+from repro.kernels.dict_ops import (apply_pipeline_batch, scan_filter_agg,
+                                    scan_filter_agg_batch,
+                                    scan_filter_agg_group,
+                                    scan_filter_agg_group_sharded,
                                     scan_filter_agg_mesh,
-                                    scan_filter_agg_sharded, scan_values_agg)
+                                    scan_filter_agg_sharded, scan_values_agg,
+                                    scan_values_delta)
 from repro.kernels.hash_probe import (EMPTY_KEY, build_table, probe,
                                       probe_sharded, scan_filter_agg_join,
+                                      scan_filter_agg_join_group,
                                       scan_filter_agg_join_mesh,
                                       scan_filter_agg_join_sharded)
 from repro.kernels.merge_runs import merge_sorted_pairs, merge_sorted_runs
@@ -75,13 +81,17 @@ SNAPSHOT_BLOCK = 8192  # copy-unit chunk size (kernels/snapshot_copy default)
 # CI launch-count gate) wrap exactly these names — keep it next to the
 # imports so adding a kernel here keeps the gate honest.
 KERNEL_ENTRY_POINTS = ("scan_filter_agg", "scan_filter_agg_batch",
+                       "scan_filter_agg_group",
+                       "scan_filter_agg_group_sharded",
                        "scan_filter_agg_sharded", "scan_filter_agg_mesh",
                        "scan_filter_agg_join",
+                       "scan_filter_agg_join_group",
                        "scan_filter_agg_join_sharded",
                        "scan_filter_agg_join_mesh", "probe",
                        "probe_sharded", "build_table", "merge_sorted_runs",
                        "merge_sorted_pairs", "sort_1024", "sort_rows",
-                       "snapshot_copy", "scan_values_agg")
+                       "snapshot_copy", "scan_values_agg",
+                       "scan_values_delta", "apply_pipeline_batch")
 
 
 @contextlib.contextmanager
@@ -210,6 +220,60 @@ class ExecutionBackend(abc.ABC):
             out.append((int(avals[mask].sum()), int(mask.sum())))
         return out
 
+    def filter_agg_values_delta(self, corr, bounds: Sequence[tuple[int, int]]
+                                ) -> list[tuple[int, int]]:
+        """Effective-minus-base correction of one overlay stack: per bound,
+        the exact (Δsum, Δcount) a delta overlay contributes on top of the
+        base scan. ``corr`` is a (6, nr) int32 stack of
+        [fv_eff, av_eff, valid_eff, fv_base, av_base, valid_base] rows (the
+        touched-row union's effective and base states — engine._corr_stack).
+        This default is two raw-value scans subtracted on the host;
+        PallasBackend fuses both into ONE launch (scan_values_delta)."""
+        corr = np.asarray(corr)
+        eff = self.filter_agg_values_batch(corr[0], corr[1], corr[2], bounds)
+        base = self.filter_agg_values_batch(corr[3], corr[4], corr[5], bounds)
+        return [(e[0] - b[0], e[1] - b[1]) for e, b in zip(eff, base)]
+
+    def filter_agg_delta_batch(self, fcol: EncodedColumn, acol: EncodedColumn,
+                               bounds: Sequence[tuple[int, int]], corr
+                               ) -> list[tuple[int, int]]:
+        """Fused multi-query scan over the pinned base WITH the delta-store
+        overlay correction folded in: ``filter_agg_batch`` answers plus the
+        ``corr`` stack's per-bound deltas. This default composes the two
+        existing operators (the reference algebra); PallasBackend runs base
+        scan and both correction scans as ONE traced launch
+        (scan_filter_agg_group), donating the correction stack."""
+        fused = self.filter_agg_batch(fcol, acol, bounds)
+        if corr is None:
+            return fused
+        deltas = self.filter_agg_values_delta(corr, bounds)
+        return [(s + ds, c + dc)
+                for (s, c), (ds, dc) in zip(fused, deltas)]
+
+    def filter_agg_join_delta_batch(self, fcol: EncodedColumn,
+                                    acol: EncodedColumn, jcol: EncodedColumn,
+                                    bounds: Sequence[tuple[int, int]],
+                                    rcount, corr_a, corr_j
+                                    ) -> list[tuple[int, int, int]]:
+        """Delta-merged join group: ``filter_agg_join_batch`` with the
+        EFFECTIVE build-side histogram override plus the aggregate
+        (``corr_a``) and weighted probe-row (``corr_j``) overlay
+        corrections — ``corr_j``'s value lanes carry the effective join-
+        histogram weights and only its sum delta applies (the join term).
+        Either stack may be None. PallasBackend overrides with ONE fused
+        launch (scan_filter_agg_join_group)."""
+        fused = self.filter_agg_join_batch(fcol, acol, jcol, bounds,
+                                           rcount=rcount)
+        if corr_a is not None:
+            da = self.filter_agg_values_delta(corr_a, bounds)
+            fused = [(s + ds, c + dc, j)
+                     for (s, c, j), (ds, dc) in zip(fused, da)]
+        if corr_j is not None:
+            dj = self.filter_agg_values_delta(corr_j, bounds)
+            fused = [(s, c, j + djs)
+                     for (s, c, j), (djs, _) in zip(fused, dj)]
+        return fused
+
     def scan_view(self, fview: ShardedView, aview: ShardedView,
                   code_bounds: Sequence[tuple[int, int]]
                   ) -> list[list[tuple[int, int]]]:
@@ -325,6 +389,45 @@ class ExecutionBackend(abc.ABC):
         elementwise identical either way."""
         return [self.merge_dictionaries(o, u) for o, u in pairs]
 
+    def staged_encoder(self, new_dict: np.ndarray
+                       ) -> Callable[[np.ndarray], np.ndarray]:
+        """value -> code map for a ship batch's STAGED writes. Every staged
+        write value is a pending update value, so it is in update_dict ⊆
+        new_dict by construction — a vectorized binary search over the
+        merged dictionary is exact, with no hash-table build or probe
+        dispatch (`make_encoder` stays the general-purpose encoder for
+        values that may miss)."""
+        d = np.asarray(new_dict)
+        return lambda values: np.searchsorted(d, values).astype(np.int64)
+
+    def apply_stages_batch(self, per_column: Sequence[tuple[np.ndarray,
+                                                            np.ndarray]]
+                           ) -> list[tuple]:
+        """Stages 1-2 of the optimized update application for every column
+        of a ship batch: per (old_dict, write_vals) pair, sort+dedupe the
+        pending values into the update dictionary, linear-merge the sorted
+        dictionaries, and derive the staged encoder + positional old->new
+        code map (both dictionaries are sorted and every old value survives
+        the merge, so each old entry's new code is its merged position).
+        Returns [(update_dict, new_dict, encode, old_to_new)] in order.
+
+        This default rides the batched sorter/merge dispatches;
+        PallasBackend overrides it with ONE donated-buffer fused launch
+        (sort + bitonic half-cleaner merge) per ship batch."""
+        upd: list = [None] * len(per_column)
+        nonempty = [i for i, (_, wv) in enumerate(per_column) if len(wv)]
+        for i, u in zip(nonempty, self.sort_unique_batch(
+                [per_column[i][1] for i in nonempty])):
+            upd[i] = u
+        for i in range(len(per_column)):
+            if upd[i] is None:
+                upd[i] = np.empty(0, np.int32)
+        new_dicts = self.merge_dictionaries_batch(
+            [(old, u) for (old, _), u in zip(per_column, upd)])
+        return [(u, nd, self.staged_encoder(nd),
+                 np.searchsorted(nd, old).astype(np.int64))
+                for u, nd, (old, _) in zip(upd, new_dicts, per_column)]
+
     # -- consistency (§6) --------------------------------------------------
     @abc.abstractmethod
     def snapshot_column(self, col: EncodedColumn,
@@ -354,6 +457,11 @@ def _join_counts(left: EncodedColumn, right: EncodedColumn,
 
 def _fits_int32(values: np.ndarray) -> bool:
     if len(values) == 0:
+        return True
+    # dtype short-circuit: any integer dtype of <= 32 bits fits by
+    # construction — skips the min/max scans on the hot ship path
+    if values.dtype.kind in "iu" and values.dtype.itemsize <= (
+            4 if values.dtype.kind == "i" else 2):
         return True
     info = np.iinfo(np.int32)
     return bool(values.min() >= info.min and values.max() <= info.max)
@@ -513,6 +621,39 @@ class PallasBackend(NumpyBackend):
         # data, small relative to the base column, one launch per call
         return scan_values_agg(fvals, avals, valid, bounds)
 
+    def filter_agg_values_delta(self, corr, bounds):
+        # effective and base correction scans fused into ONE launch; the
+        # freshly built (6, nr) stack is donated on real hardware
+        return scan_values_delta(corr, bounds)
+
+    def filter_agg_delta_batch(self, fcol, acol, bounds, corr):
+        # the whole delta-merged group — base multi-predicate scan plus
+        # both overlay correction scans — as ONE traced launch, instead of
+        # the base launch + two correction launches the composition costs
+        if corr is None:
+            return self.filter_agg_batch(fcol, acol, bounds)
+        code_bounds = [self.code_range(fcol, lo, hi) for lo, hi in bounds]
+        return scan_filter_agg_group(fcol.codes, acol.codes, fcol.valid,
+                                     acol.dictionary, code_bounds, corr,
+                                     bounds)
+
+    def filter_agg_join_delta_batch(self, fcol, acol, jcol, bounds, rcount,
+                                    corr_a, corr_j):
+        # delta-merged join group in ONE fused launch: base aggregate +
+        # join scans and all four correction scans share a single trace
+        if corr_a is None and corr_j is None:
+            return self.filter_agg_join_batch(fcol, acol, jcol, bounds,
+                                              rcount=rcount)
+        code_bounds = [self.code_range(fcol, lo, hi) for lo, hi in bounds]
+        if rcount is None:
+            rcount = np.bincount(
+                np.asarray(jcol.codes)[np.asarray(jcol.valid)],
+                minlength=jcol.dict_size)
+        rcount = np.asarray(rcount).astype(np.int32)
+        return scan_filter_agg_join_group(
+            fcol.codes, acol.codes, jcol.codes, fcol.valid, jcol.valid,
+            acol.dictionary, rcount, code_bounds, corr_a, corr_j, bounds)
+
     def _join_match(self, lv, rv, lcount, rcount):
         if (len(rv) == 0 or len(lv) == 0
                 or (rv == int(EMPTY_KEY)).any()       # can't build the table
@@ -613,6 +754,61 @@ class PallasBackend(NumpyBackend):
                 out[i] = self.merge_dictionaries(o, u)
         return out
 
+    def apply_stages_batch(self, per_column):
+        """The whole ship batch's dictionary stages as ONE donated-buffer
+        fused launch (kernels/dict_ops.apply_pipeline_batch): every
+        column's update values ride one row of a single sort network and
+        merge with its old dictionary through the bitonic half-cleaner in
+        the same trace — replacing the separate sorter and merge dispatches
+        of the batched composition. The old-dictionary and value sides get
+        independent `common.width_bucket` widths, so the sort network runs
+        at the (usually small) value width instead of the dictionary
+        width, and tiny 8/16/32-wide deltas get dedicated short networks.
+
+        Columns the fused pipeline can't take — an empty side (nothing to
+        sort or merge), values beyond int32, or values colliding with the
+        int32.max sentinel pad — fall back to the compositional default,
+        as does a batch with fewer than two fusable columns. Results are
+        elementwise identical either way."""
+        cols = [(np.asarray(o), np.asarray(wv)) for o, wv in per_column]
+        imax = np.iinfo(np.int32).max
+
+        def fusable(o, wv):
+            # old dictionaries are sorted, so o[-1] is the max
+            return (len(o) > 0 and len(wv) > 0 and _fits_int32(o)
+                    and _fits_int32(wv) and int(o[-1]) < imax
+                    and int(wv.max()) < imax)
+
+        fused = [i for i, (o, wv) in enumerate(cols) if fusable(o, wv)]
+        if len(fused) < 2:
+            return super().apply_stages_batch(per_column)
+        w_old = width_bucket(max(len(cols[i][0]) for i in fused))
+        w_val = width_bucket(max(len(cols[i][1]) for i in fused))
+        old_stack = np.full((len(fused), w_old), imax, dtype=np.int32)
+        val_stack = np.full((len(fused), w_val), imax, dtype=np.int32)
+        for r, i in enumerate(fused):
+            o, wv = cols[i]
+            old_stack[r, :len(o)] = o.astype(np.int32)
+            val_stack[r, :len(wv)] = wv.astype(np.int32)
+        sorted_vals, merged = apply_pipeline_batch(old_stack, val_stack)
+        sorted_vals = np.asarray(sorted_vals)
+        merged = np.asarray(merged)
+        out: list = [None] * len(cols)
+        for r, i in enumerate(fused):
+            o, wv = cols[i]
+            s = sorted_vals[r, :len(wv)]
+            u = s[np.concatenate([[True], s[1:] != s[:-1]])].astype(wv.dtype)
+            m = merged[r, :len(o) + len(wv)]
+            nd = m[np.concatenate([[True], m[1:] != m[:-1]])].astype(o.dtype)
+            out[i] = (u, nd, self.staged_encoder(nd),
+                      np.searchsorted(nd, o).astype(np.int64))
+        rest = [i for i in range(len(cols)) if out[i] is None]
+        if rest:
+            for i, stage in zip(rest, super().apply_stages_batch(
+                    [per_column[i] for i in rest])):
+                out[i] = stage
+        return out
+
     def make_encoder(self, dictionary):
         d = np.asarray(dictionary)
         if (len(d) == 0 or not _fits_int32(d)
@@ -650,15 +846,21 @@ class PallasBackend(NumpyBackend):
         n_chunks = (n + SNAPSHOT_BLOCK - 1) // SNAPSHOT_BLOCK
         src = np.asarray(col.codes)
         if (prev is not None and prev.n_rows == n
-                and np.array_equal(np.asarray(prev.dictionary),
-                                   np.asarray(col.dictionary))):
+                and (prev.dictionary is col.dictionary  # snapshots alias
+                     or np.array_equal(np.asarray(prev.dictionary),
+                                       np.asarray(col.dictionary)))):
             # tracking buffer: only chunks that changed since the previous
             # snapshot are fetched from the main replica (codes are only
             # comparable when the dictionaries match).
             prev_codes = np.asarray(prev.codes)
-            pad = n_chunks * SNAPSHOT_BLOCK - n
-            diff = np.pad(src, (0, pad)) != np.pad(prev_codes, (0, pad))
-            dirty = diff.reshape(n_chunks, SNAPSHOT_BLOCK).any(axis=1)
+            diff = src != prev_codes
+            dirty = np.zeros(n_chunks, dtype=bool)
+            full = n // SNAPSHOT_BLOCK
+            if full:
+                dirty[:full] = diff[:full * SNAPSHOT_BLOCK].reshape(
+                    full, SNAPSHOT_BLOCK).any(axis=1)
+            if full < n_chunks:
+                dirty[full] = diff[full * SNAPSHOT_BLOCK:].any()
             prev_arr = prev.codes
         else:
             dirty = np.ones(n_chunks, dtype=bool)
@@ -799,6 +1001,25 @@ class ShardedBackend(ExecutionBackend):
         # base shards) — delegate to the inner backend's single launch
         return self.inner.filter_agg_values_batch(fvals, avals, valid, bounds)
 
+    def filter_agg_values_delta(self, corr, bounds):
+        # flat overlay stack, same residency argument as above
+        return self.inner.filter_agg_values_delta(corr, bounds)
+
+    def filter_agg_delta_batch(self, fcol, acol, bounds, corr):
+        # on the accelerator inner backend the whole delta-merged group —
+        # every island's base scan over its resident shard AND the flat
+        # overlay correction scans — rides ONE fused launch; other inners
+        # keep the compositional default (sharded base + inner correction)
+        if corr is None:
+            return self.filter_agg_batch(fcol, acol, bounds)
+        if not isinstance(self.inner, PallasBackend):
+            return super().filter_agg_delta_batch(fcol, acol, bounds, corr)
+        fv, av = self._as_view(fcol), self._as_view(acol)
+        code_bounds = [self.code_range(fv, lo, hi) for lo, hi in bounds]
+        return scan_filter_agg_group_sharded(fv.codes, av.codes, fv.valid,
+                                             av.dictionary, code_bounds,
+                                             corr, bounds)
+
     def hash_join_count(self, left, right, left_mask=None):
         # Each island histograms only its own resident probe-side shard;
         # the partial histograms reduce exactly in int arithmetic. The
@@ -854,6 +1075,14 @@ class ShardedBackend(ExecutionBackend):
 
     def merge_dictionaries_batch(self, pairs):
         return self.inner.merge_dictionaries_batch(pairs)
+
+    def staged_encoder(self, new_dict):
+        return self.inner.staged_encoder(new_dict)
+
+    def apply_stages_batch(self, per_column):
+        # the dictionary is replicated, so the ship batch's fused
+        # dictionary pipeline runs once on the inner backend
+        return self.inner.apply_stages_batch(per_column)
 
     def make_encoder(self, dictionary):
         return self.inner.make_encoder(dictionary)
@@ -971,6 +1200,18 @@ class MeshBackend(ShardedBackend):
         return scan_filter_agg_join_mesh(fv.codes, av.codes, jv.codes,
                                          fv.valid, jv.valid, av.dictionary,
                                          rcount, code_bounds, self.mesh)
+
+    def filter_agg_delta_batch(self, fcol, acol, bounds, corr):
+        # the resident shards live on the device mesh, so the base scan
+        # must stay on the mesh entry point (the stacked fused group kernel
+        # would pull every shard back to one device); the flat overlay
+        # correction folds in from the inner backend's single fused launch
+        fused = self.filter_agg_batch(fcol, acol, bounds)
+        if corr is None:
+            return fused
+        deltas = self.inner.filter_agg_values_delta(corr, bounds)
+        return [(s + ds, c + dc)
+                for (s, c), (ds, dc) in zip(fused, deltas)]
 
 
 # ---------------------------------------------------------------------------

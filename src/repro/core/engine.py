@@ -210,28 +210,28 @@ def _overlayed(vals, valid, delta: ColumnDelta | None, rows):
             np.where(hit, delta.valid[idxc], valid))
 
 
-def _agg_correction(be, bf, ba, df, da, bounds):
-    """Exact per-bound (Δsum, Δcount) the overlays contribute to a fused
-    filter+aggregate scan over the base. Only rows touched by the filter or
-    aggregate overlay can change; for those rows the effective contribution
-    replaces the base contribution, so the correction is the difference of
-    two raw-value scans (filter_agg_values_batch) over the touched-row
-    union — everything else cancels exactly in integer arithmetic. The
-    aggregate reads a row's value regardless of the aggregate column's own
-    validity (matching the eager scan), hence valid=True on the agg side.
+def _corr_stack(bf, ba, df, da):
+    """(corr, n_rows): the aggregate correction stack the fused delta scan
+    consumes — a (6, nr) int32 array of [fv_eff, av_eff, valid_eff,
+    fv_base, av_base, valid_base] over the filter/agg overlays' touched-row
+    union ((None, 0) when both overlays are empty). Only touched rows can
+    change; for those the effective contribution replaces the base one, so
+    the backend folds ``effective - base`` into the base scan and
+    everything else cancels exactly in integer arithmetic. The aggregate
+    reads a row's value regardless of the aggregate column's own validity
+    (matching the eager scan), hence valid=True on the agg side.
     """
     rows = _union_rows(df, da)
     if rows is None:
-        return None
+        return None, 0
     fv_b, fvalid_b = _row_state(bf, rows)
     av_b = np.asarray(ba.dictionary)[
         np.asarray(ba.codes)[rows]].astype(np.int32)
     fv_e, fvalid_e = _overlayed(fv_b, fvalid_b, df, rows)
     av_e, _ = _overlayed(av_b, np.ones(len(rows), bool), da, rows)
-    eff = be.filter_agg_values_batch(fv_e, av_e, fvalid_e, bounds)
-    base = be.filter_agg_values_batch(fv_b, av_b, fvalid_b, bounds)
-    return ([e[0] - b[0] for e, b in zip(eff, base)],
-            [e[1] - b[1] for e, b in zip(eff, base)], len(rows))
+    return np.stack([fv_e, av_e, fvalid_e.astype(np.int32),
+                     fv_b, av_b, fvalid_b.astype(np.int32)]
+                    ).astype(np.int32), len(rows)
 
 
 def _join_eff_histogram(bj: EncodedColumn, dj: ColumnDelta | None):
@@ -288,26 +288,27 @@ def _join_eff_histogram(bj: EncodedColumn, dj: ColumnDelta | None):
     return rc, c_eff
 
 
-def _join_correction(be, bf, bj, df, dj, c_eff, bounds):
-    """Exact per-bound Δ of the self-join term. The fused base scan (with
-    the rcount_eff override) already counts every BASE-state probe row
-    against the effective build side; rows whose filter or join state the
-    overlays changed are swapped out by subtracting their base-state
-    contribution and adding their effective-state contribution — two
-    weighted raw-value scans over the touched-row union, weights =
-    effective build-side counts of each row's join value."""
+def _join_corr_stack(bf, bj, df, dj, c_eff):
+    """(corr_j, n_rows): the self-join correction stack. The fused base
+    scan (with the rcount_eff override) already counts every BASE-state
+    probe row against the effective build side; rows whose filter or join
+    state the overlays changed are swapped out by subtracting their
+    base-state contribution and adding their effective-state contribution.
+    The stack's value lanes carry the WEIGHTS of those two weighted
+    raw-value scans — effective build-side counts of each row's join value
+    — so the backend folds only the sum delta into the join term."""
     rows = _union_rows(df, dj)
     if rows is None:
-        return None
+        return None, 0
     fv_b, fvalid_b = _row_state(bf, rows)
     jv_b, jvalid_b = _row_state(bj, rows)
     fv_e, fvalid_e = _overlayed(fv_b, fvalid_b, df, rows)
     jv_e, jvalid_e = _overlayed(jv_b, jvalid_b, dj, rows)
     w_b = np.where(jvalid_b, c_eff(jv_b), 0).astype(np.int32)
     w_e = np.where(jvalid_e, c_eff(jv_e), 0).astype(np.int32)
-    add = be.filter_agg_values_batch(fv_e, w_e, fvalid_e, bounds)
-    sub = be.filter_agg_values_batch(fv_b, w_b, fvalid_b, bounds)
-    return [a[0] - s[0] for a, s in zip(add, sub)], len(rows)
+    return np.stack([fv_e, w_e, fvalid_e.astype(np.int32),
+                     fv_b, w_b, fvalid_b.astype(np.int32)]
+                    ).astype(np.int32), len(rows)
 
 
 def _correction_cost(cost: CostLog | None, on_pim: bool,
@@ -355,8 +356,10 @@ def run_query_group_dsm(
     unchanged over the pinned snapshot, then exact overlay corrections are
     added — an aggregate correction over the filter/agg overlays' touched
     rows and, for join groups, an effective build-side histogram override
-    plus a weighted probe-row correction (see the `_agg_correction` /
-    `_join_correction` algebra). ``base_cols`` must then map the involved
+    plus a weighted probe-row correction (see the `_corr_stack` /
+    `_join_corr_stack` algebra); the backends' ``filter_agg_delta_batch``
+    family folds base scan and corrections into ONE fused launch on the
+    accelerator paths. ``base_cols`` must then map the involved
     columns to the base EncodedColumns the overlays are relative to (the
     pinned snapshot shares state with them — appends never dirty snapshot
     chains). Answers are bit-identical to eagerly applying the overlays.
@@ -378,21 +381,18 @@ def run_query_group_dsm(
     if (df or da or dj) and base_cols is None:
         raise ValueError("delta-merged reads need base_cols (the columns "
                          "the overlays are relative to)")
-    corr_rows = corr_touched = corr_calls = 0
+    corr_rows = corr_touched = 0
     answers: dict[int, tuple] = {}
     if no_join:
         bounds = [(q.lo, q.hi) for q in no_join]
-        fused = be.filter_agg_batch(fcol, acol, bounds)
-        corr = _agg_correction(be, base_cols[q0.filter_col],
-                               base_cols[q0.agg_col], df, da,
-                               bounds) if (df or da) else None
-        if corr is not None:
-            ds, dc, nr = corr
-            fused = [(s + ds[i], c + dc[i])
-                     for i, (s, c) in enumerate(fused)]
+        if df or da:
+            corr, nr = _corr_stack(base_cols[q0.filter_col],
+                                   base_cols[q0.agg_col], df, da)
+            fused = be.filter_agg_delta_batch(fcol, acol, bounds, corr)
             corr_rows += 2 * nr
             corr_touched += nr
-            corr_calls += 2
+        else:
+            fused = be.filter_agg_batch(fcol, acol, bounds)
         for q, sc in zip(no_join, fused):
             answers[id(q)] = sc
     if joins:
@@ -402,25 +402,13 @@ def run_query_group_dsm(
             bf, ba = base_cols[q0.filter_col], base_cols[q0.agg_col]
             bj = base_cols[q0.join_col]
             rc, c_eff = _join_eff_histogram(bj, dj)
-            fused_j = be.filter_agg_join_batch(fcol, acol, jcol_v, bounds,
-                                               rcount=rc)
-            acorr = _agg_correction(be, bf, ba, df, da, bounds)
-            ds = dc = None
-            if acorr is not None:
-                ds, dc, nr = acorr
-                corr_rows += 2 * nr
-                corr_touched += nr
-                corr_calls += 2
-            jcorr = _join_correction(be, bf, bj, df, dj, c_eff, bounds)
-            dj_sums = None
-            if jcorr is not None:
-                dj_sums, nr = jcorr
-                corr_rows += 2 * nr
-                corr_touched += nr
-                corr_calls += 2
-            fused_j = [(s + (ds[i] if ds else 0), c + (dc[i] if dc else 0),
-                        j + (dj_sums[i] if dj_sums else 0))
-                       for i, (s, c, j) in enumerate(fused_j)]
+            corr_a, nr_a = _corr_stack(bf, ba, df, da)
+            corr_j, nr_j = _join_corr_stack(bf, bj, df, dj, c_eff)
+            fused_j = be.filter_agg_join_delta_batch(fcol, acol, jcol_v,
+                                                     bounds, rc, corr_a,
+                                                     corr_j)
+            corr_rows += 2 * (nr_a + nr_j)
+            corr_touched += nr_a + nr_j
         else:
             fused_j = be.filter_agg_join_batch(fcol, acol, jcol_v, bounds)
         for q, scj in zip(joins, fused_j):
@@ -439,12 +427,13 @@ def run_query_group_dsm(
         out.append(result)
     if cost is not None:
         # launch amortization: one fused launch answers every join-free
-        # predicate in the group (for all islands at once), one fused
-        # scan+join launch answers every join predicate, and each delta
-        # correction pass adds its own (short) launches
+        # predicate in the group (for all islands at once) and one fused
+        # scan+join launch answers every join predicate — the delta
+        # corrections now ride INSIDE those launches (the backends' fused
+        # delta-batch entry points), so they add scan work
+        # (_correction_cost) but no launches of their own
         _launch_cost(cost, on_pim,
-                     (1 if no_join else 0) + (1 if joins else 0)
-                     + corr_calls)
+                     (1 if no_join else 0) + (1 if joins else 0))
         _correction_cost(cost, on_pim, corr_rows, corr_touched)
     return out
 

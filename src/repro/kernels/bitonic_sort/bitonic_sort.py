@@ -58,8 +58,29 @@ def _bitonic_network(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
+def _bitonic_merge_network(x: jnp.ndarray) -> jnp.ndarray:
+    """Merge rows whose halves form a bitonic sequence into sorted rows.
+
+    With A sorted ascending and B appended reversed, each row is bitonic,
+    so only the final log2(width) half-cleaner stages of the full network
+    are needed. Bit log2(width) of every in-row index is 0, so every stage
+    runs all-ascending — the device half of the fused apply pipeline's
+    dictionary merge.
+    """
+    width = x.shape[-1]
+    log_n = int(math.log2(width))
+    assert (1 << log_n) == width, "width must be a power of two"
+    for j in range(log_n - 1, -1, -1):
+        x = _compare_exchange(x, log_n, j)
+    return x
+
+
 def _sort_kernel(x_ref, o_ref):
     o_ref[...] = _bitonic_network(x_ref[...])
+
+
+def _merge_kernel(x_ref, o_ref):
+    o_ref[...] = _bitonic_merge_network(x_ref[...])
 
 
 # Jitted whole-array network (CPU fast path). The network is row-
@@ -81,6 +102,26 @@ def bitonic_sort_rows(x: jnp.ndarray, block_rows: int = 8,
     assert rows % block_rows == 0, (rows, block_rows)
     return pl.pallas_call(
         _sort_kernel,
+        grid=(rows // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, width), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, width), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, width), x.dtype),
+        interpret=interpret,
+    )(x)
+
+
+@functools.partial(instrumented_jit, static_argnames=("block_rows", "interpret"))
+def bitonic_merge_rows(x: jnp.ndarray, block_rows: int = 8,
+                       interpret: bool = True) -> jnp.ndarray:
+    """Row-wise bitonic MERGE of (rows, width) bitonic rows (asc ++ desc).
+
+    The final log2(width) half-cleaner stages only — the merge unit of the
+    fused apply pipeline. Same tiling budget as `bitonic_sort_rows`.
+    """
+    rows, width = x.shape
+    assert rows % block_rows == 0, (rows, block_rows)
+    return pl.pallas_call(
+        _merge_kernel,
         grid=(rows // block_rows,),
         in_specs=[pl.BlockSpec((block_rows, width), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_rows, width), lambda i: (i, 0)),

@@ -110,6 +110,47 @@ def next_pow2(n: int) -> int:
     return p
 
 
+def width_bucket(n: int, floor: int = 8) -> int:
+    """Pow2 shape bucket with a SMALL floor for tiny widths.
+
+    The old call sites floored padded widths at 64/128, so an 8-wide
+    dictionary merge traced (and ran) a 128-lane sort network. Ship
+    batches are dominated by tiny dictionary deltas, so the dedicated
+    8/16/32 buckets matter: shorter unrolled compare-exchange networks
+    and no cross-bucket retraces when a width crosses 64.
+    """
+    return max(floor, next_pow2(max(int(n), 1)))
+
+
+# ---------------------------------------------------------------------------
+# Buffer donation policy
+# ---------------------------------------------------------------------------
+#
+# The fused pipelines donate their freshly-built per-call input stacks
+# (donate_argnums) so XLA can reuse the buffers in place. XLA:CPU ignores
+# donation and warns per call, so the donated jit variants are only
+# selected in "compiled" mode — unless a test forces donation on to
+# exercise the donated code path on CPU (the donated-input-reuse guard).
+# NEVER route pinned snapshot or ShardedView buffers through a donated
+# argument: donation invalidates the caller's copy, and pinned views are
+# read again on later rounds.
+
+_donation_override: bool | None = None
+
+
+def set_donation_override(value: bool | None) -> None:
+    """Force donated jit variants on/off (None = follow kernel_mode)."""
+    global _donation_override
+    _donation_override = value
+
+
+def donation_enabled() -> bool:
+    """Whether fused entry points should pick their donated jit variant."""
+    if _donation_override is not None:
+        return _donation_override
+    return kernel_mode() == "compiled"
+
+
 # ---------------------------------------------------------------------------
 # Mesh-placement reduction lanes (core/backend.MeshBackend)
 # ---------------------------------------------------------------------------

@@ -1,5 +1,8 @@
-from repro.kernels.dict_ops.ops import (scan_filter_agg,
+from repro.kernels.dict_ops.ops import (apply_pipeline_batch,
+                                        scan_filter_agg,
                                         scan_filter_agg_batch,
+                                        scan_filter_agg_group,
+                                        scan_filter_agg_group_sharded,
                                         scan_filter_agg_mesh,
                                         scan_filter_agg_sharded,
-                                        scan_values_agg)
+                                        scan_values_agg, scan_values_delta)

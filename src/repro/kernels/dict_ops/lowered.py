@@ -15,7 +15,9 @@ import functools
 
 import jax.numpy as jnp
 
-from repro.kernels.common import instrumented_jit
+from repro.kernels.bitonic_sort.bitonic_sort import (_bitonic_merge_network,
+                                                     _bitonic_network)
+from repro.kernels.common import instrumented_jit, next_pow2
 
 
 def scan_exact_partials(fcodes, acodes, valid, dictionary, bounds, block):
@@ -144,6 +146,119 @@ def scan_values_lowered(fvals, avals, valid, bounds, block: int = 4096):
     bucketing happens there to bound the traced shapes)."""
     return scan_values_partials(fvals, avals, valid.astype(jnp.int32),
                                 bounds, block)
+
+
+# ---------------------------------------------------------------------------
+# Fused pipelines (PR 9): whole query groups and whole ship-batch apply
+# stages as ONE traced program each. The bodies below compose the partial
+# helpers above so a group's base scan and its delta-overlay corrections
+# (or a ship batch's sort + dictionary merge) share a single jitted
+# dispatch instead of a chain of per-kernel launches.
+# ---------------------------------------------------------------------------
+
+def scan_group_partials(fcodes, acodes, valid, dictionary, bounds, corr,
+                        vbounds, block, cblock):
+    """Traceable body: one no-join query group INCLUDING its delta
+    correction. `corr` is a (6, nr) int32 stack of
+    [fv_eff, av_eff, valid_eff, fv_base, av_base, valid_base] overlay rows
+    (host pow2-padded, valid=0 pad); `bounds` are EXCLUSIVE code ranges for
+    the base scan, `vbounds` INCLUSIVE raw-value ranges for the correction
+    scans. Returns 12 partial arrays: base + effective + base-state, each a
+    (lo16, hi16, cnt, neg) quadruple the host folds as base + eff - state.
+    """
+    fcodes, acodes, v = pad_rows_flat(fcodes, acodes, valid, block)
+    base = scan_exact_partials(fcodes, acodes, v, dictionary, bounds, block)
+    eff = scan_values_partials(corr[0], corr[1], corr[2], vbounds, cblock)
+    neg = scan_values_partials(corr[3], corr[4], corr[5], vbounds, cblock)
+    return base + eff + neg
+
+
+def scan_group_sharded_partials(fcodes, acodes, valid, dictionary, bounds,
+                                corr, vbounds, block, cblock):
+    """Sharded sibling of `scan_group_partials`: the base scan runs over the
+    stacked (n_shards, width) resident shards, the correction scans over the
+    flat overlay stack (overlays are global, not sharded). Returns 4 sharded
+    (S, nb, Q) partials followed by 8 flat (nb, Q) correction partials."""
+    fcodes, acodes, v = pad_rows_sharded(fcodes, acodes, valid, block)
+    base = scan_exact_sharded_partials(fcodes, acodes, v, dictionary, bounds,
+                                       block)
+    eff = scan_values_partials(corr[0], corr[1], corr[2], vbounds, cblock)
+    neg = scan_values_partials(corr[3], corr[4], corr[5], vbounds, cblock)
+    return base + eff + neg
+
+
+def scan_values_delta_partials(corr, vbounds, cblock):
+    """Traceable body: effective + base-state correction scans of one
+    (6, nr) overlay stack in a single program — 8 partial arrays."""
+    eff = scan_values_partials(corr[0], corr[1], corr[2], vbounds, cblock)
+    neg = scan_values_partials(corr[3], corr[4], corr[5], vbounds, cblock)
+    return eff + neg
+
+
+def apply_sort_merge(old, vals):
+    """Traceable body: the ship-batch apply pipeline's device half.
+
+    `old` is (rows, w_old) int32 — each column's OLD dictionary (sorted
+    ascending, int32.max sentinel pad); `vals` is (rows, w_val) raw update
+    values (sentinel pad). The widths are INDEPENDENT pow2 buckets, so the
+    sort network runs at the (usually much smaller) update-value width
+    instead of being dragged up to the dictionary width. Each row sorts its
+    values with the full bitonic network, then merges them with the old
+    dictionary through the half-cleaner merge network: ascending old row ++
+    all-sentinel gap ++ reversed sorted values is ascending-then-descending
+    — bitonic — at the next pow2 of (w_old + w_val), which the merge
+    network sorts in log2(w_merge) stages. Returns (sorted_vals
+    (rows, w_val), merged (rows, w_merge)); sentinels sort to the tail of
+    both, so the host slices real entries by length.
+    """
+    rows, w_old = old.shape
+    w_val = vals.shape[1]
+    svals = _bitonic_network(vals)
+    w_merge = next_pow2(w_old + w_val)
+    parts = [old]
+    gap = w_merge - w_old - w_val
+    if gap:
+        parts.append(jnp.full((rows, gap), jnp.iinfo(jnp.int32).max,
+                              dtype=old.dtype))
+    parts.append(svals[:, ::-1])
+    return svals, _bitonic_merge_network(jnp.concatenate(parts, axis=1))
+
+
+# Jitted fused entry points. Each has a donated twin: the *_donated variant
+# gives XLA the freshly-built per-call input stack (the correction overlay
+# stack / the apply stack) for in-place reuse. Selection happens in the ops
+# wrappers via common.donation_enabled() — donated only in compiled mode,
+# where XLA honors donation (XLA:CPU ignores it and warns). Both twins share
+# one trace-count label per pipeline, so the zero-retrace accounting is
+# donation-agnostic.
+
+scan_group_lowered = functools.partial(instrumented_jit,
+                                       static_argnames=("block", "cblock"),
+                                       name="scan_group_lowered")(
+    scan_group_partials)
+scan_group_lowered_donated = functools.partial(
+    instrumented_jit, static_argnames=("block", "cblock"),
+    donate_argnums=(5,), name="scan_group_lowered")(scan_group_partials)
+
+scan_group_sharded_lowered = functools.partial(
+    instrumented_jit, static_argnames=("block", "cblock"),
+    name="scan_group_sharded_lowered")(scan_group_sharded_partials)
+scan_group_sharded_lowered_donated = functools.partial(
+    instrumented_jit, static_argnames=("block", "cblock"),
+    donate_argnums=(5,), name="scan_group_sharded_lowered")(
+    scan_group_sharded_partials)
+
+scan_values_delta_lowered = functools.partial(
+    instrumented_jit, static_argnames=("cblock",),
+    name="scan_values_delta_lowered")(scan_values_delta_partials)
+scan_values_delta_lowered_donated = functools.partial(
+    instrumented_jit, static_argnames=("cblock",), donate_argnums=(0,),
+    name="scan_values_delta_lowered")(scan_values_delta_partials)
+
+apply_pipeline_lowered = instrumented_jit(
+    apply_sort_merge, name="apply_pipeline_lowered")
+apply_pipeline_lowered_donated = instrumented_jit(
+    apply_sort_merge, donate_argnums=(1,), name="apply_pipeline_lowered")
 
 
 @functools.partial(instrumented_jit, static_argnames=("block",))

@@ -25,17 +25,28 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (ISLAND_AXIS, island_spec,
                                         replicated_spec)
-from repro.kernels.common import (instrumented_jit, kernel_mode,
-                                  lanes_to_int64, next_pow2, psum_split16)
+from repro.kernels.bitonic_sort.bitonic_sort import (bitonic_merge_rows,
+                                                     bitonic_sort_rows)
+from repro.kernels.common import (donation_enabled, instrumented_jit,
+                                  kernel_mode, lanes_to_int64, next_pow2,
+                                  psum_split16, width_bucket)
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
                                              scan_filter_agg_kernel,
                                              scan_filter_agg_sharded_kernel,
                                              scan_values_agg_exact_kernel)
-from repro.kernels.dict_ops.lowered import (pad_rows_sharded,
+from repro.kernels.dict_ops.lowered import (apply_pipeline_lowered,
+                                            apply_pipeline_lowered_donated,
+                                            pad_rows_flat, pad_rows_sharded,
                                             scan_exact_lowered,
                                             scan_exact_sharded_lowered,
                                             scan_exact_sharded_partials,
                                             scan_float_lowered,
+                                            scan_group_lowered,
+                                            scan_group_lowered_donated,
+                                            scan_group_sharded_lowered,
+                                            scan_group_sharded_lowered_donated,
+                                            scan_values_delta_lowered,
+                                            scan_values_delta_lowered_donated,
                                             scan_values_lowered)
 from repro.kernels.dict_ops.ref import (scan_filter_agg_batch_ref,
                                         scan_filter_agg_ref,
@@ -54,7 +65,10 @@ def pad_dictionary_pow2(dictionary):
     if not kpad:
         return dictionary
     if isinstance(dictionary, np.ndarray):
-        return np.pad(dictionary, (0, kpad))
+        # hot path: a plain alloc+copy beats np.pad's generic machinery
+        out = np.zeros(k + kpad, dtype=dictionary.dtype)
+        out[:k] = dictionary
+        return out
     return jnp.pad(dictionary, (0, kpad))
 
 
@@ -247,6 +261,258 @@ def scan_values_agg(fvals, avals, valid, bounds, use_pallas: bool = True,
             jnp.asarray(barr), block=block, interpret=(mode == "interpret"))
     sums, counts = assemble_exact(*parts, axis=0)
     return [(int(s), int(c)) for s, c in zip(sums[:nq], counts[:nq])]
+
+
+# ---------------------------------------------------------------------------
+# Fused pipelines (PR 9): single-launch query groups and ship-batch apply
+# ---------------------------------------------------------------------------
+#
+# Pallas-mode fused bodies: same composition as the lowered twins in
+# lowered.py, but each constituent scan runs through its pallas_call kernel
+# inside ONE outer traced program (the established hash_probe join-scan
+# idiom). The *_donated twins donate the per-call correction/apply stacks —
+# selected via common.donation_enabled(); see the donation-policy note in
+# kernels/common.py.
+
+def _scan_group_kernel_body(fcodes, acodes, valid, dictionary, bounds, corr,
+                            vbounds, block, cblock, interpret):
+    fc, ac, v = pad_rows_flat(fcodes, acodes, valid, block)
+    base = scan_filter_agg_exact_kernel(fc, ac, v, dictionary, bounds,
+                                        block=block, interpret=interpret)
+    eff = scan_values_agg_exact_kernel(corr[0], corr[1], corr[2], vbounds,
+                                       block=cblock, interpret=interpret)
+    neg = scan_values_agg_exact_kernel(corr[3], corr[4], corr[5], vbounds,
+                                       block=cblock, interpret=interpret)
+    return base + eff + neg
+
+
+def _scan_group_sharded_kernel_body(fcodes, acodes, valid, dictionary,
+                                    bounds, corr, vbounds, block, cblock,
+                                    interpret):
+    fc, ac, v = pad_rows_sharded(fcodes, acodes, valid, block)
+    base = scan_filter_agg_sharded_kernel(fc, ac, v, dictionary, bounds,
+                                          block=block, interpret=interpret)
+    eff = scan_values_agg_exact_kernel(corr[0], corr[1], corr[2], vbounds,
+                                       block=cblock, interpret=interpret)
+    neg = scan_values_agg_exact_kernel(corr[3], corr[4], corr[5], vbounds,
+                                       block=cblock, interpret=interpret)
+    return base + eff + neg
+
+
+def _scan_values_delta_kernel_body(corr, vbounds, cblock, interpret):
+    eff = scan_values_agg_exact_kernel(corr[0], corr[1], corr[2], vbounds,
+                                       block=cblock, interpret=interpret)
+    neg = scan_values_agg_exact_kernel(corr[3], corr[4], corr[5], vbounds,
+                                       block=cblock, interpret=interpret)
+    return eff + neg
+
+
+def _apply_pipeline_kernel_body(old, vals, interpret):
+    rows, w_old = old.shape
+    w_val = vals.shape[1]
+    svals = bitonic_sort_rows(vals, block_rows=8, interpret=interpret)
+    w_merge = next_pow2(w_old + w_val)
+    parts = [old]
+    gap = w_merge - w_old - w_val
+    if gap:
+        parts.append(jnp.full((rows, gap), _I32_MAX, dtype=old.dtype))
+    parts.append(svals[:, ::-1])
+    merged = bitonic_merge_rows(jnp.concatenate(parts, axis=1),
+                                block_rows=8, interpret=interpret)
+    return svals, merged
+
+
+_GROUP_STATICS = ("block", "cblock", "interpret")
+_scan_group_kernel = functools.partial(
+    instrumented_jit, static_argnames=_GROUP_STATICS,
+    name="scan_group_kernel")(_scan_group_kernel_body)
+_scan_group_kernel_donated = functools.partial(
+    instrumented_jit, static_argnames=_GROUP_STATICS, donate_argnums=(5,),
+    name="scan_group_kernel")(_scan_group_kernel_body)
+_scan_group_sharded_kernel = functools.partial(
+    instrumented_jit, static_argnames=_GROUP_STATICS,
+    name="scan_group_sharded_kernel")(_scan_group_sharded_kernel_body)
+_scan_group_sharded_kernel_donated = functools.partial(
+    instrumented_jit, static_argnames=_GROUP_STATICS, donate_argnums=(5,),
+    name="scan_group_sharded_kernel")(_scan_group_sharded_kernel_body)
+_scan_values_delta_kernel = functools.partial(
+    instrumented_jit, static_argnames=("cblock", "interpret"),
+    name="scan_values_delta_kernel")(_scan_values_delta_kernel_body)
+_scan_values_delta_kernel_donated = functools.partial(
+    instrumented_jit, static_argnames=("cblock", "interpret"),
+    donate_argnums=(0,), name="scan_values_delta_kernel")(
+    _scan_values_delta_kernel_body)
+_apply_pipeline_kernel = functools.partial(
+    instrumented_jit, static_argnames=("interpret",),
+    name="apply_pipeline_kernel")(_apply_pipeline_kernel_body)
+_apply_pipeline_kernel_donated = functools.partial(
+    instrumented_jit, static_argnames=("interpret",), donate_argnums=(1,),
+    name="apply_pipeline_kernel")(_apply_pipeline_kernel_body)
+
+
+def _padded_corr(corr):
+    """Host pow2-bucket pad of a (6, nr) int32 correction stack.
+
+    Overlay sizes vary per round, so padding happens on the host with
+    `width_bucket` (floor 8) to bound the traced shapes; the padded lanes
+    carry valid=0, the scan identity. Returns (stack, cblock). A freshly
+    padded stack is safe to donate; when nr already sits on its bucket the
+    CALLER's array flows through — engine builds correction stacks fresh
+    per group, so that is safe too (and documented on the backend hooks).
+    """
+    corr = (np.zeros((6, 8), dtype=np.int32) if corr is None
+            else np.asarray(corr, dtype=np.int32))
+    nr = corr.shape[1]
+    w = width_bucket(nr)
+    if w != nr:
+        corr = np.pad(corr, ((0, 0), (0, w - nr)))
+    return corr, min(4096, w)
+
+
+def scan_filter_agg_group(fcodes, acodes, valid, dictionary, code_bounds,
+                          corr, vbounds, block: int = 4096):
+    """One no-join query group — base scan PLUS delta correction — in ONE
+    traced launch.
+
+    code_bounds: Q EXCLUSIVE code ranges for the base columns; vbounds: the
+    same Q predicates as INCLUSIVE raw-value ranges for the overlay
+    correction scans; corr: (6, nr) int32 stack of [fv_eff, av_eff,
+    valid_eff, fv_base, av_base, valid_base] overlay rows (None = no
+    overlay). Returns [(sum, count)] exact python ints with the correction
+    folded: base + effective-state - base-state, bit-identical to the
+    compositional scan_filter_agg_batch + two scan_values_agg passes.
+    """
+    (n,) = fcodes.shape
+    nq = len(code_bounds)
+    if nq == 0:
+        return []
+    if n == 0:
+        return [(0, 0)] * nq
+    cstack, cblock = _padded_corr(corr)
+    barr = pad_bounds_pow2(code_bounds)
+    varr = pad_bounds_pow2(vbounds)
+    dpad = pad_dictionary_pow2(dictionary)
+    mode = kernel_mode()
+    if mode == "lowered":
+        fn = (scan_group_lowered_donated if donation_enabled()
+              else scan_group_lowered)
+        parts = fn(fcodes, acodes, valid, dpad, barr, cstack, varr,
+                   block=block, cblock=cblock)
+    else:
+        fn = (_scan_group_kernel_donated if donation_enabled()
+              else _scan_group_kernel)
+        parts = fn(fcodes, acodes, valid, dpad, barr, cstack, varr,
+                   block=block, cblock=cblock,
+                   interpret=(mode == "interpret"))
+    bs, bc = assemble_exact(*parts[0:4], axis=0)
+    es, ec = assemble_exact(*parts[4:8], axis=0)
+    gs, gc = assemble_exact(*parts[8:12], axis=0)
+    return [(int(bs[q] + es[q] - gs[q]), int(bc[q] + ec[q] - gc[q]))
+            for q in range(nq)]
+
+
+def scan_filter_agg_group_sharded(fcodes, acodes, valid, dictionary,
+                                  code_bounds, corr, vbounds,
+                                  block: int = 4096):
+    """Sharded sibling of `scan_filter_agg_group`: the base scan runs over
+    the stacked (n_shards, width) resident shards, the correction scans
+    over the flat (global) overlay stack, all in ONE launch. Returns the
+    already-reduced [(sum, count)] — cross-shard totals with the
+    correction folded."""
+    n_shards, width = fcodes.shape
+    nq = len(code_bounds)
+    if nq == 0:
+        return []
+    if width == 0:
+        return [(0, 0)] * nq
+    block = min(block, next_pow2(width))
+    cstack, cblock = _padded_corr(corr)
+    barr = pad_bounds_pow2(code_bounds)
+    varr = pad_bounds_pow2(vbounds)
+    dpad = pad_dictionary_pow2(dictionary)
+    mode = kernel_mode()
+    if mode == "lowered":
+        fn = (scan_group_sharded_lowered_donated if donation_enabled()
+              else scan_group_sharded_lowered)
+        parts = fn(fcodes, acodes, valid, dpad, barr, cstack, varr,
+                   block=block, cblock=cblock)
+    else:
+        fn = (_scan_group_sharded_kernel_donated if donation_enabled()
+              else _scan_group_sharded_kernel)
+        parts = fn(fcodes, acodes, valid, dpad, barr, cstack, varr,
+                   block=block, cblock=cblock,
+                   interpret=(mode == "interpret"))
+    bs, bc = assemble_exact(*parts[0:4], axis=1)    # (n_shards, Q)
+    es, ec = assemble_exact(*parts[4:8], axis=0)    # (Q,)
+    gs, gc = assemble_exact(*parts[8:12], axis=0)
+    sums = bs.sum(axis=0) + es - gs
+    counts = bc.sum(axis=0) + ec - gc
+    return [(int(sums[q]), int(counts[q])) for q in range(nq)]
+
+
+def scan_values_delta(corr, vbounds, use_pallas: bool = True):
+    """Effective-minus-base correction scan of one (6, nr) overlay stack in
+    ONE launch: returns [(d_sum, d_count)] — the per-query aggregate deltas
+    the engine folds into a base scan. Bit-identical to two
+    `scan_values_agg` passes subtracted on the host."""
+    nq = len(vbounds)
+    if nq == 0:
+        return []
+    if not use_pallas:
+        eff = scan_values_agg_ref(corr[0], corr[1], corr[2], vbounds)
+        neg = scan_values_agg_ref(corr[3], corr[4], corr[5], vbounds)
+        return [(e[0] - b[0], e[1] - b[1]) for e, b in zip(eff, neg)]
+    cstack, cblock = _padded_corr(corr)
+    varr = pad_bounds_pow2(vbounds)
+    mode = kernel_mode()
+    if mode == "lowered":
+        fn = (scan_values_delta_lowered_donated if donation_enabled()
+              else scan_values_delta_lowered)
+        parts = fn(cstack, varr, cblock=cblock)
+    else:
+        fn = (_scan_values_delta_kernel_donated if donation_enabled()
+              else _scan_values_delta_kernel)
+        parts = fn(cstack, varr, cblock=cblock,
+                   interpret=(mode == "interpret"))
+    es, ec = assemble_exact(*parts[0:4], axis=0)
+    gs, gc = assemble_exact(*parts[4:8], axis=0)
+    return [(int(es[q] - gs[q]), int(ec[q] - gc[q])) for q in range(nq)]
+
+
+def apply_pipeline_batch(old_rows, val_rows):
+    """Fused ship-batch dictionary pipeline: ONE launch for a whole batch.
+
+    old_rows: (rows, w_old) int32 — each row one column's OLD dictionary,
+    sorted ascending, int32.max sentinel pad. val_rows: (rows, w_val) raw
+    update values, sentinel pad. The two widths are independent pow2
+    buckets (callers use `common.width_bucket`), so the sort network runs
+    at the (typically much smaller) value width instead of being dragged
+    up to the dictionary width. Per row: bitonic-sort the values, then
+    half-cleaner-merge them with the old dictionary (ascending old ++
+    sentinel gap ++ reversed sorted values is bitonic at
+    next_pow2(w_old + w_val)). Returns host (sorted_vals (rows, w_val),
+    merged (rows, next_pow2(w_old + w_val))); sentinels sort to the
+    tails, callers slice real entries by length. Sentinel-valued REAL
+    entries are the caller's problem: columns whose values reach
+    int32.max must take the compositional fallback.
+    """
+    rows, _ = old_rows.shape
+    mode = kernel_mode()
+    if mode == "lowered":
+        fn = (apply_pipeline_lowered_donated if donation_enabled()
+              else apply_pipeline_lowered)
+        svals, merged = fn(old_rows, val_rows)
+    else:
+        pad = (-rows) % 8      # pallas row tiling; all-sentinel pad rows
+        old, vals = old_rows, val_rows
+        if pad:
+            old = np.pad(old, ((0, pad), (0, 0)), constant_values=_I32_MAX)
+            vals = np.pad(vals, ((0, pad), (0, 0)), constant_values=_I32_MAX)
+        fn = (_apply_pipeline_kernel_donated if donation_enabled()
+              else _apply_pipeline_kernel)
+        svals, merged = fn(old, vals, interpret=(mode == "interpret"))
+        svals, merged = svals[:rows], merged[:rows]
+    return np.asarray(svals), np.asarray(merged)
 
 
 # ---------------------------------------------------------------------------

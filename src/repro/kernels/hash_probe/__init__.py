@@ -2,5 +2,6 @@ from repro.kernels.hash_probe.hash_probe import EMPTY as EMPTY_KEY
 from repro.kernels.hash_probe.ops import (HashTable, build_table,
                                           probe, probe_sharded,
                                           scan_filter_agg_join,
+                                          scan_filter_agg_join_group,
                                           scan_filter_agg_join_mesh,
                                           scan_filter_agg_join_sharded)

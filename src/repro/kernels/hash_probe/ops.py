@@ -25,13 +25,16 @@ from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (ISLAND_AXIS, island_spec,
                                         replicated_spec)
-from repro.kernels.common import (instrumented_jit, kernel_mode, next_pow2,
-                                  psum_split16)
+from repro.kernels.common import (donation_enabled, instrumented_jit,
+                                  kernel_mode, next_pow2, psum_split16)
 from repro.kernels.dict_ops.dict_ops import (scan_filter_agg_exact_kernel,
-                                             scan_filter_agg_sharded_kernel)
+                                             scan_filter_agg_sharded_kernel,
+                                             scan_values_agg_exact_kernel)
 from repro.kernels.dict_ops.lowered import (scan_exact_partials,
-                                            scan_exact_sharded_partials)
-from repro.kernels.dict_ops.ops import (assemble_exact, assemble_psum_lanes,
+                                            scan_exact_sharded_partials,
+                                            scan_values_partials)
+from repro.kernels.dict_ops.ops import (_padded_corr, assemble_exact,
+                                        assemble_psum_lanes,
                                         pad_bounds_pow2,
                                         pad_dictionary_pow2)
 from repro.kernels.hash_probe.hash_probe import (EMPTY, probe_table,
@@ -310,6 +313,118 @@ def scan_filter_agg_join_sharded(fcodes, acodes, jcodes, fvalid, jvalid,
     jsums, _ = assemble_exact(*parts[4:], axis=1)
     return [[(int(sums[s, q]), int(counts[s, q]), int(jsums[s, q]))
              for q in range(nq)] for s in range(n_shards)]
+
+
+# ---------------------------------------------------------------------------
+# Fused join-group scan WITH delta corrections (PR 9): the whole join query
+# group — aggregate scan, self-join scan, and BOTH overlay corrections
+# (aggregate rows and join-histogram weights) — as one traced program.
+# ---------------------------------------------------------------------------
+
+def _join_group_body(fcodes, acodes, jcodes, fvalid, jvalid, adict, rcount,
+                     bounds, corr_a, corr_j, vbounds, block, cblock_a,
+                     cblock_j):
+    fcodes, acodes, jcodes, fv, jv = _pad_join_rows(
+        fcodes, acodes, jcodes, fvalid, jvalid, block)
+    agg = scan_exact_partials(fcodes, acodes, fv, adict, bounds, block)
+    join = scan_exact_partials(fcodes, jcodes, fv * jv, rcount,
+                               bounds, block)
+    ae = scan_values_partials(corr_a[0], corr_a[1], corr_a[2], vbounds,
+                              cblock_a)
+    ab = scan_values_partials(corr_a[3], corr_a[4], corr_a[5], vbounds,
+                              cblock_a)
+    je = scan_values_partials(corr_j[0], corr_j[1], corr_j[2], vbounds,
+                              cblock_j)
+    jb = scan_values_partials(corr_j[3], corr_j[4], corr_j[5], vbounds,
+                              cblock_j)
+    return agg + join + ae + ab + je + jb
+
+
+def _join_group_pallas_body(fcodes, acodes, jcodes, fvalid, jvalid, adict,
+                            rcount, bounds, corr_a, corr_j, vbounds, block,
+                            cblock_a, cblock_j, interpret):
+    fcodes, acodes, jcodes, fv, jv = _pad_join_rows(
+        fcodes, acodes, jcodes, fvalid, jvalid, block)
+    agg = scan_filter_agg_exact_kernel(fcodes, acodes, fv, adict, bounds,
+                                       block=block, interpret=interpret)
+    join = scan_filter_agg_exact_kernel(fcodes, jcodes, fv * jv, rcount,
+                                        bounds, block=block,
+                                        interpret=interpret)
+    ae = scan_values_agg_exact_kernel(corr_a[0], corr_a[1], corr_a[2],
+                                      vbounds, block=cblock_a,
+                                      interpret=interpret)
+    ab = scan_values_agg_exact_kernel(corr_a[3], corr_a[4], corr_a[5],
+                                      vbounds, block=cblock_a,
+                                      interpret=interpret)
+    je = scan_values_agg_exact_kernel(corr_j[0], corr_j[1], corr_j[2],
+                                      vbounds, block=cblock_j,
+                                      interpret=interpret)
+    jb = scan_values_agg_exact_kernel(corr_j[3], corr_j[4], corr_j[5],
+                                      vbounds, block=cblock_j,
+                                      interpret=interpret)
+    return agg + join + ae + ab + je + jb
+
+
+_JG_STATICS = ("block", "cblock_a", "cblock_j")
+_join_group_lowered = functools.partial(
+    instrumented_jit, static_argnames=_JG_STATICS,
+    name="join_group_lowered")(_join_group_body)
+_join_group_lowered_donated = functools.partial(
+    instrumented_jit, static_argnames=_JG_STATICS, donate_argnums=(8, 9),
+    name="join_group_lowered")(_join_group_body)
+_join_group_pallas = functools.partial(
+    instrumented_jit, static_argnames=_JG_STATICS + ("interpret",),
+    name="join_group_kernel")(_join_group_pallas_body)
+_join_group_pallas_donated = functools.partial(
+    instrumented_jit, static_argnames=_JG_STATICS + ("interpret",),
+    donate_argnums=(8, 9), name="join_group_kernel")(_join_group_pallas_body)
+
+
+def scan_filter_agg_join_group(fcodes, acodes, jcodes, fvalid, jvalid,
+                               adict, rcount, code_bounds, corr_a, corr_j,
+                               vbounds, block: int = 4096):
+    """One join-query group — base aggregate + self-join scans PLUS both
+    delta corrections — in ONE traced launch.
+
+    `corr_a` is the (6, nr) aggregate correction stack (as
+    `dict_ops.scan_filter_agg_group`); `corr_j` carries [fv_eff, w_eff,
+    valid_eff, fv_base, w_base, valid_base] where the w lanes are the
+    effective join-histogram weights of each overlay row (int32 row counts,
+    so the same split accumulator is exact). Either may be None. `rcount`
+    must already be the EFFECTIVE (delta-corrected) histogram. Returns
+    [(sum, count, join_count)] with the corrections folded — bit-identical
+    to the compositional base scan + four scan_values_agg passes.
+    """
+    (n,) = fcodes.shape
+    nq = len(code_bounds)
+    if nq == 0:
+        return []
+    if n == 0:
+        return [(0, 0, 0)] * nq
+    ca, cblock_a = _padded_corr(corr_a)
+    cj, cblock_j = _padded_corr(corr_j)
+    args = (fcodes, acodes, jcodes, fvalid, jvalid,
+            pad_dictionary_pow2(adict), pad_dictionary_pow2(rcount),
+            pad_bounds_pow2(code_bounds), ca, cj, pad_bounds_pow2(vbounds))
+    mode = kernel_mode()
+    if mode == "lowered":
+        fn = (_join_group_lowered_donated if donation_enabled()
+              else _join_group_lowered)
+        parts = fn(*args, block=block, cblock_a=cblock_a, cblock_j=cblock_j)
+    else:
+        fn = (_join_group_pallas_donated if donation_enabled()
+              else _join_group_pallas)
+        parts = fn(*args, block=block, cblock_a=cblock_a, cblock_j=cblock_j,
+                   interpret=(mode == "interpret"))
+    sums, counts = assemble_exact(*parts[0:4], axis=0)
+    jsums, _ = assemble_exact(*parts[4:8], axis=0)
+    aes, aec = assemble_exact(*parts[8:12], axis=0)
+    abs_, abc = assemble_exact(*parts[12:16], axis=0)
+    jes, _ = assemble_exact(*parts[16:20], axis=0)
+    jbs, _ = assemble_exact(*parts[20:24], axis=0)
+    return [(int(sums[q] + aes[q] - abs_[q]),
+             int(counts[q] + aec[q] - abc[q]),
+             int(jsums[q] + jes[q] - jbs[q])) for q in range(nq)]
 
 
 @functools.lru_cache(maxsize=None)

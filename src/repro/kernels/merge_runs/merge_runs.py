@@ -130,22 +130,3 @@ def _merge_lanes_body(lanes):
 
 merge_lanes_lowered = instrumented_jit(
     _merge_lanes_body, name="merge_lanes_lowered")
-
-
-def _tournament_body(lanes):
-    """Whole K-way tournament in ONE traced call: lanes is (3, K, W) —
-    the hi/lo/idx lanes of K sentinel-padded runs (K a power of two).
-    Each round merges adjacent run pairs as independent ROWS of one
-    merge-network evaluation (the network is row-independent), halving
-    the run count and doubling the width; log2(K) rounds replace the
-    log2(K)-deep tree of separate pairwise dispatches. Returns the
-    (3, K*W) merged lanes (sentinels sort to the tail)."""
-    hi, lo, idx = lanes[0], lanes[1], lanes[2]
-    while hi.shape[0] > 1:
-        hi, lo, idx = _merge_body(hi[0::2], lo[0::2], idx[0::2],
-                                  hi[1::2], lo[1::2], idx[1::2])
-    return jnp.stack([hi[0], lo[0], idx[0]])
-
-
-merge_tournament_lowered = instrumented_jit(
-    _tournament_body, name="merge_tournament_lowered")

@@ -18,8 +18,7 @@ import jax.numpy as jnp
 from repro.kernels.common import kernel_mode, next_pow2
 from repro.kernels.merge_runs.merge_runs import (bitonic_merge_pair,
                                                  bitonic_merge_pair_donated,
-                                                 merge_lanes_lowered,
-                                                 merge_tournament_lowered)
+                                                 merge_lanes_lowered)
 from repro.kernels.merge_runs.ref import merge_pair_ref, merge_runs_ref
 
 _BIAS = np.int64(1) << np.int64(31)
@@ -138,7 +137,12 @@ def merge_sorted_runs(runs: list, use_pallas: bool = True):
                              for r in runs64):  # runs are ascending
         return merge_runs_ref(runs64)
     if kernel_mode() == "lowered":
-        return _merge_runs_fused(runs64, offsets)
+        # Measured on XLA:CPU the jitted comparator tournament loses to the
+        # host k-way merge at every run size (the dispatch alone costs ~10x
+        # the merge for ship-batch-sized logs, and numpy's argsort keeps
+        # winning well past 64k entries), so the lowered tier takes the
+        # exact host reference; interpret/compiled keep the kernel tree.
+        return merge_runs_ref(runs64)
     # kernel modes: pairwise tournament, one kernel dispatch per pair
     keyed = []
     for r, off in zip(runs64, offsets):
@@ -193,25 +197,3 @@ def merge_sorted_pairs(a_list, b_list, use_pallas: bool = True):
             for i in range(rows)]
 
 
-def _merge_runs_fused(runs64, offsets):
-    """Lowered-mode K-way merge: the entire tournament in ONE jitted
-    dispatch (merge_tournament_lowered). Runs are sentinel-padded to a
-    shared pow2 width and the run count to a pow2 (empty all-sentinel
-    runs), so traced shapes stay pow2-bucketed; the sentinels sort to the
-    tail and the exact total-length prefix is the merged result. Tie
-    order between equal keys may differ from the pairwise path, which is
-    unobservable: callers consume the merged key order and gather
-    payloads through the index, and equal keys gather equal entries."""
-    total = sum(r.shape[0] for r in runs64)
-    k = next_pow2(max(len(runs64), 1))
-    width = next_pow2(max(max(r.shape[0] for r in runs64), 128))
-    lanes = np.full((3, k, width), _I32_MAX, dtype=np.int32)
-    lanes[2] = -1
-    for t, (r, off) in enumerate(zip(runs64, offsets)):
-        n = r.shape[0]
-        hi, lo = _split64(r)
-        lanes[0, t, :n] = hi
-        lanes[1, t, :n] = lo
-        lanes[2, t, :n] = np.arange(n, dtype=np.int32) + np.int32(off)
-    out = np.asarray(merge_tournament_lowered(lanes))
-    return _join64(out[0, :total], out[1, :total]), out[2, :total]

@@ -10,13 +10,18 @@ from repro.kernels.snapshot_copy.ref import snapshot_copy_ref
 from repro.kernels.snapshot_copy.snapshot_copy import (snapshot_copy_kernel,
                                                        snapshot_copy_lowered)
 
+# Below this row count the XLA:CPU dispatch alone costs more than the whole
+# chunked copy, so the lowered tier does the exact select on the host.
+_HOST_ROWS_MAX = 1 << 16
+
 
 def snapshot_copy(src, prev, dirty, block: int = 8192,
                   use_pallas: bool = True):
     """Copy dirty chunks from src, carry clean chunks from prev.
 
     Accepts host numpy or device arrays; the lowered path pads and trims
-    in-trace so the warm call is one jitted dispatch (no eager device ops).
+    in-trace so the warm call is one jitted dispatch (no eager device ops),
+    and small columns skip the dispatch entirely (host select).
     """
     (n,) = src.shape
     n_chunks = (n + block - 1) // block
@@ -26,6 +31,9 @@ def snapshot_copy(src, prev, dirty, block: int = 8192,
     mode = kernel_mode()
     if mode == "lowered":
         d = np.asarray(dirty, dtype=np.int32)
+        if n <= _HOST_ROWS_MAX:
+            mask = np.repeat(d != 0, block)[:n]
+            return np.where(mask, np.asarray(src), np.asarray(prev))
         return snapshot_copy_lowered(src, prev, d, block=block)
     pad = n_chunks * block - n
     if pad:

@@ -163,14 +163,20 @@ def test_instrumented_jit_counts_traces_not_calls():
     assert common.kernel_trace_counts().get("unit_trace_probe", 0) == 0
 
 
-def test_steady_state_session_rounds_do_not_retrace(interpret_mode):
+@pytest.mark.parametrize("delta", [False, True], ids=["eager", "delta"])
+def test_steady_state_session_rounds_do_not_retrace(interpret_mode, delta):
     """After two warmup rounds on a value-stationary workload, later rounds
     must hit only compiled-cache entries: pow2 bucketing absorbs the
     per-round fluctuation in op counts, and dictionaries saturated on a
     fixed value pool stop crossing width buckets. (The default stream
     draws fresh values each write, so dictionaries grow forever and a
     re-trace per pow2 doubling is expected — that is the bucketing
-    contract, not a regression.)"""
+    contract, not a regression.) Covers both update planes so the fused
+    query-group and ship-batch apply entry points are held to the same
+    zero-retrace contract; ``RunResult.stats["traces"]`` is the per-session
+    ledger (``finish()`` snapshots and resets the process counters)."""
+    from repro.core.backend import counting_kernel_calls
+
     interpret_mode("auto")
     rng = np.random.default_rng(0)
     sch = schema.make_schema("t", 3, 4)
@@ -181,18 +187,77 @@ def test_steady_state_session_rounds_do_not_retrace(interpret_mode):
     pool = rng.choice(np.arange(0, 1 << 24, dtype=np.int32), size=8,
                       replace=False)
     stream.value = pool[stream.value % len(pool)]
+    if delta:
+        # the delta plane's correction stacks are keyed by touched-row
+        # count, so writes also recycle a fixed row pool: the overlay
+        # saturates (and pins its width bucket) inside round 0 instead of
+        # creeping toward the table size for several rounds
+        stream.row = stream.row % 100
     queries = engine.gen_queries(rng, 4, 3)  # recurring query batch
     n_rounds = 5
+    warmup_rounds = 2
+    # pin the update plane explicitly: the parametrization must not be
+    # overridden by a REPRO_DELTA=1 environment (the CI delta matrix row)
     session = HTAPSession(resolve_spec("Polynesia", backend="pallas",
-                                       n_shards=1), table)
+                                       n_shards=1, delta_store=delta), table)
     txn_chunks = split_stream(stream, n_rounds)
-    for r in range(n_rounds):
-        if r:
-            session.advance_round()
-        if r == 2:
-            common.reset_kernel_trace_counts()  # warmup over: rounds 0-1
-        session.execute(txn_chunks[r])
-        session.query_batch(queries)
-    res = session.finish()
+    with counting_kernel_calls() as counts:
+        for r in range(n_rounds):
+            if r:
+                session.advance_round()
+            if r == warmup_rounds:
+                common.reset_kernel_trace_counts()  # warmup over
+            session.execute(txn_chunks[r])
+            session.query_batch(queries)
+        res = session.finish()
     assert len(res.results) == n_rounds * len(queries)
-    assert common.total_kernel_traces() == 0, common.kernel_trace_counts()
+    # the fused single-launch pipelines actually ran (no silent fallback);
+    # the delta plane defers dictionary rebuilds to compaction (none due
+    # on this workload), so the fused apply assertion is the eager plane's
+    if delta:
+        assert (counts.get("scan_filter_agg_group", 0)
+                + counts.get("scan_filter_agg_join_group", 0)
+                + counts.get("scan_values_delta", 0)) > 0, counts
+    else:
+        assert counts.get("apply_pipeline_batch", 0) > 0, counts
+    assert sum(res.stats["traces"].values()) == 0, res.stats["traces"]
+
+
+def test_donation_override_never_changes_answers(interpret_mode):
+    """Hypothesis sweep: buffer donation is a pure allocation hint — with
+    donation forced on or off, every preset must produce bit-identical
+    answers on both update planes. Guards the donate_argnums wiring on the
+    fused query-group and apply pipelines (a donated buffer that was still
+    aliased somewhere would corrupt an answer, not just warn)."""
+    pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install .[test])")
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import htap
+
+    interpret_mode("auto")
+
+    @settings(max_examples=6, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           preset=st.sampled_from(["Polynesia", "MI+SW+HB", "PIM-Only"]),
+           delta=st.booleans())
+    def prop(seed, preset, delta):
+        rng = np.random.default_rng(seed)
+        sch = schema.make_schema("t", 3, 8)
+        table = schema.gen_table(rng, sch, 400)
+        stream = schema.gen_update_stream(rng, sch, 400, 600,
+                                          write_ratio=0.5)
+        queries = engine.gen_queries(rng, 3, 3)
+        results = []
+        for donate in (True, False):
+            common.set_donation_override(donate)
+            try:
+                results.append(htap.run(preset, table, stream, queries,
+                                        n_rounds=2, backend="pallas",
+                                        delta_store=delta))
+            finally:
+                common.set_donation_override(None)
+        assert results[0].results == results[1].results
+
+    prop()

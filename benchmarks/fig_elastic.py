@@ -1,0 +1,122 @@
+"""Elastic islands — modeled throughput before/after an online resize.
+
+Not a paper figure: Polynesia fixes its analytical island count at design
+time, but the island architecture scales the analytical side
+independently, and `core/elastic.py` makes that a runtime operation. This
+sweep drives one seeded workload three ways on the modeled timeline:
+
+  * static@1 — the whole run on one analytical island,
+  * static@4 — the whole run on four,
+  * elastic 1->4 — starts on one island, resizes to four after the first
+    round (rebalance priced as a ``reshard`` copy node on the
+    fixed-function lane).
+
+Answers must be bit-identical across all three (the partition is not
+observable). The throughput story the rows pin down:
+
+  * whole-run: static@4 >= elastic >= static@1 on modeled analytical
+    throughput — the elastic run blends the two static planes,
+  * per-segment: re-simulating the elastic run's timeline and grouping
+    query nodes by round shows the post-resize rounds answering at the
+    4-island rate while the pre-resize round stays at the 1-island rate —
+    i.e. the resize actually changes the modeled machine mid-run, not
+    just the label.
+
+The numpy backend keeps the sweep fast; the modeled plane is
+backend-invariant (ci_bench enforces that globally).
+
+Standalone: python -m benchmarks.fig_elastic
+"""
+
+import numpy as np
+
+from benchmarks.common import timed
+from repro.core import engine, schema
+from repro.core.hwmodel import HardwareModel
+from repro.core.session import HTAPSession, SystemSpec
+from repro.core.timeline import simulate_timeline
+from repro.core.workload import split_queries, split_stream
+
+N_ROWS = 20_000
+N_COLS = 4
+N_TXN = 40_000
+N_QUERIES = 24
+N_ROUNDS = 6
+RESIZE_AFTER_ROUND = 0   # 1 island for round 0, 4 islands afterwards
+
+
+def _workload():
+    rng = np.random.default_rng(0)
+    sch = schema.make_schema("t", N_COLS, 32)
+    table = schema.gen_table(rng, sch, N_ROWS)
+    stream = schema.gen_update_stream(rng, sch, N_ROWS, N_TXN,
+                                      write_ratio=0.5)
+    queries = engine.gen_queries(rng, N_QUERIES, N_COLS)
+    return table, stream, queries
+
+
+def _drive(table, chunks, qchunks, n_shards, resize_to=None):
+    spec = SystemSpec.polynesia(backend="numpy", n_shards=n_shards,
+                                timing="timeline")
+    session = HTAPSession(spec, table)
+    for r in range(N_ROUNDS):
+        if r:
+            session.advance_round()
+        session.execute(chunks[r])
+        session.query_batch(qchunks[r])
+        if resize_to is not None and r == RESIZE_AFTER_ROUND:
+            session.resize_islands(resize_to)
+    return session, session.finish()
+
+
+def _segment_qps(session):
+    """Re-simulate the session's timeline and split analytical throughput
+    into pre-/post-resize segments: queries answered per second of ana-lane
+    busy time, grouped by whether the query node's round is past the
+    resize round."""
+    tl = simulate_timeline(session.cost, HardwareModel(session.hw))
+    seg = {"pre": [0, 0.0], "post": [0, 0.0]}   # n_queries, seconds
+    for n in tl.nodes:
+        if n.tag.kind != "ana":
+            continue
+        key = "post" if n.tag.round > RESIZE_AFTER_ROUND else "pre"
+        seg[key][0] += int(n.tag.meta.get("n", 1))
+        seg[key][1] += n.seconds
+    return {k: q / s for k, (q, s) in seg.items() if s > 0}
+
+
+def run():
+    table, stream, queries = _workload()
+    chunks = split_stream(stream, N_ROUNDS)
+    qchunks = split_queries(list(queries), N_ROUNDS)
+    (res1, us1) = timed(lambda: _drive(table, chunks, qchunks, 1)[1])
+    (res4, us4) = timed(lambda: _drive(table, chunks, qchunks, 4)[1])
+    ((session_el, res_el), us_el) = timed(_drive, table, chunks, qchunks, 1,
+                                          resize_to=4)
+    # the partition is not observable: all three runs answer identically
+    assert res4.results == res1.results, "static@4 diverged from static@1"
+    assert res_el.results == res1.results, "elastic run diverged"
+    # whole-run analytical throughput: the elastic run blends the planes
+    qps1, qps4, qps_el = (res1.ana_throughput, res4.ana_throughput,
+                          res_el.ana_throughput)
+    assert qps1 <= qps_el <= qps4, \
+        f"elastic qps {qps_el:.3e} outside [{qps1:.3e}, {qps4:.3e}]"
+    # per-segment: the post-resize rounds run at the wider machine's rate
+    seg = _segment_qps(session_el)
+    assert seg["post"] > seg["pre"], \
+        f"post-resize segment not faster: {seg}"
+    rows = [
+        ("elastic_static1", us1, f"ana_qps={qps1:.3e}"),
+        ("elastic_static4", us4, f"ana_qps={qps4:.3e}"),
+        ("elastic_1to4", us_el,
+         f"ana_qps={qps_el:.3e};pre_qps={seg['pre']:.3e};"
+         f"post_qps={seg['post']:.3e};"
+         f"resizes={len(res_el.stats['resizes'])}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

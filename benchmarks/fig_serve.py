@@ -68,9 +68,15 @@ def run(rates=DEFAULT_RATES):
             f"serve point rate={rate} is nondeterministic"
         served[rate] = res.n_ana
         txn_tps[rate] = res.txn_throughput
+        # per-query latency percentiles from the scheduled timeline
+        # (snapshot-pin -> query-group-finish, see timeline.query_latencies)
+        lat = res.stats.get("latency", {})
+        lat_str = (f"p50={lat['p50']:.3e};p99={lat['p99']:.3e}"
+                   if lat else "p50=n/a;p99=n/a")
         rows.append((f"serve_rate{rate:g}", us,
                      f"queries={res.n_ana};txn={res.txn_throughput:.3e};"
-                     f"ana={res.ana_throughput:.3e};{freshness_str(res)}"))
+                     f"ana={res.ana_throughput:.3e};{lat_str};"
+                     f"{freshness_str(res)}"))
     order = sorted(served)
     # offered load up -> queries served up (the schedule actually scales)
     assert all(served[a] <= served[b] for a, b in zip(order, order[1:])), \

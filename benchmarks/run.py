@@ -58,6 +58,13 @@ CI_MATRIX = [
                                timing="timeline")),
     ("pallas@1+delta", dict(backend="pallas", n_shards=1,
                             timing="timeline", delta_store=True)),
+    # elastic resharding (core/elastic.py): the same rounds driven through
+    # HTAPSession with the island count resized 1 -> 4 -> 2 mid-run at
+    # round boundaries; answers must stay bit-identical to the whole
+    # matrix, and check_bench holds its launch count to the pallas@1 row
+    # (the rebalance is a host-side repartition, not extra kernel traffic)
+    ("pallas@1+resize", dict(backend="pallas", n_shards=1,
+                             timing="timeline", session_resize=(4, 2))),
 ]
 
 
@@ -73,13 +80,16 @@ def _mesh_devices_missing(label: str) -> int | None:
 
 
 def _run_polynesia(table, stream, queries, n_rounds, **overrides):
-    """One CI combo: the batch wrapper, or (session_chunked=True) an
-    HTAPSession driven incrementally with sub-round txn chunks."""
+    """One CI combo: the batch wrapper, or an HTAPSession driven
+    incrementally — with sub-round txn chunks (session_chunked=True)
+    and/or a mid-run island-resize schedule (session_resize=(n1, n2, ...)
+    resizes to n_i after round i's query batch)."""
     from repro.core import htap
     from repro.core.workload import split_queries, split_stream
 
     session_chunked = overrides.pop("session_chunked", False)
-    if not session_chunked:
+    session_resize = overrides.pop("session_resize", ())
+    if not session_chunked and not session_resize:
         return htap.run("Polynesia", table, stream, queries,
                         n_rounds=n_rounds, **overrides)
     session = htap.HTAPSession(htap.SystemSpec.polynesia(**overrides), table)
@@ -88,9 +98,13 @@ def _run_polynesia(table, stream, queries, n_rounds, **overrides):
                 split_queries(queries, n_rounds))):
         if r:
             session.advance_round()
-        for sub in split_stream(txn_chunk, 2):   # mid-round chunk boundary
+        subs = (split_stream(txn_chunk, 2)   # mid-round chunk boundary
+                if session_chunked else [txn_chunk])
+        for sub in subs:
             session.execute(sub)
         session.query_batch(q_chunk)
+        if r < len(session_resize):
+            session.resize_islands(session_resize[r])
     return session.finish()
 
 
@@ -197,7 +211,7 @@ def main() -> None:
                             fig3_breakdown, fig6_end_to_end,
                             fig7_update_propagation, fig8_consistency,
                             fig9_placement_sched, fig10_scaling_energy,
-                            fig_serve, lm_step)
+                            fig_elastic, fig_serve, lm_step)
 
     modules = [
         ("fig1", fig1_consistency_overhead),
@@ -209,6 +223,7 @@ def main() -> None:
         ("fig9", fig9_placement_sched),
         ("fig10", fig10_scaling_energy),
         ("serve", fig_serve),
+        ("elastic", fig_elastic),
         ("lm_step", lm_step),
     ]
     args = sys.argv[1:]

@@ -1,2 +1,6 @@
-from repro.checkpoint.manager import (CheckpointManager, save_checkpoint,
-                                      restore_checkpoint, latest_step)
+from repro.checkpoint.manager import (CheckpointManager, latest_step,
+                                      load_arrays, restore_checkpoint,
+                                      save_checkpoint)
+
+__all__ = ["CheckpointManager", "latest_step", "load_arrays",
+           "restore_checkpoint", "save_checkpoint"]

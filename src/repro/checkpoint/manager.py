@@ -88,6 +88,26 @@ def latest_step(ckpt_dir: str) -> int | None:
     return None
 
 
+def load_arrays(ckpt_dir: str, step: int) -> dict:
+    """Load a committed step's raw arrays as ``{flat key: np.ndarray}``.
+
+    The structure-free dual of `restore_checkpoint` for callers that carry
+    their own schema (e.g. the elastic session restore,
+    `core.elastic.restore_session`): keys are the flattened tree paths,
+    ``::bf16``-suffixed bit-stored arrays come back as bfloat16.
+    """
+    data = np.load(os.path.join(ckpt_dir, f"step_{step}", "arrays.npz"))
+    out = {}
+    for key in data.files:
+        arr = data[key]
+        if key.endswith("::bf16"):
+            import ml_dtypes
+            key = key[:-len("::bf16")]
+            arr = arr.view(ml_dtypes.bfloat16)
+        out[key] = arr
+    return out
+
+
 def restore_checkpoint(ckpt_dir: str, step: int, like, shardings=None):
     """Restore into the structure of `like`; place onto `shardings` if given
     (elastic restart path: the new mesh's shardings)."""
@@ -134,6 +154,21 @@ class CheckpointManager:
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+
+    def close(self):
+        """Join the in-flight async writer; the manager is reusable after.
+
+        Call at end of training/session so the process never exits with a
+        half-written (uncommitted) step still on the writer thread.
+        """
+        self.wait()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
 
     def _gc(self):
         steps = sorted(

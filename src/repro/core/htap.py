@@ -45,7 +45,7 @@ from repro.core.hwmodel import (CostLog, HardwareModel, HardwareParams,
 from repro.core.session import (ALL_PRESETS, BASELINE_PRESETS,  # noqa: F401
                                 HTAPSession, PIM_TXN_CYCLE_FACTOR, PRESETS,
                                 SystemSpec, resolve_spec)
-from repro.core.timeline import simulate_timeline
+from repro.core.timeline import query_latencies, simulate_timeline
 from repro.core.workload import split_queries, split_stream
 
 
@@ -100,6 +100,20 @@ def _price(name: str, cost: CostLog, hw: HardwareParams, timing: str,
             "lane_finish": tl.lane_finish,
             "async": async_propagation,
         }
+        lats = query_latencies(tl)
+        if lats:
+            # per-query tail latency (snapshot-pin start -> group finish),
+            # sampled per query (fused groups weight by their size): the
+            # ROADMAP's tail-latency item, measurable only on the timeline
+            import numpy as np
+            arr = np.asarray(lats)
+            stats["latency"] = {
+                "p50": float(np.percentile(arr, 50)),
+                "p99": float(np.percentile(arr, 99)),
+                "mean": float(arr.mean()),
+                "max": float(arr.max()),
+                "n_queries": int(arr.size),
+            }
         return RunResult(name, n_txn, n_ana,
                          tl.lane_finish.get("txn", 0.0),
                          tl.lane_busy.get("ana", 0.0),

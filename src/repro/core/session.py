@@ -64,6 +64,16 @@ from repro.core.timeline import resolve_timing
 # ILP for pointer-heavy txn code) even though more threads are available.
 PIM_TXN_CYCLE_FACTOR = 1.4
 
+
+class SessionClosedError(RuntimeError):
+    """The session was closed (`finish()` or `abort()`): no more traffic.
+
+    Raised by every post-close surface — ``execute``, ``query``,
+    ``query_batch``, ``advance_round``, ``flush_updates``, a second
+    ``finish()``, ``checkpoint`` and ``resize_islands``. Subclasses
+    RuntimeError so existing guards keep working.
+    """
+
 # Delta-store compaction trigger: raw overlay entries appended to a column
 # before a background compaction folds the overlay into the base (§5.3's
 # capacity-triggered maintenance shape; the overlay stays small enough that
@@ -351,6 +361,12 @@ class HTAPSession:
             self._deltas: dict[int, ColumnDelta] = {}  # col -> live overlay
             self.delta_appends = 0
             self.compactions = 0
+            # elastic island lifecycle (core/elastic.py): resize audit
+            # trail + the crash-injection hook (REPRO_CRASH_AFTER arms it;
+            # tests/harnesses may also set crash_after_ships directly)
+            self.resizes: list[dict] = []
+            from repro.core import elastic
+            self.crash_after_ships = elastic.crash_after_from_env()
         elif kind == "si_ss":
             self.store = RowStore(table)
             self.snap = SnapshotStore(table)
@@ -374,8 +390,9 @@ class HTAPSession:
     # -- lifecycle ---------------------------------------------------------
     def _check_open(self) -> None:
         if self._finished:
-            raise RuntimeError("HTAPSession is finished; start a new "
-                               "session for more traffic")
+            raise SessionClosedError(
+                "HTAPSession is finished; start a new session for more "
+                "traffic")
 
     def advance_round(self) -> None:
         """Close the current round and open the next.
@@ -429,6 +446,8 @@ class HTAPSession:
                 stats["compactions"] = self.compactions
                 stats["delta_live_entries"] = sum(
                     d.n_overlay for d in self._deltas.values())
+            if self.resizes:
+                stats["resizes"] = [dict(r) for r in self.resizes]
         elif spec.kind == "si_ss":
             stats = {"snapshots": self.snap.snapshots_taken}
         elif spec.kind == "si_mvcc":
@@ -446,6 +465,51 @@ class HTAPSession:
                            self.n_txn, self.n_ana, self.results, stats=stats,
                            async_propagation=spec.async_propagation,
                            concurrent_islands=concurrent)
+
+    def abort(self) -> None:
+        """Close the session without pricing (no RunResult) — the clean-up
+        path after an injected `elastic.SessionCrash` (or any abandoned
+        session): releases the process-global mesh context and resets the
+        jit-trace ledger, exactly like `finish()`, but produces nothing.
+        Idempotent; a later `finish()` raises `SessionClosedError`."""
+        if self._finished:
+            return
+        self._finished = True
+        if self._installed_mesh:
+            from repro.distributed import (clear_island_mesh,
+                                           install_island_mesh)
+            if self._prev_mesh is not None:
+                install_island_mesh(self._prev_mesh)
+            else:
+                clear_island_mesh()
+        from repro.kernels.common import reset_kernel_trace_counts
+        reset_kernel_trace_counts()
+
+    # -- elastic lifecycle (core/elastic.py) -------------------------------
+    def resize_islands(self, n_islands: int,
+                       placement: str | None = None) -> str | None:
+        """Online resharding: repartition the analytical islands to
+        ``n_islands`` at this round boundary (MI family only). Answer-
+        neutral; the rebalance is priced as a ``reshard`` node on the
+        fixed-function lane. See `core.elastic.resize_islands`."""
+        from repro.core import elastic
+        return elastic.resize_islands(self, n_islands, placement=placement)
+
+    def checkpoint(self, ckpt_dir: str, step: int | None = None) -> int:
+        """Serialize the full session state into ``ckpt_dir`` through the
+        atomic-commit checkpoint layout. See
+        `core.elastic.checkpoint_session`."""
+        from repro.core import elastic
+        return elastic.checkpoint_session(self, ckpt_dir, step=step)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str, spec: SystemSpec | None = None,
+                step: int | None = None) -> "HTAPSession":
+        """Rebuild a session from the last committed checkpoint, optionally
+        onto a *different* spec (backend / shard count / placement — the
+        elastic-restart path). See `core.elastic.restore_session`."""
+        from repro.core import elastic
+        return elastic.restore_session(ckpt_dir, spec=spec, step=step)
 
     # -- transactional surface ---------------------------------------------
     def execute(self, chunk: UpdateStream) -> None:
@@ -519,6 +583,12 @@ class HTAPSession:
         backlog at once.
         """
         spec = self.spec
+        # fault injection (REPRO_CRASH_AFTER / crash_after_ships): the
+        # "process" dies before this batch leaves — executed-but-unshipped
+        # updates survive only in the row store + logs, which is exactly
+        # the state a checkpoint captures and crash recovery replays
+        from repro.core import elastic
+        elastic.maybe_crash(self)
         logs = self.store.drain_logs(
             limit=FINAL_LOG_CAPACITY if spec.propagation_on_pim else None)
         ship_node = f"r{self.round}:ship{self._ship_i}"
@@ -527,7 +597,7 @@ class HTAPSession:
         # it; async releases it at its last update's commit time
         sync_deps = (self._prev_txn,) if self._prev_txn else ()
         with self.cost.tagged(ship_node, "ship", round=self.round,
-                              sync_deps=sync_deps):
+                              sync_deps=sync_deps, islands=self.islands):
             # the batch's commit-id span and size are annotated on the tag
             # even when the Ideal baseline suppresses pricing — freshness
             # and async release times are metadata, not cost
@@ -571,7 +641,7 @@ class HTAPSession:
         spec = self.spec
         old = self.replica.columns[col_id]
         with self.cost.tagged(node, kind, round=self.round, deps=deps,
-                              col=col_id):
+                              col=col_id, islands=self.islands):
             mesh = getattr(self.be, "placement", "stacked") == "mesh"
             if spec.optimized_application and (self.islands > 1 or mesh):
                 # each island applies its own row range; the round
@@ -624,7 +694,8 @@ class HTAPSession:
             self._deltas[col_id] = empty_delta(self.replica.columns[col_id])
         else:
             with self.cost.tagged(apply_node, "apply", round=self.round,
-                                  deps=(ship_node,), col=col_id):
+                                  deps=(ship_node,), col=col_id,
+                                  islands=self.islands):
                 delta = apply_updates_delta(
                     old, delta, entries, app_cost,
                     on_pim=self.spec.propagation_on_pim, backend=self.be)
@@ -725,12 +796,17 @@ class HTAPSession:
             snap_node = f"r{self.round}:snap{g}"
             snap_deps = tuple(dict.fromkeys(
                 self._vis_node[c] for c in cols if c in self._vis_node))
+            # islands= prices the node at the CURRENT island count on the
+            # timeline (resize-aware: core/timeline.py builds a per-count
+            # model when it differs from the final hw); n= is the group's
+            # query count, feeding the per-query latency percentiles
             with self.cost.tagged(snap_node, "snapshot", round=self.round,
-                                  deps=snap_deps):
+                                  deps=snap_deps, islands=self.islands):
                 handles, view = self.cons.pin_scan_group(
                     [q.columns for q in group])
             with self.cost.tagged(f"r{self.round}:ana{g}", "ana",
-                                  round=self.round, deps=(snap_node,)):
+                                  round=self.round, deps=(snap_node,),
+                                  islands=self.islands, n=len(group)):
                 # delta plane: scans merge the pinned base with each
                 # column's live overlay (appends never dirty the snapshot
                 # chain, so the pinned base IS the overlay's base)

@@ -123,6 +123,30 @@ def _lane_of(tag: TimelineTag, events) -> str:
     return "accel" if (not islands or "ana" in islands) else "txn"
 
 
+def _node_model(model: HardwareModel, tag: TimelineTag,
+                cache: dict) -> HardwareModel:
+    """The hardware model a node is priced under.
+
+    Elastic sessions (core/elastic.py) change their analytical island
+    count mid-run; every MI-family node carries its emission-time count in
+    ``meta["islands"]``, and a node emitted under a different count than
+    the run's final ``hw.n_ana_islands`` is priced with a model scaled to
+    *its* count — so a round executed on 4 islands keeps its 4-island
+    speed even when the session later shrinks to 2. Nodes without the
+    annotation (and every non-resized session, where the counts agree)
+    price under the base model unchanged.
+    """
+    k = tag.meta.get("islands")
+    if not k or int(k) == model.p.n_ana_islands:
+        return model
+    k = int(k)
+    m = cache.get(k)
+    if m is None:
+        m = HardwareModel(dataclasses.replace(model.p, n_ana_islands=k))
+        cache[k] = m
+    return m
+
+
 class _CommitClock:
     """Piecewise-linear commit-id -> time map over scheduled txn nodes.
 
@@ -194,11 +218,14 @@ def simulate_timeline(log: CostLog, model: HardwareModel,
     lane_free: dict[str, float] = defaultdict(float)
     lane_busy: dict[str, float] = defaultdict(float)
     clock = _CommitClock()
+    models: dict[int, HardwareModel] = {}  # island count -> scaled model
 
     for tag in tags:
         events = by_node.get(tag.node, [])
         lane = _lane_of(tag, events)
-        seconds = model.node_seconds(events, shares) if events else 0.0
+        seconds = (_node_model(model, tag, models).node_seconds(events,
+                                                               shares)
+                   if events else 0.0)
         # zero-cost nodes (shared snapshots, zero_cost_propagation stages)
         # exist only to chain dependencies: they consume no lane time, so
         # they neither wait for the lane nor hold it
@@ -263,3 +290,28 @@ def _freshness(nodes, scheduled, clock: _CommitClock) -> dict | None:
     if not n_batches:
         return None
     return {"mean": lag_sum / weight, "max": lag_max, "n_batches": n_batches}
+
+
+def query_latencies(result: TimelineResult) -> list[float]:
+    """Per-query latency samples from a scheduled timeline.
+
+    A query's latency runs from the moment its snapshot pin *could* start
+    (the snapshot node's scheduled start — data visible, waiting only on
+    the ana lane and the copy units) to its query group's finish. Fused
+    groups answer ``meta["n"]`` queries at once (the MI session annotates
+    group sizes); each contributes one sample at the group's latency, so
+    percentiles weight queries, not groups. Kinds without a snapshot stage
+    (SI-MVCC, Ana-Only) measure from the query node's own start.
+    """
+    scheduled = {n.tag.node: n for n in result.nodes}
+    lats: list[float] = []
+    for n in result.nodes:
+        if n.tag.kind != "ana":
+            continue
+        start = n.start
+        for d in n.tag.deps:
+            dep = scheduled.get(d)
+            if dep is not None and dep.tag.kind == "snapshot":
+                start = min(start, dep.start)
+        lats.extend([n.finish - start] * int(n.tag.meta.get("n", 1)))
+    return lats

@@ -48,6 +48,54 @@ def test_uncommitted_checkpoint_is_ignored(tmp_path):
     assert latest_step(str(tmp_path)) == 1
 
 
+def test_crash_during_save_keeps_older_committed_step(tmp_path):
+    """A crash mid-save of step 5 can leave a *complete-looking* step dir
+    behind with LATEST still pointing at the older commit (the LATEST
+    rename is the commit point, not the step dir). Restore must take the
+    committed step 3, and a re-save of step 5 must recover cleanly."""
+    save_checkpoint(str(tmp_path), 3, {"x": jnp.arange(4)})
+    # stale step_5: fully written dir, but the crash hit before the
+    # LATEST replace — so it was never committed
+    save_checkpoint(str(tmp_path), 5, {"x": jnp.arange(4) + 99})
+    with open(tmp_path / "LATEST", "w") as f:
+        f.write("3")
+    assert latest_step(str(tmp_path)) == 3
+    out = restore_checkpoint(str(tmp_path), 3,
+                             jax.eval_shape(lambda: {"x": jnp.arange(4)}))
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(4))
+    # the writer recovers: re-saving step 5 over the stale dir commits
+    save_checkpoint(str(tmp_path), 5, {"x": jnp.arange(4) + 7})
+    assert latest_step(str(tmp_path)) == 5
+
+
+def test_load_arrays_bf16_roundtrip(tmp_path):
+    """`load_arrays` (the structure-free restore) recovers bf16 leaves
+    bit-exactly through the ::bf16 uint16 bit-store, and keeps the
+    flattened slash-joined keys."""
+    from repro.checkpoint import load_arrays
+    vals = jnp.asarray([1.5, -2.25, 3.0, 0.0078125], jnp.bfloat16)
+    save_checkpoint(str(tmp_path), 2, {"a": {"b": vals},
+                                       "n": np.arange(3)})
+    out = load_arrays(str(tmp_path), 2)
+    assert set(out) == {"a/b", "n"}
+    assert out["a/b"].dtype == jnp.bfloat16
+    np.testing.assert_array_equal(out["a/b"].view(np.uint16),
+                                  np.asarray(vals).view(np.uint16))
+    np.testing.assert_array_equal(out["n"], np.arange(3))
+
+
+def test_manager_close_joins_async_writer(tmp_path):
+    """close() (and the context manager) join the in-flight async writer,
+    so the last save is committed by the time the manager is released."""
+    with CheckpointManager(str(tmp_path), save_every=1,
+                           async_save=True) as mgr:
+        mgr.maybe_save(1, {"x": jnp.ones((256, 256))})
+        mgr.maybe_save(2, {"x": jnp.zeros((256, 256))})
+    assert mgr._pending is None
+    assert latest_step(str(tmp_path)) == 2
+    mgr.close()  # idempotent, reusable after
+
+
 def _run_steps(ckpt_dir, n_steps, resume, save_every=2):
     """Tiny deterministic train loop with checkpoint/restart."""
     cfg = get_smoke_config("qwen2.5-14b")

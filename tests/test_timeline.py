@@ -342,3 +342,45 @@ def test_commit_clock_monotone_property():
         assert all(t >= 0.0 for t in times)
 
     prop()
+
+
+# ---------------------------------------------------------------------------
+# per-query latency percentiles (timeline event start/finish)
+# ---------------------------------------------------------------------------
+
+def test_query_latency_stats_reported(small_workload):
+    """Timeline runs report per-query latency percentiles derived from the
+    scheduled snapshot-pin -> query-group-finish spans: one sample per
+    query (fused groups weight by their meta["n"] group size), p50 <= p99
+    <= max, and everything nonnegative."""
+    table, stream, queries = small_workload
+    r = _run("Polynesia", table, stream, queries, timing="timeline",
+             async_propagation=True)
+    lat = r.stats["latency"]
+    assert lat["n_queries"] == len(queries)
+    assert 0.0 <= lat["p50"] <= lat["p99"] <= lat["max"]
+    assert 0.0 <= lat["mean"] <= lat["max"]
+    # phase-bucket pricing has no schedule, hence no latency distribution
+    p = _run("Polynesia", table, stream, queries, timing="phase")
+    assert "latency" not in p.stats
+
+
+def test_query_latencies_weight_fused_groups():
+    """query_latencies expands a fused ana node into meta["n"] samples and
+    measures from the snapshot dependency's *start* (pin time), not the
+    group's own scheduled start."""
+    from repro.core.timeline import query_latencies
+    log = CostLog()
+    with log.tagged("r0:txn", "txn", round=0):
+        log.add(phase="txn", island="txn", resource="cpu", cycles=1e6)
+    with log.tagged("r0:snap0", "snapshot", round=0, deps=("r0:txn",)):
+        log.add(phase="snapshot", island="ana", resource="copy",
+                bytes_local=1e6)
+    with log.tagged("r0:ana0", "ana", round=0, deps=("r0:snap0",), n=3):
+        log.add(phase="ana", island="ana", resource="pim", cycles=1e6)
+    tl = simulate_timeline(log, HardwareModel(HMC_PARAMS))
+    lats = query_latencies(tl)
+    assert len(lats) == 3 and len(set(lats)) == 1
+    sched = {n.tag.node: n for n in tl.nodes}
+    expected = sched["r0:ana0"].finish - sched["r0:snap0"].start
+    assert lats[0] == pytest.approx(expected)

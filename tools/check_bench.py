@@ -136,6 +136,7 @@ def compare(current: dict, baseline: dict, tolerance: float) -> list[str]:
         print(f"  {combo:12s} (new combo, not in baseline — not gated)")
     failures += _sharded_plane_gates(cur, base)
     failures += _delta_plane_gates(cur)
+    failures += _elastic_gates(cur)
     return failures
 
 
@@ -179,6 +180,34 @@ def _delta_plane_gates(cur: dict) -> list[str]:
                 f"delta-plane {metric}: pallas@1+delta = {d:.6e} vs "
                 f"pallas@1+timeline = {e:.6e} — the delta-store update "
                 f"plane regressed past the {DELTA_PLANE_BUDGET:.0%} budget")
+    return failures
+
+
+def _elastic_gates(cur: dict) -> list[str]:
+    """Elastic resharding's machine-independent gate, same run.
+
+    `pallas@1+resize` drives the very same rounds as `pallas@1+timeline`
+    through an HTAPSession resized 1 -> 4 -> 2 at round boundaries.
+    Answers are bit-identical across the whole matrix (ci_bench enforces
+    that before writing the payload); here we hold the kernel-dispatch
+    count to the static pallas@1 row — the rebalance is a host-side
+    repartition of the replica plus view invalidation, and the scan/apply
+    planes stay one batched launch per group however the island count
+    moves mid-run. More launches means a resize knocked the session off
+    the vmapped fast path."""
+    failures = []
+    l1 = cur.get("pallas@1+timeline", {}).get("kernel_launches")
+    lr = cur.get("pallas@1+resize", {}).get("kernel_launches")
+    if l1 is None or lr is None:
+        return failures
+    status = "FAIL" if lr > l1 else "ok"
+    print(f"  kernel_launches pallas@1+resize={lr} <= "
+          f"pallas@1+timeline={l1} {status}")
+    if lr > l1:
+        failures.append(
+            f"kernel_launches: pallas@1+resize dispatched {lr} kernels > "
+            f"pallas@1+timeline's {l1} — mid-run resharding fell off the "
+            "batched launch path")
     return failures
 
 
